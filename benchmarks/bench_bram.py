@@ -1,0 +1,66 @@
+"""Paper Sec. V-C / Figs. 11, 12, 14 — BRAM allocation model + tensor-core
+grouping, plus the TPU (8,128)-tile packing analogue.
+
+Fig. 12 claim: grouping K=(d-1)L cores lifts BRAM utilization 3.9x-8.4x.
+Fig. 14: grouped allocation tracks the ideal (theoretical-limit) usage."""
+from __future__ import annotations
+
+import math
+
+from repro.core.cost_model import (
+    BRAM_BITS,
+    bram_blocks,
+    bram_efficiency,
+    tpu_packing_efficiency,
+)
+
+# ATIS accelerator geometry: L encoders x 6 TT linears x 2d cores each.
+D_TENSOR = 3
+CORE_DEPTH = 8 * 12          # (r, n, r) core streamed along rank: n*r rows
+RANK = 12
+
+
+def _n_cores(layers: int) -> int:
+    return layers * 6 * 2 * D_TENSOR
+
+
+def rows():
+    out = []
+    # --- Fig. 12: utilization efficiency vs model size, all strategies ----
+    for layers in (2, 4, 6):
+        n = _n_cores(layers)
+        group = (D_TENSOR - 1) * layers
+        for strat in ("partition", "reshape"):
+            base = bram_efficiency(n, CORE_DEPTH, RANK, strategy=strat, group=1)
+            grp = bram_efficiency(n, CORE_DEPTH, RANK, strategy=strat,
+                                  group=group)
+            out.append((f"fig12/{layers}enc/{strat}/eta_default", base, ""))
+            out.append((f"fig12/{layers}enc/{strat}/eta_grouped", grp, ""))
+            out.append((f"fig12/{layers}enc/{strat}/gain_x", grp / base,
+                        "paper: 3.9x-8.4x"))
+
+    # --- Fig. 14: BRAM blocks vs rank, grouped vs default vs ideal --------
+    for rank in (4, 12, 24, 48):
+        n = _n_cores(6)
+        depth = 8 * rank
+        blocks_default = bram_blocks(n, depth, rank, strategy="reshape", group=1)
+        blocks_grouped = bram_blocks(n, depth, rank, strategy="reshape",
+                                     group=(D_TENSOR - 1) * 6)
+        ideal = math.ceil(n * depth * rank * 32 / BRAM_BITS)
+        out.append((f"fig14/rank{rank}/blocks_default", blocks_default, ""))
+        out.append((f"fig14/rank{rank}/blocks_grouped", blocks_grouped,
+                    f"ideal: {ideal}"))
+        out.append((f"fig14/rank{rank}/grouped_over_ideal",
+                    blocks_grouped / ideal, "1.0 = theoretical limit"))
+
+    # --- TPU analogue: (8,128) tile padding vs flat-packed core stacks ----
+    core_shapes = [(1, 12, 12), (12, 8, 12), (12, 8, 12), (12, 8, 12),
+                   (12, 8, 12), (12, 12, 1)]
+    for layers in (2, 6, 24):
+        eta_i, eta_p = tpu_packing_efficiency(core_shapes, n_layers=layers)
+        out.append((f"tpu_packing/{layers}layers/eta_individual", eta_i, ""))
+        out.append((f"tpu_packing/{layers}layers/eta_packed", eta_p,
+                    "flat-packed stacks"))
+        out.append((f"tpu_packing/{layers}layers/gain_x", eta_p / eta_i,
+                    "TPU edition of Fig. 12"))
+    return out

@@ -1,0 +1,67 @@
+"""Paper Table I + Fig. 6 + Fig. 7 — analytic FLOPs/memory of MM / TTM / TT /
+BTT contraction flows, exactly as the paper's example is configured
+(d_hid 768, d=3, n=(12,8,8), m=(8,8,12), rank 12, seq 32)."""
+from __future__ import annotations
+
+from repro.core import TTSpec, btt_contraction_cost, rl_contraction_cost
+from repro.core.cost_model import (
+    mem_btt,
+    mem_tt_rl,
+    mul_btt,
+    mul_dense,
+    mul_tt_rl,
+    ttm_forward_cost,
+)
+from repro.core.tt import TTMSpec
+
+PAPER = TTSpec(out_factors=(8, 8, 12), in_factors=(12, 8, 8), rank=12,
+               clamp_ranks=False)
+PAPER_TTM = TTMSpec(vocab_factors=(12, 8, 8), hidden_factors=(8, 8, 12), rank=12)
+
+
+def rows():
+    out = []
+    K = 32
+    dense_mul = mul_dense(768, 768, K)
+    dense_mem = 768 * 768 + K * 768  # weights + output activation
+    tt_params = sum(r1 * n * r2 for (r1, n, r2) in
+                    ((PAPER.ranks[i], (8, 8, 12, 12, 8, 8)[i],
+                      PAPER.ranks[i + 1]) for i in range(6)))
+
+    # --- Fig. 6: the paper example -------------------------------------
+    btt_m, rl_m = mul_btt(PAPER, K), mul_tt_rl(PAPER, K)
+    btt_mem, rl_mem = mem_btt(PAPER, K), mem_tt_rl(PAPER, K)
+    out.append(("fig6/mm_over_btt_compute", dense_mul / btt_m, "paper: 22.51x"))
+    out.append(("fig6/mm_over_btt_memory",
+                dense_mem / (tt_params + btt_mem), "paper: 22.67x"))
+    out.append(("fig6/rl_over_btt_compute", rl_m / btt_m, "paper: 1.49x"))
+    out.append(("fig6/rl_over_btt_memory", rl_mem / btt_mem, "paper: 2.31x"))
+
+    # closed forms == step-by-step calculator (validates the transcription)
+    out.append(("eq18_matches_calculator",
+                float(mul_tt_rl(PAPER, K) == rl_contraction_cost(PAPER, K).muls),
+                "1.0 = exact"))
+    out.append(("eq20_matches_calculator",
+                float(mul_btt(PAPER, K) == btt_contraction_cost(PAPER, K).muls),
+                "1.0 = exact"))
+
+    # --- Fig. 7 top: sweep sequence length at rank 12 -------------------
+    for seq in (8, 32, 128, 512):
+        d = mul_dense(768, 768, seq)
+        out.append((f"fig7/seq{seq}/flops_reduction_btt",
+                    d / mul_btt(PAPER, seq), "vs MM"))
+        out.append((f"fig7/seq{seq}/flops_reduction_rl",
+                    d / mul_tt_rl(PAPER, seq), "vs MM"))
+        ttm_mul, _ = ttm_forward_cost(PAPER_TTM, seq)
+        out.append((f"fig7/seq{seq}/flops_reduction_ttm",
+                    d / max(ttm_mul, 1), "vs MM"))
+
+    # --- Fig. 7 bottom: sweep rank at seq 32 -----------------------------
+    for rank in (1, 4, 12, 24, 48):
+        spec = TTSpec((8, 8, 12), (12, 8, 8), rank, clamp_ranks=False)
+        d = mul_dense(768, 768, K)
+        out.append((f"fig7/rank{rank}/flops_reduction_btt",
+                    d / mul_btt(spec, K), "vs MM"))
+        out.append((f"fig7/rank{rank}/mem_reduction_btt",
+                    dense_mem / max(mem_btt(spec, K), 1), "vs MM"))
+    return out

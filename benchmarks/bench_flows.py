@@ -1,0 +1,67 @@
+"""Table V latency/energy proxy — wall-clock of the contraction flows.
+
+The paper's energy claim reduces to executed FLOPs + moved bytes.  On this
+CPU container we CAN measure that the BTT flow's analytic FLOP reduction
+translates into real wall-time reduction through XLA (same numerics, same
+result): dense MM vs right-to-left TT vs BTT vs fused-BTT, forward and
+fwd+bwd, at the paper's layer size and at a scaled-up layer."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    TTSpec,
+    tt_forward_btt,
+    tt_forward_rl,
+    tt_init,
+    tt_reconstruct,
+)
+from repro.core.tt_linear import _btt_fused
+
+
+def _time(fn, *args, iters=20):
+    jax.block_until_ready(fn(*args))  # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _suite(spec: TTSpec, K: int, tag: str):
+    cores = tuple(tt_init(jax.random.PRNGKey(0), spec))
+    w = tt_reconstruct(cores, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (K, spec.in_dim))
+
+    dense = jax.jit(lambda xx: xx @ w.T)
+    rl = jax.jit(lambda xx: tt_forward_rl(cores, xx, spec))
+    btt = jax.jit(lambda xx: tt_forward_btt(cores, xx, spec))
+
+    g_dense = jax.jit(jax.grad(lambda ww, xx: (xx @ ww.T).sum(), argnums=(0, 1)))
+    g_btt = jax.jit(jax.grad(
+        lambda cs, xx: tt_forward_btt(list(cs), xx, spec).sum(), argnums=(0, 1)))
+    g_fused = jax.jit(jax.grad(
+        lambda cs, xx: _btt_fused(cs, xx, spec).sum(), argnums=(0, 1)))
+
+    rows = [
+        (f"flows/{tag}/fwd_dense_us", _time(dense, x), ""),
+        (f"flows/{tag}/fwd_rl_us", _time(rl, x), ""),
+        (f"flows/{tag}/fwd_btt_us", _time(btt, x), "paper's contraction"),
+        (f"flows/{tag}/bwd_dense_us", _time(lambda xx: g_dense(w, xx), x), ""),
+        (f"flows/{tag}/bwd_btt_us", _time(lambda xx: g_btt(cores, xx), x), ""),
+        (f"flows/{tag}/bwd_btt_fused_us", _time(lambda xx: g_fused(cores, xx), x),
+         "fused backward (Sec. V-B2)"),
+    ]
+    d, b = rows[0][1], rows[2][1]
+    rows.append((f"flows/{tag}/fwd_speedup_btt_vs_dense", d / b,
+                 "FLOP model predicts >1 when K >> r"))
+    return rows
+
+
+def rows():
+    paper = TTSpec((8, 8, 12), (12, 8, 8), 12, clamp_ranks=False)
+    big = TTSpec((16, 16, 16), (16, 16, 16), 32)
+    return _suite(paper, 32, "paper_768") + _suite(big, 1024, "4096x4096")

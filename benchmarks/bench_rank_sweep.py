@@ -1,0 +1,52 @@
+"""Beyond-paper ablation: TT rank as the compression-vs-cost dial, at
+assigned-architecture scale (analytic — runs in milliseconds).
+
+The paper fixes rank 12 for its ATIS model; production deployments must
+choose rank per layer family.  For each assigned dense arch this sweep
+reports, per rank: parameter compression of the full model, BTT training
+FLOPs relative to dense, and the HBM-traffic crossover token count for the
+TTM embedding (above which the reconstruct strategy wins — see
+core/ttm_embedding.py)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.cost_model import mul_btt, mul_dense
+from repro.core.tt import tt_params_count
+from repro.core.tt_linear import make_tt_spec
+from repro.core.ttm_embedding import make_ttm_spec, ttm_strategy_crossover
+
+ARCHS = ("qwen3-8b", "llama3-8b", "musicgen-medium")
+RANKS = (16, 32, 64, 128)
+
+
+def _arch_layer_dims(cfg):
+    q, kv, d = cfg.attn_dims
+    dims = [(q, d), (kv, d), (kv, d), (d, q)]          # attention
+    if cfg.d_ff:
+        n_mlp = 3 if cfg.mlp_gated else 2
+        dims += [(cfg.d_ff, d)] * (n_mlp - 1) + [(d, cfg.d_ff)]
+    return dims
+
+
+def rows():
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        dims = _arch_layer_dims(cfg)
+        dense_params = sum(m * n for m, n in dims) * cfg.num_layers
+        dense_mul = sum(mul_dense(m, n, 4096) for m, n in dims)
+        for rank in RANKS:
+            tt_params = sum(
+                tt_params_count(make_tt_spec(m, n, 3, rank)) for m, n in dims
+            ) * cfg.num_layers
+            tt_mul = sum(
+                mul_btt(make_tt_spec(m, n, 3, rank), 4096) for m, n in dims)
+            espec = make_ttm_spec(cfg.vocab_padded, cfg.d_model, 3, rank)
+            out.append((f"rank_sweep/{arch}/r{rank}/param_compression_x",
+                        dense_params / tt_params, "transformer body"))
+            out.append((f"rank_sweep/{arch}/r{rank}/flops_reduction_x",
+                        dense_mul / tt_mul, "per layer fwd, K=4096"))
+            out.append((f"rank_sweep/{arch}/r{rank}/ttm_crossover_tokens",
+                        float(ttm_strategy_crossover(espec)),
+                        "gather->reconstruct switch point"))
+    return out

@@ -1,0 +1,152 @@
+"""§Roofline report generator: dry-run artifacts -> per-cell roofline terms.
+
+For every (arch x shape x mesh x tt-mode) JSON+HLO pair under
+``artifacts/dryrun*/``, computes the three roofline terms on TPU v5e
+hardware constants and emits a markdown table + machine-readable JSON:
+
+  compute term    = HLO_FLOPs_per_device / 197e12        [s]
+  memory term     = HLO_bytes_per_device / 819e9         [s]
+  collective term = wire_bytes_per_device / 50e9         [s]
+
+FLOPs/bytes come from the trip-count-aware HLO walker (launch.hlo_flops) —
+``cost_analysis()`` counts while bodies once and is reported alongside for
+comparison.  MODEL_FLOPS uses the standard 6·N·D (dense) / 6·N_active·D
+(MoE) training estimate, or 2·N·D for serving, so the useful-work ratio
+exposes remat/redundancy overhead.
+
+Run: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_analysis import V5E
+from repro.launch.hlo_flops import analyze_hlo
+from repro.models.transformer import init_params, num_params
+
+HW = V5E()
+
+
+_PARAM_CACHE: dict = {}
+
+
+def _model_params(arch: str):
+    """(total_params, active_params) of the DENSE model — useful work is
+    technique-independent (the TT model computes the same token function),
+    so TT cells are scored against the same 6·N_dense·D yardstick; their
+    sub-1.0 'useful' ratio then directly reads as the compute *saving*."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+    cfg = get_config(arch)
+    tree = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    total = num_params(tree)
+    active = total
+    if cfg.moe is not None:
+        # subtract non-routed expert params: active = shared + top_k experts
+        m = cfg.moe
+        n_moe_layers = cfg.num_layers // max(m.every, 1)
+        per_expert = 3 * m.d_expert * cfg.d_model
+        active = total - n_moe_layers * (m.padded_experts - m.top_k) * per_expert
+    _PARAM_CACHE[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape_name: str, tt: bool, devices: int) -> float:
+    """Per-device useful-work estimate (dense-equivalent; see _model_params)."""
+    del tt
+    shape = SHAPES[shape_name]
+    total, active = _model_params(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens / devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens / devices
+    tokens = shape.global_batch  # decode: one token per request
+    return 2.0 * active * tokens / devices
+
+
+def load_cells(art_dir: str) -> list[dict]:
+    cells = []
+    for fn in sorted(os.listdir(art_dir)):
+        if not fn.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(art_dir, fn)))
+        if rec.get("status") != "ok":
+            cells.append(rec)
+            continue
+        hlo_path = os.path.join(art_dir, fn[:-5] + ".hlo.txt")
+        if os.path.exists(hlo_path):
+            stats = analyze_hlo(open(hlo_path).read())
+            rec["walker"] = stats.as_dict()
+        cells.append(rec)
+    return cells
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "walker" not in rec:
+        return None
+    w = rec["walker"]
+    devices = rec["devices"]
+    t_comp = w["flops"] / HW.peak_flops
+    t_mem = w["bytes"] / HW.hbm_bw
+    t_coll = w["collective_wire_bytes"] / HW.ici_bw
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"], rec["tt_mode"] == "tt",
+                     devices)
+    step_s = max(terms.values())
+    useful = mf / max(w["flops"], 1.0)
+    # roofline fraction: useful-work time at peak / bound step time
+    frac = (mf / HW.peak_flops) / max(step_s, 1e-30)
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh", "tt_mode")},
+        "flops": w["flops"], "bytes": w["bytes"],
+        "wire_bytes": w["collective_wire_bytes"],
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": mf, "useful_ratio": useful,
+        "roofline_frac": frac,
+        "xla_flops_body_once": rec.get("cost_analysis", {}).get("flops"),
+        "temp_bytes_dev": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes"),
+    }
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mode | mesh | compute_s | memory_s | collective_s "
+           "| bound | useful | roofline |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['tt_mode']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.1%} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--json-out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    rows = [r for r in (roofline_row(c) for c in cells) if r is not None]
+    rows.sort(key=lambda r: (r["mesh"], r["tt_mode"], r["arch"], r["shape"]))
+    print(markdown_table(rows))
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    print(f"\n{len(rows)} cells analyzed, {len(skipped)} documented skips")
+    os.makedirs(os.path.dirname(args.json_out), exist_ok=True)
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Each bench module exposes ``rows() -> list[(name, value, note)]``; this
+driver prints them as ``name,value,note`` CSV (stdout) so the harness
+command ``python -m benchmarks.run`` produces a single auditable artifact.
+
+  bench_cost_model   Table I, Fig. 6, Fig. 7   (FLOPs/memory closed forms)
+  bench_model_size   Table III                 (model MB + compression x)
+  bench_bram         Figs. 11, 12, 14          (BRAM + TPU packing)
+  bench_training     Fig. 13, Table III acc    (tensor vs matrix parity)
+  bench_memory       Fig. 15, Table V memory   (compiled-step memory)
+  bench_flows        Table V latency proxy     (flow wall-times on CPU)
+  bench_rank_sweep   (beyond paper)            (rank ablation at arch scale)
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_cost_model",
+    "bench_model_size",
+    "bench_bram",
+    "bench_training",
+    "bench_memory",
+    "bench_flows",
+    "bench_rank_sweep",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or None
+    print("name,value,note")
+    failures = 0
+    for mod_name in MODULES:
+        if only and mod_name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["rows"])
+            for name, value, note in mod.rows():
+                if isinstance(value, float):
+                    print(f"{name},{value:.6g},{note}")
+                else:
+                    print(f"{name},{value},{note}")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{mod_name},ERROR,see stderr")
+        print(f"# {mod_name} finished in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

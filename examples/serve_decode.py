@@ -1,0 +1,39 @@
+"""Batched serving example: prefill + KV/state-cache decode across model
+families (attention KV cache, Mamba-2 SSD state, RG-LRU window+state).
+
+Shows the serving path the ``decode_32k`` / ``long_500k`` dry-run cells
+lower, at CPU-friendly scale: reduced configs, batch of concurrent
+requests, greedy + temperature sampling, tokens/s report.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+      PYTHONPATH=src python examples/serve_decode.py --arch mamba2-130m --tt
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="default: demo all three cache families")
+    ap.add_argument("--tt", action="store_true")
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else [
+        "llama3-8b",           # GQA KV cache
+        "mamba2-130m",         # SSD recurrent state (O(1) cache)
+        "recurrentgemma-2b",   # hybrid: RG-LRU state + local-attn ring buffer
+    ]
+    for arch in archs:
+        print(f"=== {arch} ===")
+        argv2 = ["--arch", arch, "--scale-down", "--batch", "4",
+                 "--prompt-len", "48", "--gen", str(args.gen)]
+        if args.tt:
+            argv2.append("--tt")
+        serve_main(argv2)
+
+
+if __name__ == "__main__":
+    main()

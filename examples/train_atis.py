@@ -1,0 +1,106 @@
+"""End-to-end driver: the paper's experiment — tensor-compressed transformer
+training on (synthetic) ATIS, with the full production substrate engaged:
+
+  * paper model (Table II): 2-encoder, d=768, TT rank 12, TTM rank 30
+  * SGD on TT cores (lr 4e-3, the paper's setting), batch configurable
+  * deterministic seekable data, async atomic checkpoints, resume,
+    straggler monitoring
+
+This is the `(b) end-to-end driver` deliverable: a ~9M-param-class dense
+model (36.9 MB, paper Table III) trained in its 1.2 MB tensor-compressed
+form for a few hundred steps.  Use ``--scale-down`` for a quick CPU pass.
+
+Run:  PYTHONPATH=src python examples/train_atis.py --steps 200 --scale-down
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.atis_transformer import config_n
+from repro.data import AtisGrammar, atis_batch
+from repro.models import init_params, num_params, param_bytes
+from repro.models.classifier import atis_heads_init, atis_loss, atis_metrics
+from repro.optim import sgd, warmup_cosine
+from repro.runtime import StragglerMonitor
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--encoders", type=int, default=2, choices=(2, 4, 6))
+    ap.add_argument("--matrix", action="store_true",
+                    help="uncompressed baseline (paper's MM rows)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale-down", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--eval-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = config_n(args.encoders, tt_mode="off" if args.matrix else "tt")
+    if args.scale_down:
+        cfg = cfg.scaled_down(d_model=256, n_heads=4, d_ff=256,
+                              vocab_size=1000, num_layers=args.encoders,
+                              max_seq_len=64)
+    lr = args.lr or (4e-3 if args.matrix else 4e-2)
+
+    g = AtisGrammar(seed=args.seed)
+    params = {"backbone": init_params(jax.random.PRNGKey(args.seed), cfg),
+              "heads": atis_heads_init(jax.random.PRNGKey(args.seed + 1),
+                                       cfg, 26, 120)}
+    print(f"[atis] {args.encoders}-ENC {'matrix' if args.matrix else 'tensor'}: "
+          f"{num_params(params):,} params ({param_bytes(params) / 1e6:.2f} MB)")
+
+    opt = sgd(warmup_cosine(lr, max(args.steps // 20, 1), args.steps))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: atis_loss(p, cfg, batch))(params)
+        params, state = opt.update(grads, params, state, state["step"])
+        return params, state, loss
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2) if args.ckpt_dir else None
+    start = 0
+    if mgr is not None:
+        tmpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                            (params, state))
+        got = mgr.restore_latest(tmpl)
+        if got is not None:
+            (params, state), start = got
+            params = jax.tree.map(jnp.asarray, params)
+            state = jax.tree.map(jnp.asarray, state)
+            print(f"[atis] resumed at step {start}")
+
+    mon = StragglerMonitor()
+    t_start = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v)
+                 for k, v in atis_batch(g, "train", i, args.batch).items()}
+        t0 = time.time()
+        params, state, loss = step(params, state, batch)
+        loss = float(loss)
+        mon.observe(time.time() - t0)
+        if i % args.eval_every == 0 or i == args.steps - 1:
+            test = {k: jnp.asarray(v)
+                    for k, v in atis_batch(g, "test", 0, 256).items()}
+            m = atis_metrics(params, cfg, test)
+            print(f"[atis] step {i:5d} loss {loss:.4f} "
+                  f"intent_acc {float(m['intent_acc']):.3f} "
+                  f"slot_acc {float(m['slot_acc']):.3f}")
+            if mgr is not None:
+                mgr.save_async(i + 1, (params, state))
+    if mgr is not None:
+        mgr.wait()
+    print(f"[atis] {args.steps - start} steps in {time.time() - t_start:.1f}s; "
+          f"straggler flags: {mon.total_flags}")
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-k, elastic restore."""
+from .checkpoint import (
+    CheckpointManager,
+    latest_step,
+    list_steps,
+    restore,
+    save,
+)
+
+__all__ = ["CheckpointManager", "save", "restore", "latest_step", "list_steps"]

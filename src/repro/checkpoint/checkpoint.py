@@ -1,0 +1,178 @@
+"""Atomic, async, keep-k checkpointing with elastic (cross-mesh) restore.
+
+Layout::
+
+    <dir>/
+      manifest.json            {"latest": 400, "steps": [200, 300, 400]}
+      step_00000400/
+        meta.json              paths, shapes, dtypes (human-auditable)
+        leaf_00000.npy ...     one array per pytree leaf, key-path order
+
+Guarantees:
+  * **Atomic**: a step directory appears only via ``os.replace`` of a fully
+    written+fsynced temp dir; the manifest is updated only after the rename.
+    A crash mid-save leaves the previous checkpoint untouched.
+  * **Async**: ``save(..., blocking=False)`` snapshots device arrays to host
+    (the only synchronous part) and writes in a background thread; training
+    continues.  ``wait()`` joins before the next save or at exit.
+  * **Keep-k**: older step dirs are pruned after a successful save.
+  * **Elastic restore**: leaves come back as host numpy; the caller
+    device_puts them under specs derived for the *current* mesh
+    (runtime.elastic.replan_for_mesh), so restarting on a different topology
+    is the normal path, not a special case.
+
+Restore takes a *template* pytree (from ``jax.eval_shape`` of the init
+function) — this keeps arbitrary custom pytree nodes (TT cores, dataclasses)
+out of the serialization format entirely.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "list_steps", "CheckpointManager"]
+
+_MANIFEST = "manifest.json"
+
+
+def _step_dir(root: str, step: int) -> str:
+    return os.path.join(root, f"step_{step:08d}")
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _write_manifest(root: str, steps: list[int]) -> None:
+    tmp = os.path.join(root, _MANIFEST + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump({"latest": steps[-1] if steps else None, "steps": steps}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(root, _MANIFEST))
+
+
+def list_steps(root: str) -> list[int]:
+    mf = os.path.join(root, _MANIFEST)
+    if not os.path.exists(mf):
+        return []
+    with open(mf) as f:
+        return sorted(json.load(f)["steps"])
+
+
+def latest_step(root: str) -> int | None:
+    steps = list_steps(root)
+    return steps[-1] if steps else None
+
+
+def _write_step(root: str, step: int, leaves: list[np.ndarray],
+                paths: list[str], keep: int | None) -> None:
+    os.makedirs(root, exist_ok=True)
+    final = _step_dir(root, step)
+    tmp = tempfile.mkdtemp(dir=root, prefix=".tmp_save_")
+    try:
+        meta = {
+            "step": step,
+            "leaves": [
+                {"path": p, "shape": list(a.shape), "dtype": str(a.dtype)}
+                for p, a in zip(paths, leaves)
+            ],
+        }
+        for i, a in enumerate(leaves):
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), a)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    steps = sorted(set(list_steps(root)) | {step})
+    if keep is not None and len(steps) > keep:
+        for s in steps[:-keep]:
+            shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+        steps = steps[-keep:]
+    _write_manifest(root, steps)
+
+
+def save(root: str, step: int, tree: Any, *, keep: int | None = None,
+         blocking: bool = True) -> threading.Thread | None:
+    """Checkpoint ``tree`` at ``step``.  Non-blocking returns the writer
+    thread (already started); join it (or use CheckpointManager) before
+    depending on the file."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [_path_str(p) for p, _ in flat]
+    # Snapshot to host — after this, device buffers may be donated/mutated.
+    leaves = [np.asarray(jax.device_get(x)) for _, x in flat]
+    if blocking:
+        _write_step(root, step, leaves, paths, keep)
+        return None
+    t = threading.Thread(target=_write_step,
+                         args=(root, step, leaves, paths, keep), daemon=True)
+    t.start()
+    return t
+
+
+def restore(root: str, template: Any, step: int | None = None) -> tuple[Any, int]:
+    """Load a checkpoint into the structure of ``template`` (host numpy
+    leaves).  Returns (tree, step).  Shape/dtype mismatches raise — elastic
+    restarts reshape *sharding*, never array shapes."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = _step_dir(root, step)
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    if len(flat) != len(meta["leaves"]):
+        raise ValueError(
+            f"template has {len(flat)} leaves, checkpoint {len(meta['leaves'])}")
+    leaves = []
+    for i, ((path, tmpl), rec) in enumerate(zip(flat, meta["leaves"])):
+        p = _path_str(path)
+        if p != rec["path"]:
+            raise ValueError(f"leaf {i}: template path {p} != saved {rec['path']}")
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        if list(arr.shape) != list(tmpl.shape):
+            raise ValueError(f"{p}: shape {arr.shape} != template {tmpl.shape}")
+        leaves.append(arr.astype(tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+class CheckpointManager:
+    """Owns async writes + cadence for a training loop."""
+
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        self._pending: threading.Thread | None = None
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()  # one writer in flight at a time
+        self._pending = save(self.root, step, tree, keep=self.keep,
+                             blocking=False)
+
+    def save_blocking(self, step: int, tree: Any) -> None:
+        self.wait()
+        save(self.root, step, tree, keep=self.keep, blocking=True)
+
+    def restore_latest(self, template: Any) -> tuple[Any, int] | None:
+        if latest_step(self.root) is None:
+            return None
+        return restore(self.root, template)

@@ -1,0 +1,16 @@
+"""Arch configs: one module per assigned architecture + the paper's model."""
+from .base import (
+    SHAPES,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    TTConfig,
+    get_config,
+    list_archs,
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "TTConfig", "ShapeConfig",
+    "SHAPES", "get_config", "list_archs",
+]

@@ -1,0 +1,210 @@
+"""Config system: frozen dataclasses + arch registry.
+
+Every assigned architecture is a ``ModelConfig`` in its own module under
+``repro.configs``; ``get_config(name)`` resolves them.  The paper's technique
+is a first-class knob (``TTConfig``): any config can run uncompressed
+(``tt.mode='off'`` — the paper's MM baseline) or tensor-compressed
+(``tt.mode='tt'`` — TT linears + TTM embedding, contraction flow selectable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable
+
+__all__ = [
+    "TTConfig", "MoEConfig", "SSMConfig", "ShapeConfig",
+    "ModelConfig", "register", "get_config", "list_archs", "SHAPES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TTConfig:
+    """Paper-technique knobs (TT linear + TTM embedding)."""
+
+    mode: str = "off"             # "off" (dense MM baseline) | "tt"
+    rank: int = 64                # TT rank for weight matrices
+    embed_rank: int = 64          # TTM rank for the embedding table
+    d: int = 3                    # tensorization order (2d cores per matrix)
+    flow: str = "btt_fused"       # "rl" | "btt" | "btt_fused"
+    scope: tuple[str, ...] = ("attn", "ffn", "embed")  # what gets compressed
+    clamp_ranks: bool = True      # False = paper-exact uniform interior ranks
+
+    def on(self, part: str) -> bool:
+        return self.mode == "tt" and part in self.scope
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                 # per-expert FFN hidden dim
+    shared_d_ff: int = 0          # shared-expert hidden dim (0 = none)
+    every: int = 1                # MoE layer every N layers (1 = all layers)
+    capacity_factor: float = 1.25
+    # Pad the expert dimension to a TP-divisible count (dummy experts are
+    # never routed to).  Trades a few % parameter waste for clean expert
+    # parallelism — 60 experts on a 16-way axis otherwise force per-expert
+    # FFN-TP whose all-reduces dominate (EXPERIMENTS.md §Perf iteration 3).
+    pad_experts_to: int | None = None
+
+    @property
+    def padded_experts(self) -> int:
+        return max(self.pad_experts_to or 0, self.num_experts)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (input-shape) cell: what gets lowered for the dry-run."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 128
+    # attention details
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int | None = None     # sliding-window size for local-attn layers
+    # block structure
+    hybrid_pattern: tuple[str, ...] = ("attn",)   # cycle of "attn"|"rec"|"ssm"
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    # modality frontend stub ([audio]/[vlm]): float embeddings for a prefix
+    frontend: str | None = None   # None | "patch"
+    frontend_len: int = 0
+    # misc
+    causal: bool = True           # False = encoder (paper's ATIS classifier)
+    norm_eps: float = 1e-6
+    attn_q_chunk: int = 512       # blockwise-attention tiling (0 = single block)
+    attn_kv_chunk: int = 1024
+    act: str = "silu"             # "silu" (SwiGLU) | "gelu" (plain MLP)
+    mlp_gated: bool = True
+    tie_embeddings: bool = False
+    pos_embed: str = "rope"       # "rope" | "learned" | "sinusoidal" | "none"
+    max_seq_len: int = 524288
+    dtype: str = "bfloat16"
+    tt: TTConfig = TTConfig()
+    # which assigned shapes apply; None entry in a cell table => documented skip
+    supported_shapes: tuple[str, ...] = ("train_4k", "prefill_32k", "decode_32k")
+    skip_notes: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 256 (16-way TP x 128-lane tiles)."""
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def attn_dims(self) -> tuple[int, int, int]:
+        q = self.n_heads * self.d_head
+        kv = self.n_kv_heads * self.d_head
+        return q, kv, self.d_model
+
+    def with_tt(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, tt=dataclasses.replace(self.tt, **kw))
+
+    def scaled_down(self, **overrides) -> "ModelConfig":
+        """Reduced config of the same family for CPU smoke tests."""
+        small = dict(
+            num_layers=min(self.num_layers, 2),
+            d_model=256,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2),
+            d_head=64,
+            d_ff=512,
+            vocab_size=512,
+            frontend_len=min(self.frontend_len, 16),
+            max_seq_len=512,
+            dtype="float32",
+        )
+        if self.moe is not None:
+            small["moe"] = dataclasses.replace(
+                self.moe, num_experts=min(self.moe.num_experts, 4),
+                d_expert=128, shared_d_ff=128 if self.moe.shared_d_ff else 0)
+        if self.ssm is not None:
+            small["ssm"] = dataclasses.replace(self.ssm, d_state=16, head_dim=32, chunk=64)
+        if self.window is not None:
+            small["window"] = 128
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+ARCHS = (
+    "mamba2-130m", "musicgen-medium", "qwen3-8b", "granite-8b",
+    "qwen2.5-14b", "llama3-8b", "recurrentgemma-2b",
+    "llama4-maverick-400b-a17b", "qwen2-moe-a2.7b", "pixtral-12b",
+    "atis-transformer",
+)
+
+_MODULES = {
+    "mamba2-130m": "mamba2_130m",
+    "musicgen-medium": "musicgen_medium",
+    "qwen3-8b": "qwen3_8b",
+    "granite-8b": "granite_8b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "llama3-8b": "llama3_8b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "qwen2-moe-a2.7b": "qwen2_moe",
+    "pixtral-12b": "pixtral_12b",
+    "atis-transformer": "atis_transformer",
+}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        mod = _MODULES.get(name)
+        if mod is None:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> tuple[str, ...]:
+    return ARCHS

@@ -1,0 +1,27 @@
+"""llama3-8b [dense] — GQA, 128k vocab [arXiv:2407.21783].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.
+`long_500k` SKIPPED: pure full attention.
+"""
+from repro.configs.base import ModelConfig, TTConfig, register
+
+
+@register("llama3-8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-8b",
+        family="dense",
+        num_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=14336,
+        vocab_size=128256,
+        rope_theta=5e5,
+        hybrid_pattern=("attn",),
+        tt=TTConfig(mode="off", rank=64, embed_rank=64, d=3,
+                    scope=("attn", "ffn", "embed", "head")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes="long_500k skipped: pure full attention",
+    )

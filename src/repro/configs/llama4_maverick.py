@@ -1,0 +1,31 @@
+"""llama4-maverick-400b-a17b [moe] — MoE 128e top-1, early fusion
+[hf:meta-llama/Llama-4 family].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, alternating
+dense/MoE layers (maverick interleave), one shared expert per MoE layer.
+`long_500k` SKIPPED: pure full attention.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, TTConfig, register
+
+
+@register("llama4-maverick-400b-a17b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        family="moe",
+        num_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=8192,
+        vocab_size=202048,
+        rope_theta=5e5,
+        hybrid_pattern=("attn", "attn_moe"),
+        moe=MoEConfig(num_experts=128, top_k=1, d_expert=8192,
+                      shared_d_ff=8192, every=2, capacity_factor=1.25),
+        tt=TTConfig(mode="off", rank=64, embed_rank=64, d=3,
+                    scope=("attn", "ffn", "embed", "head")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes="long_500k skipped: pure full attention",
+    )

@@ -1,0 +1,32 @@
+"""mamba2-130m [ssm] — SSD (state-space duality) [arXiv:2405.21060].
+
+24L d_model=768 attn-free (d_ff=0) vocab=50280, ssm_state=128.
+Attention-free: `long_500k` RUNS (O(d_state) decode cache).  The paper's TT
+technique applies to the in/out projections (DESIGN.md §Arch-applicability);
+the SSD scan itself has no weight matrix to compress.
+Vocab 50280 padded to 50432 (x256) for 16-way TP of the dense baseline table.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, TTConfig, register
+
+
+@register("mamba2-130m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m",
+        family="ssm",
+        num_layers=24,
+        d_model=768,
+        n_heads=24,           # SSD heads = d_inner / head_dim
+        n_kv_heads=24,
+        d_head=64,
+        d_ff=0,
+        vocab_size=50280,
+        hybrid_pattern=("ssm",),
+        ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, chunk=256),
+        pos_embed="none",
+        mlp_gated=False,
+        tie_embeddings=True,
+        tt=TTConfig(mode="off", rank=32, embed_rank=48, d=3,
+                    scope=("attn", "embed")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    )

@@ -1,0 +1,33 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+48L d_model=1536 24H (GQA kv=24) d_ff=6144 vocab=2048.
+The EnCodec frontend is offline (tokens are the model input), so no stub
+embedding input is needed: vocab=2048 codebook tokens.  Sinusoidal positions
+(as in the paper's decoder), GELU FFN (non-gated).
+`long_500k` SKIPPED: pure full attention (quadratic history).
+"""
+from repro.configs.base import ModelConfig, TTConfig, register
+
+
+@register("musicgen-medium")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        num_layers=48,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=24,
+        d_head=64,
+        d_ff=6144,
+        vocab_size=2048,
+        hybrid_pattern=("attn",),
+        pos_embed="sinusoidal",
+        act="gelu",
+        mlp_gated=False,
+        max_seq_len=65536,
+        tt=TTConfig(mode="off", rank=48, embed_rank=32, d=3,
+                    scope=("attn", "ffn")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes="long_500k skipped: pure full attention",
+    )

@@ -1,0 +1,33 @@
+"""pixtral-12b [vlm] — pixtral-ViT + mistral-nemo backbone
+[hf:mistralai/Pixtral-12B-2409].
+
+40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.
+Backbone only per the assignment: the ViT frontend is a STUB —
+``input_specs()`` provides precomputed patch embeddings (float) for the
+first ``frontend_len`` positions; remaining positions are text tokens.
+`long_500k` SKIPPED: pure full attention.
+"""
+from repro.configs.base import ModelConfig, TTConfig, register
+
+
+@register("pixtral-12b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b",
+        family="vlm",
+        num_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=14336,
+        vocab_size=131072,
+        rope_theta=1e9,
+        hybrid_pattern=("attn",),
+        frontend="patch",
+        frontend_len=1024,   # 1024 patch positions precede the text tokens
+        tt=TTConfig(mode="off", rank=64, embed_rank=64, d=3,
+                    scope=("attn", "ffn", "embed", "head")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes="long_500k skipped: pure full attention",
+    )

@@ -1,0 +1,28 @@
+"""qwen2.5-14b [dense] — GQA, QKV bias [hf:Qwen/Qwen2.5 family].
+
+48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064.
+`long_500k` SKIPPED: pure full attention.
+"""
+from repro.configs.base import ModelConfig, TTConfig, register
+
+
+@register("qwen2.5-14b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2.5-14b",
+        family="dense",
+        num_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=13824,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_theta=1e6,
+        hybrid_pattern=("attn",),
+        tt=TTConfig(mode="off", rank=64, embed_rank=64, d=3,
+                    scope=("attn", "ffn", "embed", "head")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes="long_500k skipped: pure full attention",
+    )

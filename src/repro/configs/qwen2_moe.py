@@ -1,0 +1,32 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed top-4 [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (GQA kv=16) d_ff=1408(per expert) vocab=151936,
+MoE 60e top-4; shared expert = 4x1408 = 5632 hidden.
+EP note: 60 experts are NOT divisible by the 16-way model axis — per-expert
+FFN dim (1408 = 16x88) is TP-sharded instead (DESIGN.md distribution notes).
+`long_500k` SKIPPED: pure full attention.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, TTConfig, register
+
+
+@register("qwen2-moe-a2.7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-moe-a2.7b",
+        family="moe",
+        num_layers=24,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_head=128,
+        d_ff=1408,
+        vocab_size=151936,
+        rope_theta=1e6,
+        hybrid_pattern=("attn_moe",),
+        moe=MoEConfig(num_experts=60, top_k=4, d_expert=1408,
+                      shared_d_ff=5632, pad_experts_to=64, every=1, capacity_factor=1.25),
+        tt=TTConfig(mode="off", rank=48, embed_rank=64, d=3,
+                    scope=("attn", "ffn", "embed", "head")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes="long_500k skipped: pure full attention",
+    )

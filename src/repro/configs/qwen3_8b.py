@@ -1,0 +1,28 @@
+"""qwen3-8b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B].
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936.
+`long_500k` SKIPPED: pure full attention.
+"""
+from repro.configs.base import ModelConfig, TTConfig, register
+
+
+@register("qwen3-8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-8b",
+        family="dense",
+        num_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=12288,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1e6,
+        hybrid_pattern=("attn",),
+        tt=TTConfig(mode="off", rank=64, embed_rank=64, d=3,
+                    scope=("attn", "ffn", "embed", "head")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k"),
+        skip_notes="long_500k skipped: pure full attention",
+    )

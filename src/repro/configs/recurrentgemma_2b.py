@@ -1,0 +1,30 @@
+"""recurrentgemma-2b [hybrid] — RG-LRU + local attention 1:2 [arXiv:2402.19427].
+
+26L d_model=2560 10H (GQA kv=1) d_ff=7680 vocab=256000.
+Pattern (rec, rec, attn_local) x 8 + (rec, rec) tail = 26 layers; local
+attention window 2048.  Sub-quadratic: `long_500k` RUNS (window cache +
+O(d) recurrent state).
+"""
+from repro.configs.base import ModelConfig, TTConfig, register
+
+
+@register("recurrentgemma-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-2b",
+        family="hybrid",
+        num_layers=26,
+        d_model=2560,
+        n_heads=10,
+        n_kv_heads=1,
+        d_head=256,
+        d_ff=7680,
+        vocab_size=256000,
+        window=2048,
+        hybrid_pattern=("rec", "rec", "attn_local"),
+        act="gelu",
+        tie_embeddings=True,
+        tt=TTConfig(mode="off", rank=48, embed_rank=64, d=3,
+                    scope=("attn", "ffn", "embed")),
+        supported_shapes=("train_4k", "prefill_32k", "decode_32k", "long_500k"),
+    )

@@ -1,0 +1,48 @@
+"""Core: the paper's contribution — TT/TTM-compressed training with
+bidirectional contraction, fused backward, and memory-packing models."""
+from .contraction import (
+    ContractionCost,
+    btt_contraction_cost,
+    dense_matmul_cost,
+    rl_contraction_cost,
+    tt_forward_btt,
+    tt_forward_rl,
+    ttm_lookup,
+)
+from .tt import (
+    TTMSpec,
+    TTSpec,
+    factorize,
+    tt_half_factors,
+    tt_init,
+    tt_params_count,
+    tt_reconstruct,
+    ttm_init,
+    ttm_params_count,
+    ttm_reconstruct,
+)
+from .tt_linear import (
+    FLOWS,
+    TTLinearParams,
+    make_tt_spec,
+    tt_linear_apply,
+    tt_linear_init,
+)
+from .ttm_embedding import (
+    TTMEmbeddingParams,
+    make_ttm_spec,
+    ttm_embedding_apply,
+    ttm_embedding_init,
+)
+
+__all__ = [
+    "TTSpec", "TTMSpec", "factorize",
+    "tt_init", "ttm_init", "tt_reconstruct", "ttm_reconstruct",
+    "tt_half_factors", "tt_params_count", "ttm_params_count",
+    "tt_forward_rl", "tt_forward_btt", "ttm_lookup",
+    "ContractionCost", "rl_contraction_cost", "btt_contraction_cost",
+    "dense_matmul_cost",
+    "TTLinearParams", "tt_linear_init", "tt_linear_apply", "FLOWS",
+    "make_tt_spec", "make_ttm_spec",
+    "TTMEmbeddingParams", "ttm_embedding_init", "ttm_embedding_apply",
+]

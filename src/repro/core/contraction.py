@@ -1,0 +1,201 @@
+"""Tensor-network contraction flows for TT linear layers and TTM embeddings.
+
+Implements the paper's two contraction orders for a TT-format linear layer
+``y = W x`` (Sec. IV):
+
+* ``tt_forward_rl``  — the *right-to-left* sequential flow used by prior
+  inference accelerators (TIE, ETTE).  Every one of the ``2d`` steps carries
+  the activation dimension ``K = batch*seq`` (paper Eq. (18)/(19)).
+* ``tt_forward_btt`` — the paper's *bidirectional* flow: input-side and
+  output-side cores are contracted toward the middle first (K-independent),
+  yielding half-factors ``A (M, r_d)`` / ``B (r_d, N)``, then
+  ``Y = A @ (B @ X)`` — two MXU-friendly GEMMs (paper Eq. (20)/(21)).
+
+Both produce bit-identical math (contraction order never changes the result,
+only cost), which the tests assert against the dense reconstruction oracle.
+
+Also implements TTM embedding lookup (paper Eq. (17)) and a first-principles
+contraction-cost calculator used by ``core.cost_model`` and the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tt import TTMSpec, TTSpec, tt_half_factors
+
+__all__ = [
+    "tt_forward_rl",
+    "tt_forward_btt",
+    "ttm_lookup",
+    "token_digits",
+    "ContractionCost",
+    "rl_contraction_cost",
+    "btt_contraction_cost",
+    "dense_matmul_cost",
+]
+
+
+def tt_forward_rl(cores: Sequence[jax.Array], x: jax.Array, spec: TTSpec) -> jax.Array:
+    """Right-to-left TT contraction: ``y (K, M) = W x`` for ``x (K, N)``.
+
+    Faithful to the prior-work flow the paper compares against: contract the
+    input tensor with ``G_{2d}``, then ``G_{2d-1}``, ..., finally ``G_1``.
+    Every intermediate carries K.
+    """
+    d = spec.d
+    k = x.shape[0]
+    nf = spec.in_factors
+    # x -> (K, n_1, ..., n_d)
+    t = x.reshape((k,) + tuple(nf))
+    # Input-side cores, right to left: G_{2d} .. G_{d+1}
+    # After step j (contracting n_{d-j+1}): t has shape (K, n_1..n_{d-j}, r)
+    t = jnp.einsum("...n,rnq->...rq", t, cores[2 * d - 1], optimize=True)  # q = r_{2d} = 1
+    t = t[..., 0]  # (K, n_1..n_{d-1}, r_{2d-1})
+    for j in range(d - 2, -1, -1):
+        g = cores[d + j]  # (r_{d+j}, n_{j+1}, r_{d+j+1})
+        t = jnp.einsum("...nr,snr->...s", t, g, optimize=True)
+    # t: (K, r_d)
+    # Output-side cores, right to left: G_d .. G_1; builds up m-axes.
+    for j in range(d - 1, -1, -1):
+        g = cores[j]  # (r_j, m_{j+1}, r_{j+1})
+        t = jnp.einsum("k...r,smr->k...ms", t, g, optimize=True)
+    t = t[..., 0]  # drop r_0 = 1 -> (K, m_d, ..., m_1)? axes built innermost-last
+    # Axes come out as (K, m_d, m_{d-1}, ..., m_1); transpose to (K, m_1..m_d).
+    perm = (0,) + tuple(range(t.ndim - 1, 0, -1))
+    t = jnp.transpose(t, perm)
+    return t.reshape(k, spec.out_dim)
+
+
+def tt_forward_btt(cores: Sequence[jax.Array], x: jax.Array, spec: TTSpec) -> jax.Array:
+    """Bidirectional TT contraction (the paper's BTT): ``y = A @ (B @ x)``.
+
+    ``x (K, N) -> (K, M)``.  The half-factor builds are K-independent; the
+    only K-scaled work is two dense GEMMs with inner dims ``N`` and ``r_d`` —
+    the MXU-friendly form (see DESIGN.md hardware-adaptation notes).
+    """
+    a, b = tt_half_factors(cores, spec)  # (M, r_d), (r_d, N)
+    t = x @ b.T  # (K, r_d)
+    return t @ a.T  # (K, M)
+
+
+def token_digits(ids: jax.Array, vocab_factors: Sequence[int]) -> jax.Array:
+    """Mixed-radix decomposition of token ids onto the TTM vocab factors.
+
+    ``ids (...,) -> (..., d)`` with ``ids = sum_k digits[k] * stride_k`` where
+    the first factor is the most significant (row-major layout of the vocab
+    axis), matching ``ttm_reconstruct``'s Kronecker ordering.
+    """
+    digits = []
+    rem = ids
+    for f in vocab_factors[::-1]:
+        digits.append(rem % f)
+        rem = rem // f
+    return jnp.stack(digits[::-1], axis=-1)
+
+
+def ttm_lookup(cores: Sequence[jax.Array], ids: jax.Array, spec: TTMSpec) -> jax.Array:
+    """TTM embedding lookup (paper Eq. (17)).
+
+    For each token, select slice ``F_k[:, j_k, :, :]`` from every core and
+    chain-multiply; no dense ``(V, H)`` table ever materializes.  ``ids`` may
+    have any batch shape; returns ``ids.shape + (H,)``.
+    """
+    batch_shape = ids.shape
+    flat = ids.reshape(-1)
+    dg = token_digits(flat, spec.vocab_factors)  # (K, d)
+    # First core: (1, v_1, h_1, r_1) -> gather -> (K, h_1, r_1)
+    acc = jnp.take(cores[0], dg[:, 0], axis=1)[0]  # (K, h1, r1)
+    for k in range(1, spec.d):
+        fk = jnp.take(cores[k], dg[:, k], axis=1)  # (r_{k-1}, K, h_k, r_k)
+        acc = jnp.einsum("kpr,rkns->kpns", acc, fk, optimize=True)
+        acc = acc.reshape(acc.shape[0], acc.shape[1] * acc.shape[2], acc.shape[3])
+    out = acc.reshape(flat.shape[0], spec.hidden_dim)
+    return out.reshape(batch_shape + (spec.hidden_dim,))
+
+
+# ---------------------------------------------------------------------------
+# First-principles contraction cost calculator.
+#
+# Each contraction step of tensors S (with dims Ds) and T (dims Dt) over a
+# contracted set C costs ``prod(output dims) * prod(C)`` multiplies and
+# produces an intermediate of ``prod(output dims)`` elements.  This is the
+# model behind the paper's Eqs. (18)-(21); we compute it step-by-step from the
+# actual flows so benchmarks can validate the closed forms.
+# ---------------------------------------------------------------------------
+
+
+class ContractionCost:
+    """Accumulates multiplies and intermediate-element counts over a flow."""
+
+    def __init__(self) -> None:
+        self.muls = 0
+        self.intermediates: list[int] = []
+
+    def step(self, out_elems: int, contracted: int) -> None:
+        self.muls += out_elems * contracted
+        self.intermediates.append(out_elems)
+
+    @property
+    def peak_intermediate(self) -> int:
+        return max(self.intermediates) if self.intermediates else 0
+
+    @property
+    def total_intermediate(self) -> int:
+        # Paper's training memory model: *all* intermediates are stored for
+        # reuse in backprop, except the final output (Sec. IV-A).
+        return sum(self.intermediates[:-1]) if self.intermediates else 0
+
+
+def rl_contraction_cost(spec: TTSpec, K: int) -> ContractionCost:
+    """Cost of the right-to-left flow (validates paper Eq. (18)/(19))."""
+    c = ContractionCost()
+    rs = spec.ranks
+    nf, mf = spec.in_factors, spec.out_factors
+    d = spec.d
+    # Input side: contract n_d, then n_{d-1}, ... n_1.
+    # State after contracting j factors: (K, n_1..n_{d-j}, r_{2d-j})
+    for j in range(1, d + 1):
+        lead = int(np.prod(nf[: d - j])) if d - j > 0 else 1
+        out = K * lead * rs[2 * d - j]
+        c.step(out, nf[d - j] * rs[2 * d - j + 1])
+    # Output side: contract r_d with G_d, ..., r_1 with G_1, building m axes.
+    # State after j output steps: (K, m_{d-j+1}..m_d, r_{d-j})
+    for j in range(1, d + 1):
+        ms = int(np.prod(mf[d - j:]))
+        out = K * ms * rs[d - j]
+        c.step(out, rs[d - j + 1])
+    return c
+
+
+def btt_contraction_cost(spec: TTSpec, K: int) -> ContractionCost:
+    """Cost of the bidirectional flow (validates paper Eq. (20)/(21))."""
+    c = ContractionCost()
+    rs = spec.ranks
+    nf, mf = spec.in_factors, spec.out_factors
+    d = spec.d
+    # Build B (r_d, N): chain input-side cores right-to-left (boundary-inward;
+    # no step carries r_d until the chain reaches it — see tt_half_factors).
+    for j in range(1, d):
+        n_tail = int(np.prod(nf[d - j - 1:]))
+        out = rs[2 * d - j - 1] * n_tail
+        c.step(out, rs[2 * d - j])
+    # Build A (M, r_d): chain output-side cores left-to-right (boundary-inward).
+    for j in range(1, d):
+        m_part = int(np.prod(mf[: j + 1]))
+        out = m_part * rs[j + 1]
+        c.step(out, rs[j])
+    # Z2 = B @ X : (r_d, K), contract N.
+    c.step(rs[d] * K, spec.in_dim)
+    # Y = A @ Z2 : (M, K), contract r_d.
+    c.step(spec.out_dim * K, rs[d])
+    return c
+
+
+def dense_matmul_cost(M: int, N: int, K: int) -> ContractionCost:
+    c = ContractionCost()
+    c.step(M * K, N)
+    return c

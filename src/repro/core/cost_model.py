@@ -1,0 +1,215 @@
+"""Analytic computing/memory cost models (paper Sec. IV + Sec. V-C).
+
+Three layers of modeling, each validated by `benchmarks/bench_cost_model.py`:
+
+1. Closed-form multiply / intermediate-memory counts for the right-to-left TT
+   flow (paper Eqs. (18)/(19)) and the bidirectional BTT flow (Eqs. (20)/(21)).
+   These are transcribed exactly as printed.
+2. A first-principles step-by-step calculator (`core.contraction`) that walks
+   the actual flows; the benchmark asserts (1) == (2).
+3. The BRAM allocation model (Eqs. (22)-(25)) with the tensor-core grouping
+   strategy, plus the TPU analogue: (8, 128) tile-padding waste of individually
+   stored cores vs. packed/stacked core buffers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from .tt import TTMSpec, TTSpec
+
+__all__ = [
+    "mul_tt_rl",
+    "mem_tt_rl",
+    "mul_btt",
+    "mem_btt",
+    "mul_dense",
+    "mem_dense_weights",
+    "ttm_forward_cost",
+    "BRAM_BITS",
+    "BRAM_WIDTHS",
+    "bram_blocks",
+    "bram_efficiency",
+    "tpu_tile_padded_bytes",
+    "tpu_packing_efficiency",
+]
+
+
+# ---------------------------------------------------------------------------
+# Paper Eqs. (18)-(21), transcribed directly.  Index conventions follow the
+# paper: cores G_1..G_{2d}, ranks r_0..r_{2d}; m_i are output factors, n_i
+# input factors; K = batch * seq.
+# ---------------------------------------------------------------------------
+
+
+def _rmn(spec: TTSpec):
+    rs = spec.ranks
+    m = (0,) + tuple(spec.out_factors)  # 1-indexed
+    n = (0,) + tuple(spec.in_factors)
+    return rs, m, n
+
+
+def mul_tt_rl(spec: TTSpec, K: int) -> int:
+    """Paper Eq. (18): multiplies of the right-to-left TT forward."""
+    rs, m, n = _rmn(spec)
+    d = spec.d
+    total = 0
+    for k in range(d):
+        t1 = rs[2 * d - k - 1] * rs[2 * d - k] * int(np.prod(n[1 : d - k + 1]))
+        t2 = rs[d - k - 1] * rs[d - k] * int(np.prod(m[d - k : d + 1]))
+        total += t1 + t2
+    return K * total
+
+
+def mem_tt_rl(spec: TTSpec, K: int) -> int:
+    """Paper Eq. (19): intermediate elements stored by the RL flow."""
+    rs, m, n = _rmn(spec)
+    d = spec.d
+    total = K * rs[d]
+    for k in range(d - 1):
+        t1 = rs[2 * d - k - 1] * int(np.prod(n[1 : d - k]))
+        t2 = rs[d - k - 1] * int(np.prod(m[d - k : d + 1]))
+        total += K * (t1 + t2)
+    return total
+
+
+def mul_btt(spec: TTSpec, K: int) -> int:
+    """Paper Eq. (20): multiplies of the bidirectional (BTT) forward."""
+    rs, m, n = _rmn(spec)
+    d = spec.d
+    total = 0
+    for k in range(d - 1):
+        t1 = rs[2 * d - k - 1] * rs[2 * d - k - 2] * int(np.prod(n[d - k - 1 : d + 1]))
+        t2 = rs[k + 1] * rs[k + 2] * int(np.prod(m[1 : k + 3]))
+        total += t1 + t2
+    total += K * rs[d] * (spec.out_dim + spec.in_dim)
+    return total
+
+
+def mem_btt(spec: TTSpec, K: int) -> int:
+    """Paper Eq. (21): intermediate elements stored by the BTT flow."""
+    rs, m, n = _rmn(spec)
+    d = spec.d
+    total = K * rs[d]
+    for k in range(d - 1):
+        t1 = rs[2 * d - k - 2] * int(np.prod(n[d - k - 1 : d + 1]))
+        t2 = rs[k + 1] * int(np.prod(m[1 : k + 3]))
+        total += t1 + t2
+    return total
+
+
+def mul_dense(M: int, N: int, K: int) -> int:
+    return M * N * K
+
+
+def mem_dense_weights(M: int, N: int) -> int:
+    return M * N
+
+
+def ttm_forward_cost(spec: TTMSpec, K: int) -> tuple[int, int]:
+    """(multiplies, intermediate elements) of a TTM chained lookup for K
+    tokens — first-principles over the flow in ``contraction.ttm_lookup``."""
+    rs = spec.ranks
+    muls = 0
+    mem = 0
+    h_part = spec.hidden_factors[0]
+    for k in range(1, spec.d):
+        out = K * h_part * spec.hidden_factors[k] * rs[k + 1]
+        muls += out * rs[k]
+        h_part *= spec.hidden_factors[k]
+        if k < spec.d - 1:
+            mem += out
+    return muls, mem
+
+
+# ---------------------------------------------------------------------------
+# BRAM model (paper Sec. V-C, Eqs. (22)-(25)).
+# ---------------------------------------------------------------------------
+
+BRAM_BITS = 36 * 1024  # C = 36,864 bits per BRAM36 block
+BRAM_WIDTHS = (1, 2, 4, 9, 18, 36, 72)  # configurable widths W; D = C / W
+
+
+def bram_blocks(n_cores: int, depth_elems: int, r: int, *, bw: int = 32,
+                strategy: str = "reshape", group: int = 1,
+                width: int | None = None) -> int:
+    """Number of BRAM36 blocks to store ``n_cores`` TT cores.
+
+    Each core reshaped 2-D: logical width supports ``r`` parallel rank reads
+    of ``bw``-bit words; logical depth is ``depth_elems`` (= n*r for a core
+    (r, n, r) streamed along rank).  ``group`` cores are concatenated along
+    depth per the paper's grouping (Eqs. (24)/(25)); ``group=1`` reproduces
+    Eqs. (22)/(23)).
+    """
+    if strategy not in ("partition", "reshape"):
+        raise ValueError(strategy)
+    widths = BRAM_WIDTHS if width is None else (width,)
+    n_groups = math.ceil(n_cores / group)
+    best = None
+    for w in widths:
+        d_cap = BRAM_BITS // w
+        if strategy == "partition":
+            n_w = r * math.ceil(bw / w)
+        else:
+            n_w = math.ceil(bw * r / w)
+        n_d = math.ceil(group * depth_elems / d_cap)
+        total = n_groups * n_w * n_d
+        if best is None or total < best:
+            best = total
+    return int(best)
+
+
+def bram_efficiency(n_cores: int, depth_elems: int, r: int, *, bw: int = 32,
+                    strategy: str = "reshape", group: int = 1) -> float:
+    """eta = ideal bits / allocated bits (paper Fig. 11/12)."""
+    ideal_bits = n_cores * depth_elems * r * bw
+    blocks = bram_blocks(n_cores, depth_elems, r, bw=bw, strategy=strategy, group=group)
+    return ideal_bits / (blocks * BRAM_BITS)
+
+
+# ---------------------------------------------------------------------------
+# TPU analogue: (sublane, lane) tile padding waste, individually stored cores
+# vs. packed stacks.  A TPU array is laid out in (8, 128) f32 tiles (16, 128)
+# for bf16; tiny trailing dims waste lanes exactly like fixed-size BRAM blocks
+# waste depth.
+# ---------------------------------------------------------------------------
+
+
+def tpu_tile_padded_bytes(shape: Sequence[int], dtype_bytes: int = 4) -> int:
+    """Bytes the array occupies in HBM/VMEM after (8, 128)-tile padding of the
+    two minor dims ((16,128) for 2-byte dtypes)."""
+    if len(shape) == 0:
+        return dtype_bytes
+    sublane = 8 * (4 // dtype_bytes)
+    lane = 128
+    dims = list(shape)
+    if len(dims) == 1:
+        dims = [1] + dims
+    minor = math.ceil(dims[-1] / lane) * lane
+    second = math.ceil(dims[-2] / sublane) * sublane
+    lead = int(np.prod(dims[:-2])) if len(dims) > 2 else 1
+    return lead * second * minor * dtype_bytes
+
+
+def tpu_packing_efficiency(core_shapes: Sequence[tuple[int, ...]],
+                           n_layers: int, dtype_bytes: int = 4) -> tuple[float, float]:
+    """(eta_individual, eta_packed) for storing ``n_layers`` copies of the
+    given cores individually vs. flat-packed into one buffer per core index —
+    the TPU analogue of the paper's tensor grouping (Eqs. 24/25).
+
+    Flat packing concatenates the L stacked copies element-contiguously and
+    pads once to an (8, 128) tile, exactly like the paper concatenates
+    K = (d-1)L cores along BRAM depth; the kernel reshapes on VMEM load
+    (HBM->VMEM DMA is layout-flexible), so compute is unaffected."""
+    ideal = n_layers * sum(int(np.prod(s)) for s in core_shapes) * dtype_bytes
+    indiv = n_layers * sum(tpu_tile_padded_bytes(s, dtype_bytes) for s in core_shapes)
+    sublane = 8 * (4 // dtype_bytes)
+    tile = sublane * 128 * dtype_bytes
+    packed = sum(
+        math.ceil(n_layers * int(np.prod(s)) * dtype_bytes / tile) * tile
+        for s in core_shapes
+    )
+    return ideal / indiv, ideal / packed

@@ -1,0 +1,64 @@
+"""Activation-sharding hints: a mesh context for model-internal constraints.
+
+Model code stays mesh-agnostic; drivers (dryrun/train/serve) install the
+active mesh here, and hot spots call ``constrain(x, *spec)`` to pin the
+sharding of *transient* activations whose layout GSPMD cannot infer from
+parameters alone (e.g. the transiently-reconstructed TTM embedding table,
+which descends from replicated cores but must be vocab-sharded).  With no
+mesh installed — unit tests, single-device runs — ``constrain`` is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_mesh", "constrain", "current_mesh"]
+
+_ACTIVE: list[Mesh] = []
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh) -> Iterator[None]:
+    _ACTIVE.append(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+def current_mesh() -> Mesh | None:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """``with_sharding_constraint(x, P(*spec))`` under the active mesh.
+
+    Each spec entry is an axis name, a tuple of axis names, or None.  Axis
+    names missing from the mesh (or that do not divide the dim) degrade to
+    None; with no active mesh the array passes through unchanged.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+
+    def resolve(dim, ax):
+        if ax is None:
+            return None
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        if not axes:
+            return None
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n != 0:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    fixed = [resolve(d, a) for d, a in zip(x.shape, spec)]
+    fixed += [None] * (len(x.shape) - len(fixed))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,285 @@
+"""Tensor-train (TT) and tensor-train-matrix (TTM) parameter structures.
+
+This module implements the paper's parameterizations (Sec. II-B/II-C):
+
+* A weight matrix ``W (M, N)`` with ``M = prod(m_i)``, ``N = prod(n_i)`` is
+  stored as ``2d`` TT cores ``G_k``:
+      ``G_k in (r_{k-1}, m_k, r_k)`` for ``k in [1, d]``  (output side)
+      ``G_{d+k} in (r_{d+k-1}, n_k, r_{d+k})``            (input side)
+  with ``r_0 = r_{2d} = 1`` (paper Eq. (7)).
+
+* An embedding table ``E (V, H)`` is stored as ``d`` TTM cores
+  ``F_k in (r_{k-1}, v_k, h_k, r_k)`` (paper Eq. (8)).
+
+Cores are plain ``jnp`` arrays inside dataclass pytrees so they are directly
+shardable/optimizable. All shape metadata lives in static (hashable) spec
+dataclasses, keeping jit caches clean.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TTSpec",
+    "TTMSpec",
+    "factorize",
+    "tt_init",
+    "ttm_init",
+    "tt_reconstruct",
+    "ttm_reconstruct",
+    "tt_half_factors",
+    "tt_params_count",
+    "ttm_params_count",
+]
+
+
+def factorize(n: int, d: int, max_pad: int = 4096) -> tuple[tuple[int, ...], int]:
+    """Find a balanced ``d``-way factorization of the smallest ``n' >= n``.
+
+    Returns ``(factors, n_padded)`` with ``prod(factors) == n_padded`` and the
+    factors as equal as possible (best for TT compression: cost scales with
+    ``max_i f_i``).  Used to tensorize arbitrary model dims (4096 -> 16,16,16;
+    50280 -> padded 50400 -> (35, 36, 40), ...).
+    """
+    if d <= 0:
+        raise ValueError(f"d must be positive, got {d}")
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    if d == 1:
+        return (n,), n
+
+    def best_factorization(m: int) -> tuple[int, ...] | None:
+        # Greedy-balanced exact factorization via DFS on the divisor lattice.
+        target = m ** (1.0 / d)
+        best: list[tuple[float, tuple[int, ...]]] = []
+
+        def dfs(remaining: int, k: int, acc: tuple[int, ...], lo: int) -> None:
+            if k == 1:
+                if remaining >= lo:
+                    fac = acc + (remaining,)
+                    spread = max(fac) / max(min(fac), 1)
+                    best.append((spread, fac))
+                return
+            f = lo
+            # factors ascending to dedupe permutations
+            while f ** k <= remaining:
+                if remaining % f == 0:
+                    dfs(remaining // f, k - 1, acc + (f,), f)
+                f += 1
+
+        dfs(m, d, (), 2)
+        if not best:
+            return None
+        best.sort(key=lambda t: (t[0], t[1]))
+        _ = target  # balance is captured by spread
+        return best[0][1]
+
+    for pad in range(0, max_pad + 1):
+        fac = best_factorization(n + pad)
+        if fac is not None and max(fac) / min(fac) <= 8.0:
+            return tuple(sorted(fac, reverse=True)), n + pad
+    # Fall back: accept any exact factorization within the pad budget.
+    for pad in range(0, max_pad + 1):
+        fac = best_factorization(n + pad)
+        if fac is not None:
+            return tuple(sorted(fac, reverse=True)), n + pad
+    raise ValueError(f"could not factorize {n} into {d} factors within pad {max_pad}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TTSpec:
+    """Static description of a TT-factorized matrix ``W (M, N) = out x in``.
+
+    ``clamp_ranks=True`` (default) clamps interior ranks to the dense
+    boundary (no wasted parameters at chain ends).  The paper's formulas and
+    its ATIS model use UNIFORM interior ranks (G_1 is (1, 8, 12) even though
+    12 > 8) — set ``clamp_ranks=False`` for paper-exact cost accounting.
+    """
+
+    out_factors: tuple[int, ...]  # (m_1, ..., m_d)
+    in_factors: tuple[int, ...]  # (n_1, ..., n_d)
+    rank: int  # uniform internal TT rank r
+    clamp_ranks: bool = True
+
+    @property
+    def d(self) -> int:
+        return len(self.out_factors)
+
+    @property
+    def out_dim(self) -> int:
+        return int(np.prod(self.out_factors))
+
+    @property
+    def in_dim(self) -> int:
+        return int(np.prod(self.in_factors))
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        """Full rank tuple (r_0, ..., r_{2d})."""
+        dims = list(self.out_factors) + list(self.in_factors)
+        n = len(dims)
+        rs = [1] * (n + 1)
+        for k in range(1, n):
+            if self.clamp_ranks:
+                left = int(np.prod(dims[:k]))
+                right = int(np.prod(dims[k:]))
+                rs[k] = min(self.rank, left, right)
+            else:
+                rs[k] = self.rank
+        return tuple(rs)
+
+    def core_shapes(self) -> tuple[tuple[int, int, int], ...]:
+        dims = list(self.out_factors) + list(self.in_factors)
+        rs = self.ranks
+        return tuple((rs[k], dims[k], rs[k + 1]) for k in range(len(dims)))
+
+    @property
+    def mid_rank(self) -> int:
+        """The rank r_d connecting the output-side and input-side chains."""
+        return self.ranks[self.d]
+
+    @classmethod
+    def from_dims(cls, out_dim: int, in_dim: int, d: int, rank: int) -> "TTSpec":
+        mf, mp = factorize(out_dim, d)
+        nf, npad = factorize(in_dim, d)
+        if mp != out_dim or npad != in_dim:
+            raise ValueError(
+                f"dims ({out_dim},{in_dim}) need padding to ({mp},{npad}); "
+                "pad at the model level before building a TTSpec"
+            )
+        return cls(out_factors=mf, in_factors=nf, rank=rank)
+
+
+@dataclasses.dataclass(frozen=True)
+class TTMSpec:
+    """Static description of a TTM-factorized table ``E (V, H)``."""
+
+    vocab_factors: tuple[int, ...]  # (v_1, ..., v_d)
+    hidden_factors: tuple[int, ...]  # (h_1, ..., h_d)
+    rank: int
+
+    @property
+    def d(self) -> int:
+        return len(self.vocab_factors)
+
+    @property
+    def vocab_dim(self) -> int:
+        return int(np.prod(self.vocab_factors))
+
+    @property
+    def hidden_dim(self) -> int:
+        return int(np.prod(self.hidden_factors))
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        d = self.d
+        rs = [1] * (d + 1)
+        for k in range(1, d):
+            left = int(np.prod([v * h for v, h in zip(self.vocab_factors[:k], self.hidden_factors[:k])]))
+            right = int(np.prod([v * h for v, h in zip(self.vocab_factors[k:], self.hidden_factors[k:])]))
+            rs[k] = min(self.rank, left, right)
+        return tuple(rs)
+
+    def core_shapes(self) -> tuple[tuple[int, int, int, int], ...]:
+        rs = self.ranks
+        return tuple(
+            (rs[k], self.vocab_factors[k], self.hidden_factors[k], rs[k + 1])
+            for k in range(self.d)
+        )
+
+
+def _chain_variance_std(shapes: Sequence[tuple[int, ...]], contracted: Sequence[int],
+                        target_std: float) -> float:
+    """Per-core std so the reconstructed chain has ``target_std``.
+
+    For a chain product of independent zero-mean cores, the element variance of
+    the result is ``prod(core_var) * prod(contracted_dims)``.  Solving for a
+    uniform per-core std ``s``:  ``s = (target_std^2 / prod(contracted)) ^ (1/(2n))``.
+    """
+    n = len(shapes)
+    contracted_prod = float(np.prod([max(c, 1) for c in contracted])) if contracted else 1.0
+    var = (target_std**2) / contracted_prod
+    return float(var ** (1.0 / (2 * n)))
+
+
+def tt_init(key: jax.Array, spec: TTSpec, dtype=jnp.float32,
+            target_std: float | None = None) -> list[jax.Array]:
+    """Initialize TT cores so ``reconstruct(cores)`` ~ Glorot-normal W."""
+    if target_std is None:
+        target_std = math.sqrt(2.0 / (spec.in_dim + spec.out_dim))
+    shapes = spec.core_shapes()
+    contracted = list(spec.ranks[1:-1])
+    s = _chain_variance_std(shapes, contracted, target_std)
+    keys = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, sh, dtype) * jnp.asarray(s, dtype) for k, sh in zip(keys, shapes)]
+
+
+def ttm_init(key: jax.Array, spec: TTMSpec, dtype=jnp.float32,
+             target_std: float = 0.02) -> list[jax.Array]:
+    shapes = spec.core_shapes()
+    contracted = list(spec.ranks[1:-1])
+    s = _chain_variance_std(shapes, contracted, target_std)
+    keys = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, sh, dtype) * jnp.asarray(s, dtype) for k, sh in zip(keys, shapes)]
+
+
+def tt_half_factors(cores: Sequence[jax.Array], spec: TTSpec) -> tuple[jax.Array, jax.Array]:
+    """Build the two BTT half-factors (paper Sec. IV-B, Fig. 5 bottom).
+
+    Returns ``A (M, r_d)`` (contraction of output-side cores ``G_1..G_d``) and
+    ``B (r_d, N)`` (contraction of input-side cores ``G_{d+1}..G_{2d}``).
+    These builds are K-independent: their cost does not scale with batchxseq.
+
+    Both chains are built from their boundary (rank-1) ends inward toward the
+    middle rank — the order implied by paper Eq. (20): no build step carries
+    ``r_d`` until the chain reaches it, which is what makes the build terms
+    rank-quadratic rather than rank-cubic.
+    """
+    d = spec.d
+    out_cores, in_cores = cores[:d], cores[d:]
+    # A: chain G_1 (1, m_1, r_1) -> G_2 -> ... -> (M, r_d); boundary r_0 = 1.
+    a = out_cores[0].reshape(out_cores[0].shape[1], out_cores[0].shape[2])
+    for g in out_cores[1:]:
+        # (M_part, r) x (r, m_k, r') -> (M_part * m_k, r')
+        a = jnp.einsum("pr,rms->pms", a, g, optimize=True)
+        a = a.reshape(a.shape[0] * a.shape[1], a.shape[2])
+    # B: chain G_{2d} (r_{2d-1}, n_d, 1) <- ... <- G_{d+1} -> (r_d, N);
+    # boundary r_{2d} = 1, iterating right-to-left.
+    last = in_cores[-1]
+    acc = last.reshape(last.shape[0], last.shape[1] * last.shape[2])  # (r, n_d)
+    for g in in_cores[-2::-1]:
+        # (r, n_k, r') x (r', N_tail) -> (r, n_k * N_tail)
+        acc = jnp.einsum("rns,st->rnt", g, acc, optimize=True)
+        acc = acc.reshape(acc.shape[0], acc.shape[1] * acc.shape[2])
+    return a, acc
+
+
+def tt_reconstruct(cores: Sequence[jax.Array], spec: TTSpec) -> jax.Array:
+    """Dense ``W (M, N)`` from TT cores (test oracle; never used at scale)."""
+    a, b = tt_half_factors(cores, spec)
+    return a @ b
+
+
+def ttm_reconstruct(cores: Sequence[jax.Array], spec: TTMSpec) -> jax.Array:
+    """Dense ``E (V, H)`` from TTM cores (test oracle)."""
+    acc = cores[0]  # (1, v1, h1, r1)
+    acc = acc.reshape(acc.shape[1], acc.shape[2], acc.shape[3])  # (v, h, r)
+    for f in cores[1:]:
+        # (V_p, H_p, r) x (r, v_k, h_k, r') -> (V_p*v_k, H_p*h_k, r')
+        acc = jnp.einsum("vhr,rwgs->vwhgs", acc, f, optimize=True)
+        acc = acc.reshape(acc.shape[0] * acc.shape[1], acc.shape[2] * acc.shape[3], acc.shape[4])
+    return acc.reshape(acc.shape[0], acc.shape[1])
+
+
+def tt_params_count(spec: TTSpec) -> int:
+    return int(sum(np.prod(s) for s in spec.core_shapes()))
+
+
+def ttm_params_count(spec: TTMSpec) -> int:
+    return int(sum(np.prod(s) for s in spec.core_shapes()))

@@ -1,0 +1,141 @@
+"""TT-format linear layer with the paper's three execution flows.
+
+* ``flow="rl"``        — right-to-left sequential contraction (prior work:
+                         TIE/ETTE-style inference accelerators).
+* ``flow="btt"``       — bidirectional contraction, plain autodiff. JAX will
+                         store the forward intermediates (incl. the K-sized
+                         ``B @ x``) for the backward pass.
+* ``flow="btt_fused"`` — bidirectional contraction with a custom VJP that
+                         implements the paper's *fused backward* (Sec. V-B2):
+                         nothing K-sized is saved; the backward rebuilds the
+                         half-factors and recomputes ``t = x @ B^T``, then
+                         forms core gradients through the (tiny) half-factor
+                         builds.  This is the TPU analogue of the MUL2/MUL3
+                         fine-grained fusion: intermediate gradient tensors
+                         (the paper's Z'_3) never round-trip through HBM.
+
+The custom VJP computes exactly the gradients of paper Eqs. (10)/(11)/(16) —
+verified against autodiff-through-dense-reconstruction in the tests.
+
+Logical (model) dims may be smaller than the tensorized dims when
+``factorize`` had to pad; ``tt_linear_apply`` zero-pads inputs / slices
+outputs transparently.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .contraction import tt_forward_btt, tt_forward_rl
+from .tt import TTSpec, factorize, tt_half_factors, tt_init
+
+__all__ = ["TTLinearParams", "tt_linear_init", "tt_linear_apply", "FLOWS",
+           "make_tt_spec"]
+
+# "kernel" routes through the fused Pallas forward (kernels/ops.py) with the
+# same custom-VJP backward; on non-TPU backends it runs in interpret mode.
+FLOWS = ("rl", "btt", "btt_fused", "kernel")
+
+
+def make_tt_spec(out_dim: int, in_dim: int, d: int, rank: int,
+                 clamp_ranks: bool = True) -> TTSpec:
+    """TTSpec for possibly-unfactorizable dims (pads internally)."""
+    mf, _ = factorize(out_dim, d)
+    nf, _ = factorize(in_dim, d)
+    return TTSpec(out_factors=mf, in_factors=nf, rank=rank,
+                  clamp_ranks=clamp_ranks)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class TTLinearParams:
+    """Pytree of TT cores (+ optional dense bias); spec/dims are static aux."""
+
+    cores: list[jax.Array]
+    bias: jax.Array | None
+    spec: TTSpec
+    out_dim: int  # logical output dim (<= spec.out_dim)
+    in_dim: int   # logical input dim (<= spec.in_dim)
+
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("cores"), self.cores),
+                (jax.tree_util.GetAttrKey("bias"), self.bias)), \
+            (self.spec, self.out_dim, self.in_dim)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        cores, bias = children
+        return cls(cores=list(cores), bias=bias, spec=aux[0],
+                   out_dim=aux[1], in_dim=aux[2])
+
+
+def tt_linear_init(key: jax.Array, out_dim: int, in_dim: int, *, d: int,
+                   rank: int, use_bias: bool = False, dtype=jnp.float32,
+                   clamp_ranks: bool = True) -> TTLinearParams:
+    spec = make_tt_spec(out_dim, in_dim, d, rank, clamp_ranks)
+    cores = tt_init(key, spec, dtype)
+    bias = jnp.zeros((out_dim,), dtype) if use_bias else None
+    return TTLinearParams(cores=cores, bias=bias, spec=spec,
+                          out_dim=out_dim, in_dim=in_dim)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _btt_fused(cores: tuple, x: jax.Array, spec: TTSpec) -> jax.Array:
+    return tt_forward_btt(cores, x, spec)
+
+
+def _btt_fused_fwd(cores, x, spec):
+    # Residuals: cores and x only.  No K-sized intermediate is saved — the
+    # paper's operation-fusion memory profile (O(r) extra state per layer).
+    y = tt_forward_btt(cores, x, spec)
+    return y, (cores, x)
+
+
+def _btt_fused_bwd(spec, residuals, gy):
+    cores, x = residuals
+    d = spec.d
+
+    def build(oc, ic):
+        return tt_half_factors(list(oc) + list(ic), spec)
+
+    (a, b), build_vjp = jax.vjp(build, tuple(cores[:d]), tuple(cores[d:]))
+    t = x @ b.T            # (K, r_d)   recomputed, not stored
+    gt = gy @ a            # (K, r_d)
+    gx = gt @ b            # (K, N)     = B^T A^T y'  (paper Eq. (16))
+    ga = gy.T @ t          # (M, r_d)   dL/dA
+    gb = gt.T @ x          # (r_d, N)   dL/dB
+    g_out, g_in = build_vjp((ga, gb))  # chain into per-core grads (Eqs. 10/11)
+    return (tuple(g_out) + tuple(g_in), gx)
+
+
+_btt_fused.defvjp(_btt_fused_fwd, _btt_fused_bwd)
+
+
+def tt_linear_apply(params: TTLinearParams, x: jax.Array, *,
+                    flow: str = "btt_fused") -> jax.Array:
+    """Apply ``y = W x + b`` with W in TT format.  ``x (..., N) -> (..., M)``."""
+    spec = params.spec
+    lead = x.shape[:-1]
+    xk = x.reshape(-1, x.shape[-1])
+    if params.in_dim != spec.in_dim:
+        xk = jnp.pad(xk, ((0, 0), (0, spec.in_dim - params.in_dim)))
+    if flow == "rl":
+        y = tt_forward_rl(params.cores, xk, spec)
+    elif flow == "btt":
+        y = tt_forward_btt(params.cores, xk, spec)
+    elif flow == "btt_fused":
+        y = _btt_fused(tuple(params.cores), xk, spec)
+    elif flow == "kernel":
+        from repro.kernels.ops import btt_linear_op  # lazy: pallas import
+        y = btt_linear_op(params.cores, xk, spec, use_kernel=True)
+    else:
+        raise ValueError(f"unknown flow {flow!r}; expected one of {FLOWS}")
+    if params.out_dim != spec.out_dim:
+        y = y[:, : params.out_dim]
+    y = y.reshape(lead + (params.out_dim,))
+    if params.bias is not None:
+        y = y + params.bias
+    return y

@@ -1,0 +1,14 @@
+"""Data pipelines: deterministic, *seekable* synthetic datasets.
+
+Every batch is a pure function of ``(seed, step)`` — there is no pipeline
+state to checkpoint or replay, so fault-tolerant restart is exact by
+construction (resume at step k reproduces the byte-identical batch stream),
+and elastic re-sharding only has to re-slice the global batch.
+"""
+from .atis import AtisGrammar, atis_batch, ATIS_NUM_INTENTS, ATIS_NUM_SLOTS
+from .synthetic import lm_batch, lm_eval_batch
+
+__all__ = [
+    "AtisGrammar", "atis_batch", "ATIS_NUM_INTENTS", "ATIS_NUM_SLOTS",
+    "lm_batch", "lm_eval_batch",
+]

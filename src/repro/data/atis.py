@@ -1,0 +1,97 @@
+"""Synthetic ATIS-style dataset (paper Sec. VI — intent + slot filling).
+
+The real ATIS corpus is not redistributable offline; we generate a synthetic
+stand-in with matched statistics (vocab 1000, seq 32, 26 intents, 120 slot
+labels — DESIGN.md §Known-deviations).  The *reproduction target* is the
+paper's Table III/Fig. 13 claim: tensor-compressed training reaches accuracy
+parity with uncompressed matrix training — which requires a dataset whose
+structure a small transformer can actually learn:
+
+* intent: each intent owns a few "keyword" tokens; an utterance contains
+  keywords of exactly one intent → intent is inferable by token aggregation.
+* slots: a fixed (seed-derived) token→slot map, with slot-bearing tokens
+  introduced by a small set of "trigger" tokens (e.g. "to <city>") so slot
+  labels depend on local context, not just token identity.
+
+Batches are pure functions of ``(seed, split, step)`` — seekable restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["AtisGrammar", "atis_batch", "ATIS_NUM_INTENTS", "ATIS_NUM_SLOTS"]
+
+ATIS_VOCAB = 1000
+ATIS_SEQ = 32
+ATIS_NUM_INTENTS = 26
+ATIS_NUM_SLOTS = 120  # label 0 = "O" (outside)
+
+
+@dataclasses.dataclass(frozen=True)
+class AtisGrammar:
+    """Seed-derived fixed task structure."""
+
+    seed: int
+    vocab: int = ATIS_VOCAB
+    num_intents: int = ATIS_NUM_INTENTS
+    num_slots: int = ATIS_NUM_SLOTS
+
+    def tables(self):
+        key = (self.seed, self.vocab, self.num_intents, self.num_slots)
+        cached = AtisGrammar._cache.get(key)
+        if cached is not None:
+            return cached
+        g = np.random.default_rng(np.random.SeedSequence((self.seed, 0x4715)))
+        # Token bands: [0, 600) filler, [600, 730) intent keywords (5 per
+        # intent), [730, 1000) slot-value tokens.
+        kw = 600 + np.arange(self.num_intents * 5).reshape(self.num_intents, 5)
+        slot_vals = np.arange(730, self.vocab)
+        # Each slot-value token maps to one of slots 1..num_slots-1.
+        val_slot = g.integers(1, self.num_slots, size=slot_vals.size).astype(np.int32)
+        # Trigger tokens (from filler band) that promote the NEXT token's slot.
+        triggers = g.choice(600, size=40, replace=False).astype(np.int32)
+        cached = (kw.astype(np.int32), slot_vals.astype(np.int32), val_slot,
+                  triggers)
+        AtisGrammar._cache[key] = cached
+        return cached
+
+
+AtisGrammar._cache = {}  # class-level memo (not a dataclass field)
+
+
+def atis_batch(grammar: AtisGrammar, split: str, step: int, batch: int,
+               seq_len: int = ATIS_SEQ) -> dict:
+    """{"tokens" (B,S) int32, "intent" (B,), "slots" (B,S)}.
+
+    ``split``: "train" | "test" — disjoint RNG streams.
+    """
+    kw, slot_vals, val_slot, triggers = grammar.tables()
+    stream = {"train": 0, "test": 1}[split]
+    g = np.random.default_rng(
+        np.random.SeedSequence((grammar.seed, stream, step)))
+
+    B, S = batch, seq_len
+    intent = g.integers(0, grammar.num_intents, size=B).astype(np.int32)
+    tokens = g.integers(0, 600, size=(B, S)).astype(np.int32)  # filler base
+    slots = np.zeros((B, S), np.int32)
+
+    # 2-4 intent keywords per utterance at random positions (not position 0:
+    # position 0 acts as [CLS] for the intent head).
+    n_kw = g.integers(2, 5, size=B)
+    for i in range(B):
+        pos = g.choice(np.arange(1, S), size=n_kw[i], replace=False)
+        which = g.integers(0, kw.shape[1], size=n_kw[i])
+        tokens[i, pos] = kw[intent[i], which]
+
+    # Trigger -> slot-value bigrams: ~4 per utterance.
+    n_sv = g.integers(2, 6, size=B)
+    for i in range(B):
+        pos = g.choice(np.arange(1, S - 1), size=n_sv[i], replace=False)
+        vi = g.integers(0, slot_vals.size, size=n_sv[i])
+        tokens[i, pos] = triggers[g.integers(0, triggers.size, size=n_sv[i])]
+        tokens[i, pos + 1] = slot_vals[vi]
+        slots[i, pos + 1] = val_slot[vi]
+
+    return {"tokens": tokens, "intent": intent, "slots": slots}

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused bidirectional-TT (BTT) linear forward.
+
+The paper's BTT contraction reduces a TT linear layer to
+``y = A @ (B @ x)`` with tiny half-factors ``A (M, r)`` / ``B (r, N)``
+(Sec. IV-B).  On FPGA the intermediate ``Z_2 = B @ x`` lives in on-chip
+BRAM between the MUL1 and MUL2 engines.  The TPU analogue implemented here:
+one ``pallas_call`` computes both GEMMs per output tile with the ``(TK, r)``
+intermediate held in a **VMEM scratch accumulator** — it never round-trips
+through HBM, exactly the paper's on-chip-only dataflow.
+
+Tiling (BlockSpec):
+  grid = (K / TK, N / TN); iteration is row-major so the N axis is innermost.
+  x block  (TK, TN)   — streamed from HBM
+  b block  (R,  TN)   — input half-factor, R = padded rank (lane-aligned)
+  a block  (M,  R)    — output half-factor, fully VMEM-resident (it is tiny:
+                        M·r ≤ a few MB — this residency is the kernel-level
+                        expression of the paper's "all parameters on chip")
+  y block  (TK, M)    — written once per K row-block
+  t scratch (TK, R) f32 — the fused intermediate (paper's Z_2)
+
+Per grid step: ``t += x_blk @ b_blk^T`` (MXU GEMM 1); on the last N block,
+``y = t @ a^T`` (MXU GEMM 2).  Both contractions hit the MXU with
+hardware-aligned shapes; this is the "few large matmuls, not 2d skinny ones"
+adaptation recorded in DESIGN.md.
+
+The same kernel computes the backward data gradient by operand swap:
+``gx = (gy @ A) @ B = btt(gy, b=A^T, a=B^T)`` — see ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["btt_linear_pallas", "DEFAULT_TK", "DEFAULT_TN"]
+
+DEFAULT_TK = 256
+DEFAULT_TN = 512
+
+
+def _fwd_kernel(x_ref, b_ref, a_ref, y_ref, t_ref, *, n_blocks: int):
+    """Grid (nK, nN); see module docstring for block shapes."""
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _zero():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    # GEMM 1: accumulate the fused intermediate t = x @ b^T in f32.
+    t_ref[...] += jax.lax.dot_general(
+        x_ref[...], b_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(n == n_blocks - 1)
+    def _emit():
+        # GEMM 2: y = t @ a^T, emitted once per K row-block.
+        y_ref[...] = jax.lax.dot_general(
+            t_ref[...].astype(a_ref.dtype), a_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(y_ref.dtype)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("tk", "tn", "interpret"))
+def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
+                      tk: int | None = None, tn: int | None = None,
+                      interpret: bool = False) -> jax.Array:
+    """``y (K, M) = (x (K, N) @ b(R, N)^T) @ a(M, R)^T`` via one fused kernel.
+
+    Pads every dim to hardware tiles (K, N to the block sizes; R, M to 128
+    lanes); zero padding is exact for this bilinear map.  ``interpret=True``
+    runs the kernel body in Python on CPU (used for all validation here —
+    TPU v5e is the *target*).
+    """
+    K, N = x.shape
+    R, _ = b.shape
+    M, _ = a.shape
+    out_dtype = x.dtype
+
+    # --- choose tiles under a VMEM budget -------------------------------
+    itemsize = jnp.dtype(x.dtype).itemsize
+    tk = tk or DEFAULT_TK
+    tn = tn or DEFAULT_TN
+    mp = _round_up(M, 128)
+    rp = _round_up(R, 128)
+    # y block (tk, Mp) + a (Mp, rp) + x (tk, tn) + b (rp, tn) + t (tk, rp) f32
+    def vmem(tk_):
+        return (tk_ * mp * itemsize + mp * rp * itemsize + tk_ * tn * itemsize
+                + rp * tn * itemsize + tk_ * rp * 4)
+    while tk > 64 and vmem(tk) > 12 * 1024 * 1024:
+        tk //= 2
+
+    kp = _round_up(K, tk)
+    np_ = _round_up(N, tn)
+    xp = jnp.pad(x, ((0, kp - K), (0, np_ - N)))
+    bp = jnp.pad(b, ((0, rp - R), (0, np_ - N)))
+    ap = jnp.pad(a, ((0, mp - M), (0, rp - R)))
+
+    n_blocks = np_ // tn
+    grid = (kp // tk, n_blocks)
+
+    y = pl.pallas_call(
+        functools.partial(_fwd_kernel, n_blocks=n_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tk, tn), lambda k, n: (k, n)),   # x
+            pl.BlockSpec((rp, tn), lambda k, n: (0, n)),   # b
+            pl.BlockSpec((mp, rp), lambda k, n: (0, 0)),   # a (resident)
+        ],
+        out_specs=pl.BlockSpec((tk, mp), lambda k, n: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((kp, mp), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tk, rp), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, bp, ap)
+    return y[:K, :M]

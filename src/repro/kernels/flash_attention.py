@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window, GQA-aware).
+
+Why it exists here: §Roofline shows the prefill/train cells memory-bound,
+and loop-nest attribution (EXPERIMENTS.md §Perf) pins most of that traffic
+on the pure-JAX blockwise attention — its online-softmax state (m, l, acc)
+is a scan carry that XLA round-trips through HBM on every KV chunk.  The
+fix is structural: keep the state in VMEM scratch across the KV axis of the
+grid, so HBM sees only Q/K/V reads and one O write — the flash-attention
+dataflow, here as the TPU analogue of the paper's "intermediates never
+leave chip" principle (Sec. V-B2).
+
+Grid = (B·H, S/TQ, S/TK), KV innermost (sequential); GQA without
+materializing repeated KV: the K/V BlockSpec index maps query-head ``h`` to
+its KV head ``h // group`` — the repeat happens in the index computation,
+not in memory.  Fully-masked causal blocks are skipped via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas", "DEFAULT_TQ", "DEFAULT_TK"]
+
+DEFAULT_TQ = 256
+DEFAULT_TK = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            nk: int, tq: int, tk: int, scale: float, causal: bool,
+            window: int | None, s_real: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = iq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    kpos = ik * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+
+    # Skip blocks that the causal mask fully zeroes (window handled by the
+    # in-block mask; its dead blocks are rarer and not worth the branch).
+    if causal:
+        live = ik * tk <= iq * tq + tq - 1       # some kpos <= some qpos
+    else:
+        live = jnp.asarray(True)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0]                              # (TQ, D)
+        k = k_ref[0]                              # (TK, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        mask = kpos < s_real
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                       # (TQ, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                    # (TQ, TK) f32
+        corr = jnp.exp(m_prev - m_new)            # (TQ, 1)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0]                              # (TK, D)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "group", "tq", "tk", "interpret"))
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           group: int = 1, tq: int | None = None,
+                           tk: int | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """``q (BH, S, D); k, v (BH/group, S, D) -> o (BH, S, D)``.
+
+    ``group`` = GQA group size (query heads per KV head); the K/V block
+    index maps ``h -> h // group`` so repeated KV never materializes.
+    S is padded to the tile grid; padded KV columns are masked, padded Q
+    rows sliced off.
+    """
+    BH, S, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    tq = tq or min(DEFAULT_TQ, _round_up(S, 128))
+    tk = tk or min(DEFAULT_TK, _round_up(S, 128))
+    sp = _round_up(S, max(tq, tk))
+    dp_ = _round_up(D, 128)
+    qp = jnp.pad(q, ((0, 0), (0, sp - S), (0, dp_ - D)))
+    kp = jnp.pad(k, ((0, 0), (0, sp - S), (0, dp_ - D)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - S), (0, dp_ - D)))
+    nq, nk = sp // tq, sp // tk
+    grid = (BH, nq, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=nk, tq=tq, tk=tk, scale=scale,
+                          causal=causal, window=window, s_real=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq, dp_), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, tk, dp_), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, tk, dp_), lambda h, i, j, g=group: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dp_), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, sp, dp_), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),     # m
+            pltpu.VMEM((tq, 1), jnp.float32),     # l
+            pltpu.VMEM((tq, dp_), jnp.float32),   # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :S, :D]

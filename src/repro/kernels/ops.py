@@ -1,0 +1,126 @@
+"""jit'd public wrappers around the Pallas kernels, with pure-JAX fallbacks.
+
+* ``btt_linear_op(cores, x, spec)`` — the paper's BTT linear executed by the
+  fused Pallas forward (``btt_linear.py``) under a custom VJP that implements
+  the paper's fused backward (Sec. V-B2): no K-sized intermediate is saved;
+  the backward recomputes ``t`` and routes the data gradient through the same
+  fused kernel by operand swap (``gx = btt(gy, A^T, B^T)``).
+
+* ``ttm_embed_op(cores, ids, spec)`` — gather-free TTM lookup via the d=3
+  one-hot kernel; falls back to the jnp gather chain when d != 3 or the cores
+  exceed the VMEM residency budget.
+
+Kernel selection: on a TPU backend the compiled kernel runs natively; on CPU
+(this container) ``interpret=True`` executes the kernel body in Python — the
+correctness path used by every test.  ``use_kernel=False`` forces the pure
+JAX path (what the production dry-run lowers, keeping HLO analyzable).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.contraction import tt_forward_btt, ttm_lookup, token_digits
+from repro.core.tt import TTMSpec, TTSpec, tt_half_factors
+
+from .btt_linear import btt_linear_pallas
+from .ttm_embed import ttm_embed_pallas
+
+__all__ = ["btt_linear_op", "ttm_embed_op", "kernel_interpret_default"]
+
+_VMEM_CORE_BUDGET = 8 * 1024 * 1024  # resident-core budget for ttm kernel
+
+
+def kernel_interpret_default() -> bool:
+    """interpret=True everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# BTT linear (kernel-backed, fused custom VJP).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _btt_kernel_fused(cores: tuple, x: jax.Array, spec: TTSpec,
+                      interpret: bool) -> jax.Array:
+    a, b = tt_half_factors(cores, spec)
+    return btt_linear_pallas(x, b, a, interpret=interpret)
+
+
+def _btt_kernel_fwd(cores, x, spec, interpret):
+    a, b = tt_half_factors(cores, spec)
+    y = btt_linear_pallas(x, b, a, interpret=interpret)
+    return y, (cores, x)  # paper-faithful: only inputs saved, no K-sized state
+
+
+def _btt_kernel_bwd(spec, interpret, residuals, gy):
+    cores, x = residuals
+    d = spec.d
+
+    def build(oc, ic):
+        return tt_half_factors(list(oc) + list(ic), spec)
+
+    (a, b), build_vjp = jax.vjp(build, tuple(cores[:d]), tuple(cores[d:]))
+    # Data gradient through the SAME fused kernel (operand swap):
+    #   gx = (gy @ A) @ B = btt(gy; b=A^T, a=B^T)
+    gx = btt_linear_pallas(gy, a.T, b.T, interpret=interpret)
+    # Core gradients: small K-reduction GEMMs (outputs are r-sized).
+    t = jnp.dot(x, b.T, preferred_element_type=jnp.float32).astype(x.dtype)
+    gt = jnp.dot(gy, a, preferred_element_type=jnp.float32).astype(gy.dtype)
+    ga = jnp.dot(gy.T, t, preferred_element_type=jnp.float32).astype(a.dtype)
+    gb = jnp.dot(gt.T, x, preferred_element_type=jnp.float32).astype(b.dtype)
+    g_out, g_in = build_vjp((ga, gb))
+    return (tuple(g_out) + tuple(g_in), gx)
+
+
+_btt_kernel_fused.defvjp(_btt_kernel_fwd, _btt_kernel_bwd)
+
+
+def btt_linear_op(cores, x: jax.Array, spec: TTSpec, *,
+                  use_kernel: bool = True,
+                  interpret: bool | None = None) -> jax.Array:
+    """``x (K, N) -> y (K, M)`` with W in TT format, BTT contraction."""
+    if not use_kernel:
+        return tt_forward_btt(cores, x, spec)
+    if interpret is None:
+        interpret = kernel_interpret_default()
+    return _btt_kernel_fused(tuple(cores), x, spec, interpret)
+
+
+# ---------------------------------------------------------------------------
+# TTM embedding (one-hot kernel when eligible).
+# ---------------------------------------------------------------------------
+
+
+def _ttm_kernel_eligible(spec: TTMSpec) -> bool:
+    if spec.d != 3:
+        return False
+    core_bytes = sum(int(np.prod(s)) * 4 for s in spec.core_shapes())
+    return core_bytes <= _VMEM_CORE_BUDGET
+
+
+def ttm_embed_op(cores, ids: jax.Array, spec: TTMSpec, *,
+                 use_kernel: bool = True,
+                 interpret: bool | None = None) -> jax.Array:
+    """``ids (...,) int32 -> (..., H)`` TTM lookup."""
+    if not use_kernel or not _ttm_kernel_eligible(spec):
+        return ttm_lookup(cores, ids, spec)
+    if interpret is None:
+        interpret = kernel_interpret_default()
+    batch_shape = ids.shape
+    flat = ids.reshape(-1)
+    dg = token_digits(flat, spec.vocab_factors)  # (K, 3)
+    oh = tuple(
+        jax.nn.one_hot(dg[:, k], spec.vocab_factors[k], dtype=cores[0].dtype)
+        for k in range(3)
+    )
+    rs = spec.ranks
+    spec_dims = (tuple(spec.vocab_factors), tuple(spec.hidden_factors),
+                 (rs[1], rs[2]))
+    out = ttm_embed_pallas(oh, tuple(cores), spec_dims=spec_dims,
+                           interpret=interpret)
+    return out.reshape(batch_shape + (spec.hidden_dim,))

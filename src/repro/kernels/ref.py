@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth the kernels are
+swept against in tests/test_kernels.py).
+
+These are deliberately the simplest possible expressions of the math — no
+tiling, no padding, no dtype tricks — so a mismatch always indicts the kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["btt_linear_ref", "btt_t_ref", "ttm_embed_ref"]
+
+
+def btt_linear_ref(x: jnp.ndarray, b: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """BTT linear: ``y = (x @ b^T) @ a^T``.
+
+    ``x (K, N)``, ``b (R, N)`` (input half-factor), ``a (M, R)`` (output
+    half-factor) -> ``y (K, M)``.  Accumulation in f32, result in x.dtype.
+    """
+    t = jnp.dot(x, b.T, preferred_element_type=jnp.float32)
+    y = jnp.dot(t.astype(a.dtype), a.T, preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def btt_t_ref(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """First stage only: ``t = x @ b^T`` in f32 (the VMEM-resident tensor)."""
+    return jnp.dot(x, b.T, preferred_element_type=jnp.float32)
+
+
+def ttm_embed_ref(oh: tuple[jnp.ndarray, ...], cores: tuple[jnp.ndarray, ...]
+                  ) -> jnp.ndarray:
+    """TTM embedding lookup with one-hot selection (d = len(cores) stages).
+
+    ``oh[k] (K, v_k)`` one-hot token digits; ``cores[k] (r_{k-1}, v_k, h_k,
+    r_k)`` -> embeddings ``(K, prod(h_k))``.  Matches
+    ``core.contraction.ttm_lookup`` (which gathers instead of one-hot-matmuls).
+    """
+    f = cores[0]
+    acc = jnp.einsum("kv,avhr->khr", oh[0], f.astype(jnp.float32))  # (K,h1,r1)
+    for k in range(1, len(cores)):
+        sel = jnp.einsum("kv,rvhs->krhs", oh[k], cores[k].astype(jnp.float32))
+        acc = jnp.einsum("kpr,krhs->kphs", acc, sel)
+        acc = acc.reshape(acc.shape[0], acc.shape[1] * acc.shape[2], acc.shape[3])
+    return acc[..., 0]

@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without TPUs.
+
+For every (architecture x input-shape) cell this driver:
+  1. builds the production mesh — (16, 16) single-pod or (2, 16, 16)
+     multi-pod — over 512 placeholder host devices,
+  2. derives parameter / optimizer / batch / cache shardings from the rule
+     engine (runtime.sharding),
+  3. ``jax.jit(step).lower(**ShapeDtypeStruct inputs).compile()`` — no
+     buffer is ever allocated,
+  4. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (FLOPs / bytes for §Roofline) and the
+     collective-bytes breakdown parsed from the partitioned HLO,
+  5. writes one JSON artifact per cell under ``artifacts/dryrun/``.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --tt --multi-pod
+  python -m repro.launch.dryrun --all              # every supported cell
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core.meshctx import activation_mesh
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    abstract_train_state,
+    make_decode_step,
+    make_inputs,
+    make_prefill,
+    make_train_step,
+)
+from repro.models.transformer import init_params
+from repro.optim import sgd
+from repro.runtime.sharding import (
+    batch_specs,
+    cache_specs,
+    kv_repeat_for_mesh,
+    named_sharding_tree,
+    opt_state_specs,
+    param_specs,
+)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def _mem_dict(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:  # noqa: BLE001 — backend-dependent availability
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # noqa: BLE001
+        return {"error": repr(e)}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, tt: bool,
+             out_dir: str, microbatches: int = 1, save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    if tt:
+        cfg = cfg.with_tt(mode="tt")
+    shape = SHAPES[shape_name]
+    if shape.kind != "train":
+        microbatches = 1  # gradient accumulation is a train-only knob
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "tt_mode": cfg.tt.mode, "dtype": cfg.dtype,
+        "mesh": "pod2_data16_model16" if multi_pod else "data16_model16",
+        "microbatches": microbatches,
+    }
+    if shape_name not in cfg.supported_shapes:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = cfg.skip_notes or "unsupported shape"
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kvr = kv_repeat_for_mesh(cfg, mesh)
+    inputs = make_inputs(cfg, shape, kv_repeat=kvr)
+    t0 = time.time()
+    with activation_mesh(mesh):
+        lowered = _lower_cell(cfg, shape, mesh, kvr, inputs, microbatches)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+    rec["status"] = "ok"
+    rec["devices"] = int(np.prod(list(mesh.shape.values())))
+    rec["kv_repeat"] = kvr
+    rec["memory_analysis"] = _mem_dict(compiled)
+    rec["cost_analysis"] = _cost_dict(compiled)
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo).as_dict()
+    rec["hlo_lines"] = hlo.count("\n")
+    if save_hlo:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, _cell_name(rec) + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def _lower_cell(cfg, shape, mesh, kvr, inputs, microbatches):
+    if shape.kind == "train":
+        opt = sgd(1e-3)  # paper-faithful PU stage; zero optimizer state
+        params_s, opt_s = abstract_train_state(cfg, opt)
+        pspec = param_specs(cfg, params_s, mesh)
+        sspec = opt_state_specs(cfg, opt_s, pspec, mesh)
+        bspec = batch_specs(inputs["batch"], mesh)
+
+        def mb_constraint(tree, _bspec=bspec, _mesh=mesh):
+            return jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(
+                    x, NamedSharding(_mesh, P(None, *tuple(s)))),
+                tree, _bspec)
+
+        fn = make_train_step(cfg, opt, microbatches=microbatches,
+                             batch_constraint=mb_constraint)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(named_sharding_tree(mesh, pspec),
+                          named_sharding_tree(mesh, sspec),
+                          named_sharding_tree(mesh, bspec)),
+            out_shardings=(named_sharding_tree(mesh, pspec),
+                           named_sharding_tree(mesh, sspec),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_s, opt_s, inputs["batch"])
+    elif shape.kind == "prefill":
+        params_s = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        pspec = param_specs(cfg, params_s, mesh)
+        bspec = batch_specs(inputs["batch"], mesh)
+        fn = make_prefill(cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(named_sharding_tree(mesh, pspec),
+                          named_sharding_tree(mesh, bspec)),
+        )
+        lowered = jitted.lower(params_s, inputs["batch"])
+    else:  # decode
+        params_s = jax.eval_shape(
+            lambda: init_params(jax.random.PRNGKey(0), cfg))
+        pspec = param_specs(cfg, params_s, mesh)
+        cspec = cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+        tspec = batch_specs({"tokens": inputs["tokens"]}, mesh)["tokens"]
+        fn = make_decode_step(cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(named_sharding_tree(mesh, pspec),
+                          named_sharding_tree(mesh, cspec),
+                          NamedSharding(mesh, tspec),
+                          NamedSharding(mesh, P())),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(params_s, inputs["cache"], inputs["tokens"],
+                               inputs["pos"])
+    return lowered
+
+
+def _cell_name(rec: dict) -> str:
+    tt = "tt" if rec["tt_mode"] == "tt" else "dense"
+    mp = "mp2" if rec["multi_pod"] else "sp"
+    mb = f"_mb{rec['microbatches']}" if rec.get("microbatches", 1) != 1 else ""
+    return f"{rec['arch']}__{rec['shape']}__{tt}__{mp}{mb}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tt", action="store_true",
+                    help="enable the paper's TT/TTM compression")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in list_archs():
+            if arch == "atis-transformer":
+                continue  # paper model exercised by benchmarks, not the grid
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod, tt=args.tt,
+                           out_dir=args.out, microbatches=args.microbatches,
+                           save_hlo=args.save_hlo)
+        except Exception:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "multi_pod": args.multi_pod,
+                   "tt_mode": "tt" if args.tt else "off", "status": "error",
+                   "microbatches": args.microbatches,
+                   "traceback": traceback.format_exc()}
+            failures += 1
+        path = os.path.join(args.out, _cell_name(rec) + ".json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            ca = rec["cost_analysis"]
+            extra = (f" flops={ca.get('flops', 0):.3e}"
+                     f" lower={rec['lower_s']}s compile={rec['compile_s']}s")
+        elif status == "skipped":
+            extra = f" ({rec['skip_reason'][:60]})"
+        print(f"[{status:7s}] {_cell_name(rec)}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""HLO post-processing: collective-bytes accounting + roofline terms.
+
+``cost_analysis()`` has no collective traffic entry, so the collective
+roofline term is derived by parsing the compiled (SPMD-partitioned,
+per-device) HLO text and summing the sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Per-op accounting (per device).  The partitioned HLO names operands without
+shapes, so sizes are derived from the *result* shape plus the replica-group
+size ``k`` parsed from ``replica_groups``:
+  * all-reduce        wire = 2·R·(k-1)/k   (ring reduce-scatter + all-gather)
+  * all-gather        wire =   R·(k-1)/k   (operand is R/k)
+  * reduce-scatter    wire =   R·(k-1)     (operand is R·k)
+  * all-to-all        wire =   R·(k-1)/k
+  * collective-permute wire =  R            (one hop send)
+
+Hardware constants for TPU v5e are in ``V5E``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["V5E", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+
+@dataclasses.dataclass(frozen=True)
+class V5E:
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link (~per chip effective)
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*[^=]*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict
+    operand_bytes: dict
+    wire_bytes: dict
+
+    @property
+    def total_wire_bytes(self) -> int:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "counts": self.counts,
+            "result_bytes": self.result_bytes,
+            "operand_bytes": self.operand_bytes,
+            "wire_bytes": self.wire_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+_GROUPS_BRACED_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)       # [n_groups, group_size]<=[N]
+    m = _GROUPS_BRACED_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    res_b: dict[str, int] = {}
+    opd_b: dict[str, int] = {}
+    wire_b: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        head = line[: m.start(1)]
+        rb = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        if rb == 0:
+            continue
+        k = _group_size(line)
+        if op == "all-reduce":
+            ob = rb
+            wb = int(2 * rb * (k - 1) / k)
+        elif op == "all-gather":
+            ob = rb // k
+            wb = int(rb * (k - 1) / k)
+        elif op == "reduce-scatter":
+            ob = rb * k
+            wb = rb * (k - 1)
+        elif op == "all-to-all":
+            ob = rb
+            wb = int(rb * (k - 1) / k)
+        else:                                # collective-permute (one hop)
+            ob = rb
+            wb = rb
+        counts[op] = counts.get(op, 0) + 1
+        res_b[op] = res_b.get(op, 0) + rb
+        opd_b[op] = opd_b.get(op, 0) + ob
+        wire_b[op] = wire_b.get(op, 0) + wb
+    return CollectiveStats(counts, res_b, opd_b, wire_b)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   wire_bytes_per_device: float, hw: V5E = V5E()) -> dict:
+    """The three §Roofline terms, in seconds (per device == per step since
+    the partitioned module is per-device)."""
+    t_compute = flops_per_device / hw.peak_flops
+    t_memory = bytes_per_device / hw.hbm_bw
+    t_collective = wire_bytes_per_device / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1)
+    return terms

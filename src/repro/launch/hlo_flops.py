@@ -1,0 +1,381 @@
+"""Trip-count-aware FLOP / byte / collective accounting over compiled HLO.
+
+Why this exists: ``compiled.cost_analysis()`` counts every ``while`` body
+ONCE, but our models scan over layer cycles, microbatches and attention
+chunks — so its ``flops`` under-counts by the product of trip counts (24-64x
+observed), and the same defect hides collectives executed inside scan bodies.
+This walker parses the partitioned HLO text and aggregates:
+
+  * flops:  2·M·N·K per dot (operand shapes resolved by name), 1/elem for
+            arithmetic elementwise ops, recursing through fusions / calls /
+            conditionals, and multiplying while bodies by their trip count
+            (parsed from the loop-condition constant).
+  * bytes:  at fusion granularity — sum of (result + operands) for each
+            non-nested op in ENTRY / while bodies.  This approximates HBM
+            traffic the way XLA's own model does (fusion internals stay in
+            registers/VMEM).
+  * collectives: result bytes + estimated wire bytes per op type x trips
+            (replica-group size parsed per op).
+
+All numbers are per device: the partitioned module is the per-device program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# Header params may be tuple-typed (nested parens) — anchor on `-> ... {`.
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=\s*(.*?)\s*([a-z][\w-]*)\((.*)$")
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPERAND = re.compile(r"%([\w.-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.-]+)")
+_COND = re.compile(r"condition=%?([\w.-]+)")
+_BODY = re.compile(r"body=%?([\w.-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_BRACED = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "negate", "abs", "sine", "cosine", "logistic",
+    "floor", "ceil", "round-nearest-afz", "atan2", "remainder", "erf",
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    result_bytes: int
+    shape_dims: tuple[int, ...] | None  # first array shape (dots etc.)
+    opcode: str
+    operands: list[str]
+    tail: str  # raw text after the opcode's '(' (attrs included)
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_result_bytes: float = 0.0
+    dus_update_bytes: float = 0.0  # in-place update slices (aliasing hint)
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "HloStats", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.transcendentals += mult * other.transcendentals
+        self.collective_wire_bytes += mult * other.collective_wire_bytes
+        self.collective_result_bytes += mult * other.collective_result_bytes
+        self.dus_update_bytes += mult * other.dus_update_bytes
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = self.collective_counts.get(k, 0) + mult * v
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "transcendentals": self.transcendentals,
+            "collective_wire_bytes": self.collective_wire_bytes,
+            "collective_result_bytes": self.collective_result_bytes,
+            "collective_counts": {k: float(v) for k, v in
+                                  self.collective_counts.items()},
+        }
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(text: str) -> tuple[int, ...] | None:
+    m = _SHAPE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+def _parse(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur: list[_Instr] | None = None
+    for line in text.splitlines():
+        mstart = _COMP_START.match(line)
+        if mstart and not line.lstrip().startswith("%param"):
+            cur = []
+            comps[mstart.group(1)] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        name, result_txt, opcode, rest = mi.groups()
+        # operands live in the first balanced paren group of `rest`
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_txt = rest[:end]
+        tail = rest[end:]
+        cur.append(_Instr(
+            name=name,
+            result_bytes=_shapes_bytes(result_txt),
+            shape_dims=_first_shape(result_txt),
+            opcode=opcode,
+            operands=_OPERAND.findall(operand_txt),
+            tail=operand_txt + tail,
+        ))
+    return comps
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    """The loop bound is the largest integer constant in the condition."""
+    best = 1
+    for ins in comps.get(cond_name, ()):
+        for m in _CONST_INT.finditer(ins.tail):
+            best = max(best, int(m.group(1)))
+        if ins.opcode == "constant":
+            # operand parens already stripped: tail is e.g. "24)"
+            m = re.search(r"(\d+)", ins.tail)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _group_size(tail: str) -> int:
+    m = _GROUPS_IOTA.search(tail)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACED.search(tail)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+# Dtype-emulation artifacts: XLA:CPU lowers bf16 compute as
+# convert-to-f32 -> f32 op -> convert-back, materializing whole-buffer f32
+# copies of weights and KV caches that the TPU target (native bf16 MXU)
+# never creates.  These opcodes are transparent for byte accounting.
+_TRANSPARENT = ("convert", "bitcast", "copy", "reshape")
+
+
+def _sliced_params(comps: dict, name: str) -> dict[int, int]:
+    """For a fused computation: parameter index -> bytes actually touched,
+    for parameters that are only read through dynamic-slice (or updated via
+    dynamic-update-slice), possibly behind transparent dtype converts.  Used
+    to avoid charging a whole scan-stacked buffer for every iteration."""
+    instrs = comps.get(name, ())
+    by_name = {i.name: i for i in instrs}
+    param_idx: dict[str, int] = {}
+    for ins in instrs:
+        if ins.opcode == "parameter":
+            m = re.search(r"(\d+)", ins.tail)
+            if m:
+                param_idx[ins.name] = int(m.group(1))
+    # Propagate param identity through transparent ops (same element count).
+    alias_of: dict[str, str] = {}
+
+    def root_param(nm: str) -> str | None:
+        seen = set()
+        while nm in alias_of and nm not in seen:
+            seen.add(nm)
+            nm = alias_of[nm]
+        return nm if nm in param_idx else None
+
+    for ins in instrs:
+        if ins.opcode in _TRANSPARENT and ins.operands:
+            alias_of[ins.name] = ins.operands[0]
+    touched: dict[int, int] = {}
+    whole: set[int] = set()
+    for ins in instrs:
+        if ins.opcode in _TRANSPARENT:
+            continue
+        for pos, opnd in enumerate(ins.operands):
+            src = root_param(opnd) or (opnd if opnd in param_idx else None)
+            if src is None:
+                continue
+            idx = param_idx[src]
+            if ins.opcode == "dynamic-slice" and pos == 0:
+                touched[idx] = touched.get(idx, 0) + ins.result_bytes
+            elif ins.opcode == "dynamic-update-slice" and pos == 0:
+                upd = by_name.get(ins.operands[1]) if len(ins.operands) > 1 else None
+                touched[idx] = touched.get(idx, 0) + (upd.result_bytes if upd else 0)
+            else:
+                whole.add(idx)
+    return {i: b for i, b in touched.items() if i not in whole}
+
+
+def _is_transparent_fusion(comps: dict, name: str) -> bool:
+    """True if the fused computation only converts/copies (dtype emulation)."""
+    for ins in comps.get(name, ()):
+        if ins.opcode in ("parameter", "constant", "tuple",
+                          "get-tuple-element") or ins.opcode in _TRANSPARENT:
+            continue
+        return False
+    return True
+
+
+def _comp_stats(comps: dict, name: str, memo: dict, *,
+                top_level: bool) -> HloStats:
+    key = (name, top_level)
+    if key in memo:
+        return memo[key]
+    memo[key] = HloStats()  # cycle guard
+    stats = HloStats()
+    by_name = {i.name: i for i in comps.get(name, ())}
+    for ins in comps.get(name, ()):
+        op = ins.opcode
+        if op == "dot":
+            mC = _LHS_C.search(ins.tail)
+            contract = 1
+            if mC and ins.operands:
+                lhs = by_name.get(ins.operands[0])
+                if lhs is not None and lhs.shape_dims is not None and mC.group(1):
+                    for idx in mC.group(1).split(","):
+                        i = int(idx)
+                        if i < len(lhs.shape_dims):
+                            contract *= lhs.shape_dims[i]
+            out_elems = 1
+            for d in (ins.shape_dims or ()):
+                out_elems *= d
+            stats.flops += 2.0 * out_elems * contract
+            if top_level:
+                stats.bytes += ins.result_bytes + sum(
+                    by_name[o].result_bytes for o in ins.operands
+                    if o in by_name)
+        elif op in _ELEMENTWISE:
+            out_elems = 1
+            for d in (ins.shape_dims or ()):
+                out_elems *= d
+            stats.flops += out_elems
+            if op in ("exponential", "tanh", "log", "logistic", "erf",
+                      "sine", "cosine", "power"):
+                stats.transcendentals += out_elems
+        elif op == "fusion":
+            mc = _CALLS.search(ins.tail)
+            inner = None
+            sliced: dict[int, int] = {}
+            if mc:
+                inner = _comp_stats(comps, mc.group(1), memo, top_level=False)
+                stats.add(inner)
+                sliced = _sliced_params(comps, mc.group(1))
+            if top_level:
+                if mc and _is_transparent_fusion(comps, mc.group(1)):
+                    continue  # dtype-emulation fusion: no TPU traffic
+                reads = 0
+                for idx, opnd in enumerate(ins.operands):
+                    b = by_name[opnd].result_bytes if opnd in by_name else 0
+                    reads += sliced.get(idx, b)
+                if inner is not None and inner.dus_update_bytes > 0 and \
+                        ins.result_bytes > 2 * inner.dus_update_bytes:
+                    # root is an in-place slab update: write = the slice
+                    writes = inner.dus_update_bytes
+                else:
+                    writes = ins.result_bytes
+                stats.bytes += reads + writes
+        elif op == "while":
+            mb, mcond = _BODY.search(ins.tail), _COND.search(ins.tail)
+            trips = _trip_count(comps, mcond.group(1)) if mcond else 1
+            if mb:
+                body = _comp_stats(comps, mb.group(1), memo, top_level=True)
+                stats.add(body, mult=trips)
+        elif op == "conditional":
+            mbr = _BRANCHES.search(ins.tail)
+            if mbr:
+                branches = _OPERAND.findall(mbr.group(1))
+                if branches:
+                    subs = [_comp_stats(comps, b, memo, top_level=top_level)
+                            for b in branches]
+                    best = max(subs, key=lambda s: s.flops)
+                    stats.add(best)
+        elif op in ("call", "async-start"):
+            mc = _CALLS.search(ins.tail)
+            if mc:
+                stats.add(_comp_stats(comps, mc.group(1), memo,
+                                      top_level=top_level))
+        elif any(op.startswith(c) for c in _COLLECTIVES) and \
+                not op.endswith("-done"):
+            base = next(c for c in _COLLECTIVES if op.startswith(c))
+            k = _group_size(ins.tail)
+            rb = ins.result_bytes
+            if base == "all-reduce":
+                wb = 2.0 * rb * (k - 1) / k
+            elif base == "all-gather":
+                wb = rb * (k - 1) / k
+            elif base == "reduce-scatter":
+                wb = float(rb * (k - 1))
+            elif base == "all-to-all":
+                wb = rb * (k - 1) / k
+            else:  # collective-permute
+                wb = float(rb)
+            stats.collective_wire_bytes += wb
+            stats.collective_result_bytes += rb
+            stats.collective_counts[base] = \
+                stats.collective_counts.get(base, 0) + 1
+            if top_level:
+                stats.bytes += 2 * rb
+        elif op == "dynamic-update-slice":
+            # In-place update: traffic is the slice (read+write), not the
+            # aliased full buffer — critical for scan-stacked caches where
+            # the full-buffer convention over-counts by the trip count.
+            upd = by_name.get(ins.operands[1]) if len(ins.operands) > 1 else None
+            upd_b = upd.result_bytes if upd else 0
+            stats.dus_update_bytes += upd_b
+            if top_level:
+                stats.bytes += 2 * upd_b
+        elif top_level and op not in ("parameter", "constant", "tuple",
+                                      "get-tuple-element", "bitcast",
+                                      "convert", "copy", "reshape"):
+            stats.bytes += ins.result_bytes
+    memo[key] = stats
+    return stats
+
+
+def analyze_hlo(text: str) -> HloStats:
+    comps = _parse(text)
+    # entry computation: the one named on the ENTRY line
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_START.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: the largest computation
+        entry = max(comps, key=lambda k: len(comps[k]))
+    return _comp_stats(comps, entry, {}, top_level=True)

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set XLA_FLAGS
+*before* the first jax device query, and smoke tests must keep seeing one
+CPU device.
+
+Mesh topology (TPU v5e pods):
+  single-pod:  (data=16, model=16)           — 256 chips
+  multi-pod:   (pod=2, data=16, model=16)    — 512 chips; "pod" is an outer
+               DP axis whose gradient all-reduce crosses the inter-pod links
+               (DCN/optical); the dry-run proves the partitioner threads it.
+The sharding rule engine (runtime.sharding) is axis-name driven, so larger
+meshes (more pods, separate "expert"/"seq" axes) need no model-code changes.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = ((16, 16), ("data", "model"))
+MULTI_POD = ((2, 16, 16), ("pod", "data", "model"))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,99 @@
+"""Serving driver: batched prefill + decode against a KV/state cache.
+
+Demonstrates the inference path end-to-end on any backend:
+  * batched prefill over the prompt,
+  * cache conversion to the decode layout (ring placement for windowed
+    layers, KV-head repeat to the TP degree),
+  * token-by-token decode with greedy or temperature sampling.
+
+Usage (CPU example — reduced recurrentgemma, hybrid cache):
+  PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma-2b \
+      --scale-down --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import lm_batch
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_decode_step, make_prefill, prepare_decode_cache
+from repro.models.transformer import init_params, num_params
+from repro.runtime import kv_repeat_for_mesh
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--tt", action="store_true")
+    ap.add_argument("--scale-down", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.scale_down:
+        cfg = cfg.scaled_down()
+    if args.tt:
+        cfg = cfg.with_tt(mode="tt", rank=16, embed_rank=16)
+    mesh = make_host_mesh()
+    kvr = kv_repeat_for_mesh(cfg, mesh)
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    print(f"[serve] arch={cfg.name} tt={cfg.tt.mode} "
+          f"params={num_params(params):,} kv_repeat={kvr}")
+
+    B, P = args.batch, args.prompt_len
+    max_len = P + args.gen
+    prompts = lm_batch(args.seed, 0, B, P, cfg.vocab_size)["tokens"]
+    batch = {"tokens": jnp.asarray(prompts)}
+    if cfg.frontend == "patch":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(1), (B, min(cfg.frontend_len, P), cfg.d_model),
+            jnp.dtype(cfg.dtype))
+
+    prefill = jax.jit(make_prefill(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    t0 = time.time()
+    last_logits, pcache = prefill(params, batch)
+    cache = prepare_decode_cache(cfg, pcache, P, max_len, kv_repeat=kvr)
+    t_prefill = time.time() - t0
+
+    def sample(logits, key):
+        logits = logits[:, -1, : cfg.vocab_size].astype(jnp.float32)
+        if args.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / args.temperature, axis=-1)[:, None].astype(jnp.int32)
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    tok = sample(last_logits, key)
+    out_tokens = [np.asarray(tok)]
+    t1 = time.time()
+    for i in range(args.gen - 1):
+        key, sub = jax.random.split(key)
+        logits, cache = decode(params, cache, tok, jnp.asarray(P + i, jnp.int32))
+        tok = sample(logits, sub)
+        out_tokens.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t1
+    gen = np.concatenate(out_tokens, axis=1)
+    print(f"[serve] prefill {B}x{P} in {t_prefill*1e3:.0f} ms; "
+          f"decoded {args.gen} tokens in {t_decode*1e3:.0f} ms "
+          f"({args.gen * B / max(t_decode, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample generation (batch 0): {gen[0][:16].tolist()}")
+    assert np.isfinite(gen).all()
+    return {"tokens": gen, "t_prefill": t_prefill, "t_decode": t_decode}
+
+
+if __name__ == "__main__":
+    main()

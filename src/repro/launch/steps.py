@@ -1,0 +1,273 @@
+"""Step-function builders: train_step / prefill / decode, + dry-run inputs.
+
+These close over (cfg, optimizer) and expose pure functions ready for
+``jax.jit`` with explicit in/out shardings (derived by runtime.sharding).
+The same builders serve the CPU examples (tiny configs, host mesh) and the
+512-chip dry-run (full configs, production mesh) — there is no separate
+"distributed" code path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import cache_struct, forward, loss_fn
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+__all__ = [
+    "make_train_step", "make_prefill", "make_decode_step",
+    "make_inputs", "abstract_train_state", "prepare_decode_cache",
+]
+
+
+# ---------------------------------------------------------------------------
+# Training.
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
+                    clip_norm: float = 1.0, remat: bool = True,
+                    batch_constraint=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` accumulates gradients over leading batch splits in a
+    scan; XLA overlaps each microbatch's DP all-reduce with the next
+    microbatch's backward (the grads are produced inside the scan body).
+
+    ``batch_constraint`` (optional): applied to the reshaped
+    ``(microbatches, B/mb, ...)`` batch — the reshape has no sharding
+    lineage for its new leading axis, so without an explicit constraint
+    GSPMD may drop the DP sharding of the per-microbatch batch (observed:
+    16x activation memory on the 400B MoE cell).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, cfg, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            if batch_constraint is not None:
+                mb = batch_constraint(mb)
+            # Derive the f32 accumulator FROM params (p * 0) so it inherits
+            # the parameter sharding — a bare jnp.zeros has no sharding
+            # lineage and GSPMD may replicate 400B-class f32 accumulators.
+            acc0 = jax.tree.map(
+                lambda p: (p * 0).astype(jnp.float32), params)
+
+            def body(acc, one):
+                l, g = grads_of(params, one)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(body, acc0, mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = losses.mean()
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+        params, opt_state = opt.update(grads, params, opt_state,
+                                       opt_state["step"])
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_ddp_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
+                        compress: bool = True, clip_norm: float = 1.0):
+    """Pure data-parallel step via shard_map with an int8 ring all-reduce.
+
+    The natural pairing for the paper's technique: TT params are MBs and
+    replicate for free, so DP is the whole story — and the gradient
+    all-reduce (already 30-52x smaller from compression of the *model*)
+    travels int8 with error feedback (runtime/compress.py) for another 4x.
+
+    State: (params, opt_state, ef_residuals).  Returns a jitted callable
+    ``(params, opt_state, ef, batch) -> (params, opt_state, ef, metrics)``.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime.compress import compressed_allreduce_mean, ef_compress_tree
+
+    def step(params, opt_state, ef, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if compress:
+            grads, ef = ef_compress_tree(grads, ef)
+            grads = jax.tree.map(
+                lambda g: compressed_allreduce_mean(g, "data"), grads)
+        else:
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g, "data"), grads)
+        loss = jax.lax.pmean(loss, "data")
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.zeros(())
+        params, opt_state = opt.update(grads, params, opt_state,
+                                       opt_state["step"])
+        return params, opt_state, ef, {"loss": loss, "grad_norm": gnorm}
+
+    rep = P()
+    batch_spec = P("data")
+    mapped = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(rep, rep, rep, batch_spec),
+        out_specs=(rep, rep, rep, rep),
+        check_vma=False,  # ring ppermute breaks the replication checker
+    )
+    return jax.jit(mapped, donate_argnums=(0, 1, 2))
+
+
+def abstract_train_state(cfg: ModelConfig, opt: Optimizer):
+    """(params, opt_state) as ShapeDtypeStructs — dry-run stand-ins."""
+    from repro.models.transformer import init_params
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt_state = jax.eval_shape(opt.init, params)
+    return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# Serving.
+# ---------------------------------------------------------------------------
+
+
+def make_prefill(cfg: ModelConfig):
+    """(params, batch) -> (last_logits (B, 1, Vp), cache)."""
+
+    def prefill(params, batch):
+        logits, cache = forward(params, cfg, batch["tokens"],
+                                patches=batch.get("patches"),
+                                mode="prefill", remat=False)
+        return logits[:, -1:, :], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, cache, tokens (B,1), pos ()) -> (logits (B,1,Vp), cache)."""
+
+    def decode_step(params, cache, tokens, pos):
+        logits, new_cache = forward(params, cfg, tokens, cache=cache,
+                                    mode="decode", pos=pos, remat=False)
+        return logits, new_cache
+
+    return decode_step
+
+
+def prepare_decode_cache(cfg: ModelConfig, prefill_cache: Any, prefill_len: int,
+                         max_len: int, *, kv_repeat: int = 1) -> Any:
+    """Convert a prefill cache into the decode layout.
+
+    Attention KV: repeat heads to the TP degree, place into a zeroed
+    ``max_len`` buffer (ring placement for windowed layers).  SSM / RG-LRU
+    states come out of prefill already decode-ready and pass through.
+    """
+    def fix(leaf):
+        if not isinstance(leaf, dict):
+            return leaf
+        return leaf
+
+    def fix_kv(k: jax.Array, window: int | None) -> jax.Array:
+        B, S, KV, dh = k.shape
+        if kv_repeat > 1:
+            k = jnp.repeat(k, kv_repeat, axis=2)
+            KV *= kv_repeat
+        if window is None:
+            buf = jnp.zeros((B, max_len, KV, dh), k.dtype)
+            return jax.lax.dynamic_update_slice(buf, k, (0, 0, 0, 0))
+        w = min(window, max_len)
+        buf = jnp.zeros((B, w, KV, dh), k.dtype)
+        take = min(S, w)
+        tail = k[:, S - take:, :, :]
+        slots = (jnp.arange(S - take, S) % w)
+        return buf.at[:, slots].set(tail)
+
+    def walk(tree, kinds):
+        out = []
+        for blk, kind in zip(tree, kinds):
+            if blk is None:
+                out.append(None)
+            elif "k" in blk and "v" in blk:
+                window = cfg.window if kind == "attn_local" else None
+                out.append({"k": fix_kv(blk["k"], window),
+                            "v": fix_kv(blk["v"], window)})
+            else:
+                out.append(fix(blk))
+        return tuple(out)
+
+    pat = cfg.hybrid_pattern
+    n_cycles = cfg.num_layers // len(pat)
+    tail_kinds = pat[: cfg.num_layers - n_cycles * len(pat)]
+    new = {"layers": None, "tail": ()}
+    if prefill_cache["layers"] is not None:
+        # stacked leaves have a leading cycle dim — vmap the fix over it
+        def fix_stacked(blk, kind):
+            if blk is None:
+                return None
+            if isinstance(blk, dict) and "k" in blk:
+                window = cfg.window if kind == "attn_local" else None
+                return {"k": jax.vmap(lambda a: fix_kv(a, window))(blk["k"]),
+                        "v": jax.vmap(lambda a: fix_kv(a, window))(blk["v"])}
+            return blk
+        new["layers"] = tuple(
+            fix_stacked(blk, kind)
+            for blk, kind in zip(prefill_cache["layers"], pat))
+    new["tail"] = walk(prefill_cache["tail"], tail_kinds)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Dry-run inputs (ShapeDtypeStruct stand-ins; no allocation).
+# ---------------------------------------------------------------------------
+
+
+def make_inputs(cfg: ModelConfig, shape: ShapeConfig, *,
+                kv_repeat: int = 1) -> dict:
+    """Abstract inputs for one (arch x shape) cell.
+
+    train:   {batch: {tokens, labels, mask [, patches]}}
+    prefill: {batch: {tokens [, patches]}}
+    decode:  {cache, tokens (B, 1), pos ()}   (serve_step: one new token
+             against a seq_len cache — never a train_step)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+        if cfg.frontend == "patch":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "patch":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "decode":
+        cache = cache_struct(cfg, B, S, kv_repeat=kv_repeat)
+        return {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,21 @@
+"""Model zoo: unified scanned decoder covering all assigned families."""
+from .transformer import (
+    CacheLeaf,
+    block_apply,
+    block_init,
+    cache_descriptors,
+    cache_struct,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    map_cache,
+    num_params,
+    param_bytes,
+)
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "init_cache", "cache_struct",
+    "map_cache", "cache_descriptors", "CacheLeaf",
+    "block_init", "block_apply", "num_params", "param_bytes",
+]

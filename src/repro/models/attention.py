@@ -1,0 +1,136 @@
+"""Attention: double-blocked (flash-style) causal/windowed attention + decode.
+
+Training/prefill attention is computed blockwise with an online-softmax scan
+over KV chunks inside a scan over Q chunks, so the score matrix never
+materializes beyond ``(B, kv_heads, groups, q_chunk, kv_chunk)`` — required
+for the 32k-prefill cells to fit HBM.  GQA is handled by folding query heads
+as ``(kv_heads, group)`` so no KV repeat is materialized in training.
+
+Decode attends a single query position against a (possibly ring-buffered)
+KV cache; KV heads are repeated to the TP degree at cache-layout time by the
+caller when ``n_kv < model-axis`` (see runtime.sharding).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["blockwise_attention", "decode_attention"]
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        q_chunk: int = 512, kv_chunk: int = 512,
+                        q_offset: int = 0) -> jax.Array:
+    """``q (B, S, H, D); k, v (B, S, KV, D) -> (B, S, H, D)``.
+
+    ``window``: restrict to a trailing window of that many positions
+    (sliding-window / local attention).  ``q_offset``: absolute position of
+    q[0] (for chunked prefill against earlier KV).
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    s_kv_real = k.shape[1]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, s_kv_real)
+    # Pad ragged sequence lengths up to the chunk grid; padded KV positions
+    # are masked out below (kpos >= s_kv_real), padded Q rows are sliced off.
+    s_pad = (-S) % q_chunk
+    kv_pad = (-s_kv_real) % kv_chunk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+    if kv_pad:
+        k = jnp.pad(k, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kv_pad), (0, 0), (0, 0)))
+    s_q = S + s_pad
+    nq = s_q // q_chunk
+    nk = k.shape[1] // kv_chunk
+
+    # (B, S, KV, G, D): queries grouped under their KV head.
+    qg = q.reshape(B, s_q, KV, G, D)
+    q_chunks = qg.reshape(B, nq, q_chunk, KV, G, D).transpose(1, 0, 2, 3, 4, 5)
+    k_chunks = k.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    v_chunks = v.reshape(B, nk, kv_chunk, KV, D).transpose(1, 0, 2, 3, 4)
+
+    def q_block(iq, qc):
+        # online softmax over kv chunks
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        acc0 = jnp.zeros((B, KV, G, q_chunk, D), jnp.float32)
+        qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            jk, kc, vc = inp
+            kpos = jk * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.broadcast_to(kpos[None, :] < s_kv_real,
+                                    (q_chunk, kv_chunk))
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            # p downcast to the KV dtype for the MXU; f32 accumulation.
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (jnp.arange(nk), k_chunks, v_chunks))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, G, q_chunk, D) -> (B, q_chunk, KV, G, D)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), q_chunks))
+    # (nq, B, q_chunk, KV, G, D) -> (B, S, H, D); padded Q rows sliced off
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, s_q, H, D)
+    return out[:, :S].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_pos: jax.Array, *, window: int | None = None) -> jax.Array:
+    """One-token attention against a cache.
+
+    ``q (B, 1, H, D)``; ``k_cache, v_cache (B, Smax, KV, D)``; ``cur_pos``
+    scalar: number of valid cache entries *including* the current token
+    (caller inserts the current k/v before attending).  With ``window`` the
+    cache is a ring buffer of size ``Smax = window`` written at
+    ``pos % window``; masking handles partial fill.
+    """
+    B, _, H, D = q.shape
+    S = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(S)
+    if window is None:
+        valid = idx < cur_pos
+    else:
+        # ring buffer: slots [cur_pos - window, cur_pos) are valid
+        valid = (idx < cur_pos) | (cur_pos > S)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # AV product in cache dtype with f32 accumulation (MXU-native): an f32
+    # upcast of v_cache would materialize a full-cache copy — XLA hoists it
+    # out of the layer scan, costing 3x the true decode HBM traffic
+    # (EXPERIMENTS.md §Perf iteration 1).
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

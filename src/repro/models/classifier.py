@@ -1,0 +1,83 @@
+"""ATIS task heads (paper Fig. 2 / Table II): intent + slot classifiers.
+
+The paper's classifier is "one or more linear layers followed by a non-linear
+activation" applied to the [CLS] hidden state, with the pre-classifier
+(768, 768) projection TT-compressed at rank 12 and the *last task-specific
+linear kept uncompressed* (Sec. III-A).  We reproduce that structure for both
+heads of the ATIS multi-task setup:
+
+  intent: h[CLS] -> TT(768,768) -> tanh -> dense(768, 26)
+  slots:  h[t]   -> TT(768,768) -> tanh -> dense(768, 120)   (per position)
+
+The joint loss is the sum of the two cross-entropies (both tasks train
+simultaneously, as in the paper's Fig. 13 curves).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import linear_apply, make_linear
+from repro.models.transformer import forward
+
+__all__ = ["atis_heads_init", "atis_forward", "atis_loss", "atis_metrics"]
+
+
+def atis_heads_init(key: jax.Array, cfg: ModelConfig, num_intents: int,
+                    num_slots: int) -> dict:
+    ks = jax.random.split(key, 4)
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+
+    def dense(k, out_dim, in_dim):
+        std = (2.0 / (in_dim + out_dim)) ** 0.5
+        return {
+            "w": jax.random.normal(k, (out_dim, in_dim), dtype) * jnp.asarray(std, dtype),
+            "b": jnp.zeros((out_dim,), dtype),
+        }
+
+    return {
+        # pre-classifier projections: TT when cfg.tt covers the classifier
+        "intent_proj": make_linear(ks[0], d, d, cfg, "ffn"),
+        "slot_proj": make_linear(ks[1], d, d, cfg, "ffn"),
+        # task-specific last linears: uncompressed per the paper
+        "intent_out": dense(ks[2], num_intents, d),
+        "slot_out": dense(ks[3], num_slots, d),
+    }
+
+
+def atis_forward(params: dict, cfg: ModelConfig, tokens: jax.Array):
+    """Returns (intent_logits (B, I), slot_logits (B, S, L))."""
+    h, _ = forward(params["backbone"], cfg, tokens, mode="train",
+                   features_only=True, remat=False)
+    flow = cfg.tt.flow
+    cls = h[:, 0, :]  # position 0 acts as [CLS]
+    hi = jnp.tanh(linear_apply(params["heads"]["intent_proj"], cls, flow=flow))
+    io = params["heads"]["intent_out"]
+    intent_logits = jnp.einsum("bd,cd->bc", hi, io["w"]) + io["b"]
+    hs = jnp.tanh(linear_apply(params["heads"]["slot_proj"], h, flow=flow))
+    so = params["heads"]["slot_out"]
+    slot_logits = jnp.einsum("bsd,cd->bsc", hs, so["w"]) + so["b"]
+    return intent_logits, slot_logits
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def atis_loss(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    il, sl = atis_forward(params, cfg, batch["tokens"])
+    return _xent(il, batch["intent"]) + _xent(sl, batch["slots"])
+
+
+def atis_metrics(params: dict, cfg: ModelConfig, batch: dict) -> dict:
+    il, sl = atis_forward(params, cfg, batch["tokens"])
+    return {
+        "loss": atis_loss(params, cfg, batch),
+        "intent_acc": (il.argmax(-1) == batch["intent"]).mean(),
+        "slot_acc": (sl.argmax(-1) == batch["slots"]).mean(),
+    }

@@ -1,0 +1,172 @@
+"""Shared layer library: unified (dense | TT) linear, norms, RoPE, MLP, embeds.
+
+Every projection in the model zoo goes through ``make_linear``/``linear_apply``
+so the paper's technique is a config knob, not a code fork: with
+``tt.on(part)`` the projection is TT cores executed with the configured
+contraction flow; otherwise a dense matrix (the paper's MM baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.meshctx import constrain
+from repro.core.tt_linear import TTLinearParams, tt_linear_apply, tt_linear_init
+from repro.core.ttm_embedding import (
+    TTMEmbeddingParams,
+    ttm_embedding_apply,
+    ttm_embedding_init,
+)
+
+__all__ = [
+    "DenseLinearParams", "make_linear", "linear_apply",
+    "rms_norm", "layer_norm", "rope", "rope_slice",
+    "make_mlp", "mlp_apply",
+    "make_embedding", "embedding_apply",
+]
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class DenseLinearParams:
+    w: jax.Array            # (out, in)
+    bias: jax.Array | None
+
+    def tree_flatten_with_keys(self):
+        return ((jax.tree_util.GetAttrKey("w"), self.w),
+                (jax.tree_util.GetAttrKey("bias"), self.bias)), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_linear(key: jax.Array, out_dim: int, in_dim: int, cfg: ModelConfig,
+                part: str, *, use_bias: bool = False, dtype=None):
+    """Dense or TT linear depending on ``cfg.tt.on(part)``."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if cfg.tt.on(part):
+        return tt_linear_init(key, out_dim, in_dim, d=cfg.tt.d,
+                              rank=cfg.tt.rank, use_bias=use_bias, dtype=dtype,
+                              clamp_ranks=cfg.tt.clamp_ranks)
+    std = (2.0 / (in_dim + out_dim)) ** 0.5
+    w = jax.random.normal(key, (out_dim, in_dim), dtype) * jnp.asarray(std, dtype)
+    bias = jnp.zeros((out_dim,), dtype) if use_bias else None
+    return DenseLinearParams(w=w, bias=bias)
+
+
+def linear_apply(params, x: jax.Array, *, flow: str = "btt_fused") -> jax.Array:
+    if isinstance(params, TTLinearParams):
+        return tt_linear_apply(params, x, flow=flow)
+    y = jnp.einsum("...n,mn->...m", x, params.w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if params.bias is not None:
+        y = y + params.bias
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back).
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding.  ``x (B, S, H, D)``, ``positions (B, S)``."""
+    freqs = _rope_freqs(x.shape[-1], theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_slice(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Decode-time rotary for a single position. ``x (B, 1, H, D)``, ``pos (B,)``."""
+    return rope(x, pos[:, None], theta)
+
+
+# ---------------------------------------------------------------------------
+# MLP: SwiGLU (gated) or GELU (paper's FFN).
+# ---------------------------------------------------------------------------
+
+
+def make_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None,
+             part: str = "ffn") -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": make_linear(ks[0], d_ff, cfg.d_model, cfg, part),
+        "down": make_linear(ks[1], cfg.d_model, d_ff, cfg, part),
+    }
+    if cfg.mlp_gated:
+        p["gate"] = make_linear(ks[2], d_ff, cfg.d_model, cfg, part)
+    return p
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    flow = cfg.tt.flow
+    # Megatron cut point: the hidden dim shards on "model".  Dense weights
+    # give GSPMD this lineage for free; TT factors are REPLICATED, so an
+    # explicit constraint is required or the whole FFN replicates 16x
+    # (EXPERIMENTS.md §Perf, technique-cell iteration).
+    up = constrain(linear_apply(p["up"], x, flow=flow),
+                   ("pod", "data"), None, "model")
+    if cfg.mlp_gated:
+        gate = constrain(linear_apply(p["gate"], x, flow=flow),
+                         ("pod", "data"), None, "model")
+        act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(up) if cfg.act == "gelu" else jax.nn.silu(up)
+    return linear_apply(p["down"], h, flow=flow)
+
+
+# ---------------------------------------------------------------------------
+# Embedding: dense table or TTM cores.
+# ---------------------------------------------------------------------------
+
+
+def make_embedding(key: jax.Array, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.tt.on("embed"):
+        return ttm_embedding_init(key, cfg.vocab_padded, cfg.d_model,
+                                  d=cfg.tt.d, rank=cfg.tt.embed_rank,
+                                  dtype=dtype)
+    table = jax.random.normal(key, (cfg.vocab_padded, cfg.d_model), dtype) * 0.02
+    return {"table": table}
+
+
+def embedding_apply(params, ids: jax.Array) -> jax.Array:
+    if isinstance(params, TTMEmbeddingParams):
+        return ttm_embedding_apply(params, ids)
+    return jnp.take(params["table"], ids, axis=0)

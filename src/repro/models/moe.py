@@ -1,0 +1,165 @@
+"""Mixture-of-Experts layer: top-k routing, capacity dispatch, TT experts.
+
+Dispatch is gather/scatter based (not one-hot-einsum) so HLO FLOPs reflect
+useful work: tokens are assigned slot positions inside their expert via a
+cumsum over the assignment one-hot, gathered into an ``(E, C, D)`` buffer,
+run through per-expert FFNs (dense or TT-compressed — the paper's technique
+applied to MoE: per-expert weight state shrinks ~20x, see DESIGN.md), and
+scattered back weighted by router gates.  Tokens beyond capacity are dropped
+(Switch-style); capacity_factor controls the trade.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.meshctx import constrain
+from repro.core.tt_linear import TTLinearParams, tt_linear_apply, tt_linear_init
+from repro.models.layers import make_linear, make_mlp, mlp_apply
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def _expert_linear_init(key, e: int, out_dim: int, in_dim: int, cfg: ModelConfig):
+    if cfg.tt.on("ffn"):
+        return jax.vmap(
+            lambda k: tt_linear_init(k, out_dim, in_dim, d=cfg.tt.d,
+                                     rank=cfg.tt.rank, dtype=jnp.dtype(cfg.dtype),
+                                     clamp_ranks=cfg.tt.clamp_ranks)
+        )(jax.random.split(key, e))
+    std = (2.0 / (in_dim + out_dim)) ** 0.5
+    w = jax.random.normal(key, (e, out_dim, in_dim), jnp.dtype(cfg.dtype))
+    return {"w": w * jnp.asarray(std, w.dtype)}
+
+
+def _expert_linear_apply(params, x: jax.Array, flow: str) -> jax.Array:
+    """``x (E, C, in) -> (E, C, out)`` batched over experts."""
+    if isinstance(params, TTLinearParams):
+        return jax.vmap(lambda p, xe: tt_linear_apply(p, xe, flow=flow))(params, x)
+    return jnp.einsum("ecd,efd->ecf", x, params["w"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    e_pad = m.padded_experts  # dummy experts (never routed) for clean EP
+    ks = jax.random.split(key, 5)
+    dtype = jnp.dtype(cfg.dtype)
+    p = {
+        # Router stays dense & f32-critical: it is tiny and routing quality is
+        # precision-sensitive.  Router covers only REAL experts.
+        "router": jax.random.normal(ks[0], (m.num_experts, cfg.d_model), dtype) * 0.02,
+        "up": _expert_linear_init(ks[1], e_pad, m.d_expert, cfg.d_model, cfg),
+        "gate": _expert_linear_init(ks[2], e_pad, m.d_expert, cfg.d_model, cfg),
+        "down": _expert_linear_init(ks[3], e_pad, cfg.d_model, m.d_expert, cfg),
+    }
+    if m.shared_d_ff:
+        p["shared"] = make_mlp(ks[4], cfg, d_ff=m.shared_d_ff)
+    return p
+
+
+def _experts_fsdp(p: dict) -> bool:
+    """Mirrors runtime.sharding._EXPERT_FSDP_BYTES: big dense expert stacks
+    are FSDP-sharded over data; activation pins would fight that layout."""
+    from repro.core.meshctx import current_mesh
+    mesh = current_mesh()
+    if mesh is None or isinstance(p["up"], TTLinearParams):
+        return False
+    w = p["up"]["w"]  # per-layer slice; the runtime rule sees the L-stacked
+    tp = mesh.shape.get("model", 1)  # leaf, so compare at ~1/32 the threshold
+    return (w.size * w.dtype.itemsize) // max(tp, 1) > (64 << 20)
+
+
+def _route(xf: jax.Array, router: jax.Array, k: int):
+    """Router top-k.  ``xf (..., T, D)`` -> (gates (..., T, k), idx (..., T, k))."""
+    logits = jnp.einsum("...td,ed->...te", xf, router,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    return gate_vals, expert_idx
+
+
+def _moe_grouped(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """GShard-style grouped dispatch: one group per sequence.
+
+    Routing, position-in-expert and the gather/scatter all happen *within* a
+    group, so with batch sharded over DP every dispatch op stays local to its
+    data shard; the only cross-shard movement is the (G, E, C, D)->(E, G*C, D)
+    transpose feeding the model-sharded experts — which GSPMD lowers to the
+    canonical MoE all-to-all (visible in the §Roofline collective table).
+    Capacity is per group: C = ceil(S * k / E * cf).
+    """
+    m = cfg.moe
+    flow = cfg.tt.flow
+    G, S, D = x.shape  # group per sequence
+    E, k = m.padded_experts, m.top_k  # dispatch over the padded expert dim
+    cap = int(math.ceil(S * k / m.num_experts * m.capacity_factor))
+
+    gate_vals, expert_idx = _route(x, p["router"], k)            # (G, S, k)
+    flat_e = expert_idx.reshape(G, S * k)
+    flat_g = gate_vals.reshape(G, S * k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)[None], (G, S * k))
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (G, S*k, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1  # (G, S*k)
+    keep = pos_in_e < cap
+    pos_w = jnp.where(keep, pos_in_e, cap)                       # cap = drop slot
+
+    gi = jnp.arange(G, dtype=jnp.int32)[:, None]
+    dispatch = jnp.full((G, E, cap + 1), S, jnp.int32)
+    dispatch = dispatch.at[gi, flat_e, pos_w].set(flat_tok)[:, :, :cap]
+    combine = jnp.zeros((G, E, cap + 1), jnp.float32)
+    combine = combine.at[gi, flat_e, pos_w].set(flat_g)[:, :, :cap]
+
+    x_pad = jnp.concatenate([x, jnp.zeros((G, 1, D), x.dtype)], axis=1)
+    xg = jnp.take_along_axis(
+        x_pad, dispatch.reshape(G, E * cap)[..., None], axis=1)  # (G, E*cap, D)
+    xg = xg.reshape(G, E, cap, D).transpose(1, 0, 2, 3)          # all-to-all
+    # EP cut point: experts on "model", token groups stay on DP — the
+    # transpose+reshape has no lineage for either (see layers.py note).
+    # Skipped for FSDP-sharded (400B-class) expert stacks: there GSPMD's own
+    # layout around the weight all-gathers wins (measured, §Perf iter. 3).
+    pin = not _experts_fsdp(p)
+    if pin:
+        xg = constrain(xg.reshape(E, G * cap, D),
+                       "model", ("pod", "data"), None)
+    else:
+        xg = xg.reshape(E, G * cap, D)
+
+    up = _expert_linear_apply(p["up"], xg, flow)
+    gate = _expert_linear_apply(p["gate"], xg, flow)
+    h = jax.nn.silu(gate) * up
+    yg = _expert_linear_apply(p["down"], h, flow)                # (E, G*cap, D)
+
+    yg = yg.reshape(E, G, cap, D).transpose(1, 0, 2, 3)          # all-to-all back
+    if pin:
+        yg = constrain(yg, ("pod", "data"), "model", None, None)
+    yg = yg * combine[..., None].astype(yg.dtype)                # (G, E, cap, D)
+    y = jnp.zeros((G, S + 1, D), yg.dtype)
+    y = y.at[gi[..., None], dispatch].add(yg)[:, :S]
+    return y
+
+
+def _moe_global(p: dict, xf: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Single-group dispatch over all T tokens (decode: T is tiny)."""
+    m = cfg.moe
+    T, D = xf.shape
+    y = _moe_grouped(p, xf[None], cfg)[0]
+    del T, D, m
+    return y
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """``x (B, S, D) -> (B, S, D)``."""
+    B, S, D = x.shape
+    if S > 1:
+        y = _moe_grouped(p, x, cfg)                              # group = sequence
+    else:
+        y = _moe_global(p, x.reshape(B * S, D), cfg).reshape(B, S, D)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y.reshape(B, S, D)

@@ -1,0 +1,276 @@
+"""Sequence mixers without attention: Mamba-2 SSD and Griffin's RG-LRU.
+
+Both give the `long_500k` cells their sub-quadratic justification: decode
+state is O(d_state) per layer regardless of history length.
+
+Mamba-2 follows the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060]: intra-chunk quadratic term + inter-chunk recurrence on
+(H, P, N) states, scanned over chunks.  RG-LRU follows Griffin
+[arXiv:2402.19427] with a log-space associative scan over the sequence.
+All weight projections route through ``make_linear`` so the paper's TT
+compression applies to these families too (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.meshctx import constrain
+from repro.models.layers import linear_apply, make_linear
+
+__all__ = [
+    "causal_conv", "causal_conv_step",
+    "mamba2_init", "mamba2_apply",
+    "rglru_init", "rglru_apply",
+]
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (the short conv both families use).
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """``x (B, L, C), kernel (W, C) -> (B, L, C)`` causal depthwise conv."""
+    w = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    # accumulate shifted copies — W is tiny (4), cheaper than conv lowering
+    out = jnp.zeros_like(x, shape=x.shape)
+    for i in range(w):
+        out = out + xp[:, i : i + x.shape[1], :] * kernel[i]
+    return out
+
+
+def causal_conv_step(x_new: jax.Array, conv_state: jax.Array,
+                     kernel: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single decode step.  ``x_new (B, C)``, ``conv_state (B, W-1, C)``."""
+    w = kernel.shape[0]
+    full = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, kernel)
+    return y, full[:, -(w - 1):, :] if w > 1 else conv_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD).
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    conv_dim = d_in + 2 * s.d_state
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "zx_proj": make_linear(ks[0], 2 * d_in, cfg.d_model, cfg, "attn"),
+        "bc_proj": make_linear(ks[1], 2 * s.d_state, cfg.d_model, cfg, "attn_small"),
+        "dt_proj": make_linear(ks[2], h, cfg.d_model, cfg, "attn_small"),
+        "conv_kernel": jax.random.normal(ks[3], (s.d_conv, conv_dim), dtype) * 0.2,
+        "A_log": jnp.zeros((h,), jnp.float32) + jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "gate_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": make_linear(ks[4], cfg.d_model, d_in, cfg, "attn"),
+    }
+
+
+def _segsum_decay(da_chunk: jax.Array) -> jax.Array:
+    """Within-chunk decay matrix ``L[i, j] = exp(sum_{j<t<=i} dA_t)``, i >= j.
+
+    ``da_chunk (..., Q) -> (..., Q, Q)`` lower-triangular (else 0).
+    """
+    q = da_chunk.shape[-1]
+    cs = jnp.cumsum(da_chunk, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # cs_i - cs_j
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # Mask the *exponent* (not the value): exp of a huge masked entry would
+    # be inf and poison the backward pass through the where.
+    diff = jnp.where(mask, diff, -jnp.inf)
+    return jnp.exp(diff)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """SSD scan.  Shapes: ``x (B,L,H,P)``, ``dt (B,L,H)``, ``a (H,)``,
+    ``b, c (B,L,N)`` (single group).  Returns ``(y (B,L,H,P), h_last (B,H,P,N))``.
+    """
+    B, L, H, P = x.shape
+    N = b.shape[-1]
+    nc = L // chunk
+    assert nc * chunk == L, "chunk must divide seq"
+    f32 = jnp.float32
+    xd = (x * dt[..., None]).astype(f32)                       # x * dt
+    da = (dt * a[None, None, :]).astype(f32)                   # (B,L,H)
+    xc = xd.reshape(B, nc, chunk, H, P)
+    dac = da.reshape(B, nc, chunk, H)
+    bc = b.reshape(B, nc, chunk, N).astype(f32)
+    cc = c.reshape(B, nc, chunk, N).astype(f32)
+
+    # Intra-chunk (quadratic within chunk only).
+    lmat = _segsum_decay(dac.transpose(0, 1, 3, 2))            # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc,
+                        preferred_element_type=f32)            # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, lmat, xc,
+                        preferred_element_type=f32)
+
+    # Chunk summaries -> inter-chunk recurrence.
+    cs = jnp.cumsum(dac, axis=2)                               # (B,nc,Q,H)
+    total = cs[:, :, -1:, :]                                   # (B,nc,1,H)
+    decay_states = jnp.exp(total - cs)                         # (B,nc,Q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_states, xc,
+                        preferred_element_type=f32)            # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(total[:, :, 0, :])                   # (B,nc,H)
+
+    def chunk_step(h, inp):
+        dec, st = inp                                          # (B,H), (B,H,P,N)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                        # emit state *before* chunk
+
+    h_init = jnp.zeros((B, H, P, N), f32) if h0 is None else h0.astype(f32)
+    h_last, h_prevs = jax.lax.scan(
+        chunk_step, h_init,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,P,N)
+
+    state_decay_out = jnp.exp(cs)                              # (B,nc,Q,H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", cc, h_prevs, state_decay_out,
+                       preferred_element_type=f32)
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y.astype(x.dtype), h_last
+
+
+def _gated_rms(y: jax.Array, z: jax.Array, scale: jax.Array,
+               eps: float) -> jax.Array:
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(y.dtype)
+
+
+def mamba2_apply(p: dict, u: jax.Array, cfg: ModelConfig,
+                 cache: dict | None = None, *, mode: str = "train"):
+    """Mamba-2 mixer.  ``u (B, L, D)``.  ``mode``: train|prefill|decode.
+
+    Returns ``(y, new_cache)``; cache = {"conv": (B, W-1, C), "ssd": (B,H,P,N)}.
+    """
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    flow = cfg.tt.flow
+    # channel-dim TP cut point (TT factors are replicated; see layers.py)
+    zx = constrain(linear_apply(p["zx_proj"], u, flow=flow),
+                   ("pod", "data"), None, "model")
+    z, x0 = jnp.split(zx, 2, axis=-1)
+    bc = linear_apply(p["bc_proj"], u, flow=flow)
+    dt_raw = linear_apply(p["dt_proj"], u, flow=flow)
+    xbc = jnp.concatenate([x0, bc], axis=-1)
+
+    new_cache = {}
+    if mode == "decode":
+        conv_out, new_conv = causal_conv_step(xbc[:, 0], cache["conv"], p["conv_kernel"])
+        conv_out = jax.nn.silu(conv_out)[:, None, :]
+        new_cache["conv"] = new_conv
+    else:
+        conv_out = jax.nn.silu(causal_conv(xbc, p["conv_kernel"]))
+        # conv cache holds the *raw* inputs (last W-1), not the conv output
+        new_cache["conv"] = xbc[:, -(s.d_conv - 1):, :]
+
+    x = conv_out[..., :d_in]
+    b = conv_out[..., d_in : d_in + s.d_state]
+    c = conv_out[..., d_in + s.d_state :]
+    B_, L = x.shape[0], x.shape[1]
+    xh = x.reshape(B_, L, h, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+
+    if mode == "decode":
+        h0 = cache["ssd"]
+        da = jnp.exp(dt[:, 0] * a[None, :])                    # (B,H)
+        upd = jnp.einsum("bn,bhp->bhpn", b[:, 0].astype(jnp.float32),
+                         (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32))
+        h_new = h0 * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", c[:, 0].astype(jnp.float32), h_new)
+        y = y[:, None].astype(x.dtype)                          # (B,1,H,P)
+        new_cache["ssd"] = h_new
+    else:
+        h0 = cache["ssd"] if cache is not None else None
+        y, h_last = ssd_chunked(xh, dt, a, b, c, min(s.chunk, L), h0)
+        new_cache["ssd"] = h_last
+
+    y = (y + xh * p["D"][None, None, :, None]).astype(u.dtype)
+    y = y.reshape(B_, L, d_in)
+    y = _gated_rms(y, z, p["gate_norm"], cfg.norm_eps)
+    out = linear_apply(p["out_proj"], y, flow=flow)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin recurrent block).
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def rglru_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d_rnn = cfg.d_model  # Griffin uses d_rnn ~ 4/3 d_model; we keep d_model
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "x_proj": make_linear(ks[0], d_rnn, cfg.d_model, cfg, "attn"),
+        "gate_proj": make_linear(ks[1], d_rnn, cfg.d_model, cfg, "attn"),
+        "conv_kernel": jax.random.normal(ks[2], (4, d_rnn), dtype) * 0.2,
+        "a_gate": make_linear(ks[3], d_rnn, d_rnn, cfg, "attn"),
+        "i_gate": make_linear(ks[4], d_rnn, d_rnn, cfg, "attn"),
+        "lam": jnp.full((d_rnn,), 1.0, jnp.float32),  # Λ: a = sigmoid(Λ)-based decay
+        "out_proj": make_linear(ks[5], cfg.d_model, d_rnn, cfg, "attn"),
+    }
+
+
+def _rglru_coeffs(p: dict, x: jax.Array, flow: str):
+    r = jax.nn.sigmoid(linear_apply(p["a_gate"], x, flow=flow).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear_apply(p["i_gate"], x, flow=flow).astype(jnp.float32))
+    log_a = -_RGLRU_C * r * jax.nn.softplus(p["lam"])          # log a_t  (<0)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * x.astype(jnp.float32)
+    return a, b
+
+
+def rglru_apply(p: dict, u: jax.Array, cfg: ModelConfig,
+                cache: dict | None = None, *, mode: str = "train"):
+    """Griffin recurrent block.  cache = {"conv": (B, 3, d), "h": (B, d)}."""
+    flow = cfg.tt.flow
+    x = constrain(linear_apply(p["x_proj"], u, flow=flow),
+                  ("pod", "data"), None, "model")
+    g = constrain(linear_apply(p["gate_proj"], u, flow=flow),
+                  ("pod", "data"), None, "model")
+
+    new_cache = {}
+    if mode == "decode":
+        xc, new_conv = causal_conv_step(x[:, 0], cache["conv"], p["conv_kernel"])
+        xc = xc[:, None, :]
+        new_cache["conv"] = new_conv
+    else:
+        xc = causal_conv(x, p["conv_kernel"])
+        new_cache["conv"] = x[:, -3:, :]  # raw inputs, not conv output
+
+    a, b = _rglru_coeffs(p, xc, flow)
+    if mode == "decode":
+        h_prev = cache["h"].astype(jnp.float32)
+        h = a[:, 0] * h_prev + b[:, 0]
+        new_cache["h"] = h
+        hseq = h[:, None, :]
+    else:
+        if cache is not None:  # continue from carried state (chunked prefill)
+            b = b.at[:, 0, :].add(a[:, 0, :] * cache["h"].astype(jnp.float32))
+        # associative scan: h_t = a_t h_{t-1} + b_t
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache["h"] = hseq[:, -1, :]
+    y = hseq.astype(u.dtype) * jax.nn.gelu(g)
+    return linear_apply(p["out_proj"], y, flow=flow), new_cache

@@ -1,0 +1,5 @@
+from .optimizers import Optimizer, adamw, clip_by_global_norm, sgd
+from .schedule import constant, warmup_cosine
+
+__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm",
+           "constant", "warmup_cosine"]

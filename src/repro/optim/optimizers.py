@@ -1,0 +1,98 @@
+"""Optimizers over parameter pytrees (TT cores included — the paper's PU
+stage updates cores directly, Sec. III-A step 3).
+
+Functional, pure-pytree design: optimizer state mirrors the parameter tree
+leaf-for-leaf so the sharding rules for parameters apply verbatim to the
+state (runtime.sharding reuses the same specs).  SGD is the paper-faithful
+optimizer; AdamW is the at-scale default for the assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    # update(grads, params, state, step) -> (new_params, new_state)
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+
+
+def _tree_cast_like(tree, ref):
+    return jax.tree.map(lambda x, r: x.astype(r.dtype), tree, ref)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        }
+
+    def update(grads, params, state, step):
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, {"step": state["step"] + 1}
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), params, mu)
+        return new_params, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer("sgd", init, update)
+
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, params, state, step):
+        lr_t = lr_fn(step)
+        t = (state["step"] + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+
+        def upd(p, m_, v_):
+            step_ = lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step_ = step_ + lr_t * weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": state["step"] + 1, "m": m, "v": v}
+
+    return Optimizer("adamw", init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn

@@ -1,0 +1,28 @@
+"""Distributed runtime: sharding rules, fault tolerance, elastic scaling."""
+from .compress import (
+    compressed_allreduce_mean,
+    dequantize_int8,
+    ef_compress_tree,
+    ef_init,
+    quantize_int8,
+)
+from .elastic import replan_for_mesh, reshard_tree, validate_divisibility
+from .sharding import (
+    batch_specs,
+    cache_specs,
+    kv_repeat_for_mesh,
+    named_sharding_tree,
+    opt_state_specs,
+    param_specs,
+    spec_report,
+)
+from .straggler import CheckpointCadence, StragglerMonitor
+
+__all__ = [
+    "param_specs", "batch_specs", "cache_specs", "opt_state_specs",
+    "named_sharding_tree", "kv_repeat_for_mesh", "spec_report",
+    "StragglerMonitor", "CheckpointCadence",
+    "reshard_tree", "replan_for_mesh", "validate_divisibility",
+    "quantize_int8", "dequantize_int8", "compressed_allreduce_mean",
+    "ef_compress_tree", "ef_init",
+]

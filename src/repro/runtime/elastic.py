@@ -1,0 +1,59 @@
+"""Elastic re-meshing: move a training state onto a different device mesh.
+
+Scenarios at scale: a pod is preempted (shrink DP width), capacity is added
+(grow), or a failed host forces a restart on n-1 nodes.  Because (a) model
+state lives in a host-visible checkpoint, (b) the data pipeline is a pure
+function of (seed, step), and (c) sharding rules are *functions of the mesh*,
+elastic restart is: build the new mesh -> re-derive specs -> device_put.
+
+``reshard_tree`` works for live arrays too (mesh-to-mesh moves without a
+checkpoint round-trip) — jax.device_put handles cross-sharding transfers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.runtime.sharding import named_sharding_tree, opt_state_specs, param_specs
+
+__all__ = ["reshard_tree", "replan_for_mesh", "validate_divisibility"]
+
+
+def reshard_tree(tree: Any, mesh: Mesh, spec_tree: Any) -> Any:
+    """device_put every leaf to its NamedSharding on the (new) mesh."""
+    sh = named_sharding_tree(mesh, spec_tree)
+    return jax.tree.map(jax.device_put, tree, sh)
+
+
+def replan_for_mesh(cfg: ModelConfig, params: Any, opt_state: Any | None,
+                    new_mesh: Mesh) -> tuple[Any, Any | None]:
+    """Re-derive specs for ``new_mesh`` and move (params, opt_state) onto it."""
+    pspecs = param_specs(cfg, params, new_mesh)
+    params = reshard_tree(params, new_mesh, pspecs)
+    if opt_state is not None:
+        sspecs = opt_state_specs(cfg, opt_state, pspecs, new_mesh)
+        opt_state = reshard_tree(opt_state, new_mesh, sspecs)
+    return params, opt_state
+
+
+def validate_divisibility(cfg: ModelConfig, mesh: Mesh,
+                          global_batch: int) -> list[str]:
+    """Pre-flight checks before adopting a new mesh; returns problem list."""
+    problems = []
+    import numpy as np
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                      if a in mesh.axis_names]))
+    if global_batch % dp and global_batch > 1:
+        problems.append(
+            f"global_batch {global_batch} not divisible by DP degree {dp}")
+    if "model" in mesh.axis_names:
+        tp = mesh.shape["model"]
+        if (cfg.n_heads * cfg.d_head) % tp:
+            problems.append(f"attention out dim not divisible by TP {tp}")
+        if cfg.d_ff and cfg.d_ff % tp:
+            problems.append(f"d_ff {cfg.d_ff} not divisible by TP {tp} "
+                            "(falls back to replicated FFN)")
+    return problems

@@ -1,0 +1,276 @@
+"""Axis-name-driven sharding rule engine (params / cache / batch -> PartitionSpec).
+
+Rules are keyed on pytree *paths*, not positions, so they survive arbitrary
+nesting (scanned cycle stacking, vmapped experts, optimizer-state mirrors).
+A rule yields the spec for the *block-level* array; extra leading axes
+(cycle stacking, expert vmap of TT cores) are absorbed by left-padding the
+spec with ``None`` to the leaf's rank.
+
+Distribution policy (DESIGN.md §3):
+  * batch axes  -> ("pod", "data")           (DP across pods and within)
+  * TP (model axis): attention q/k/v out-dim, o in-dim; MLP up/gate out-dim,
+    down in-dim; vocab dim of embedding table and LM head (Megatron-style).
+  * MoE: expert axis on "model" when divisible, else per-expert FFN dim.
+  * SSM / RG-LRU: channel (d_inner / d_rnn) dim on "model" — the recurrences
+    are elementwise over channels, so TP is communication-free inside them.
+  * TT / TTM cores: **replicated** — the paper's technique as a distributed
+    optimization: per-device param+grad+optimizer state is MBs, and the DP
+    gradient all-reduce shrinks by the compression ratio (30-52x).
+  * norms, biases, scalars: replicated.
+
+The same rules shard optimizer state (it mirrors the param tree leaf-for-leaf
+under ``state["m"]/state["v"]/state["mu"]``).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import CacheLeaf, map_cache
+
+__all__ = [
+    "DATA_AXES", "MODEL_AXIS",
+    "param_specs", "batch_specs", "cache_specs", "opt_state_specs",
+    "named_sharding_tree", "kv_repeat_for_mesh", "spec_report",
+]
+
+DATA_AXES = ("pod", "data")  # flattened into one DP spec entry
+MODEL_AXIS = "model"
+
+
+def _dp(mesh: Mesh):
+    axes = tuple(a for a in DATA_AXES if a in mesh.axis_names)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def _divisible(dim: int, mesh: Mesh) -> bool:
+    return dim % mesh.shape[MODEL_AXIS] == 0 if MODEL_AXIS in mesh.axis_names else False
+
+
+# ---------------------------------------------------------------------------
+# Param rules: (path regex, base spec builder).  First match wins.  The
+# builder receives (leaf shape-struct, cfg, mesh) and returns a PartitionSpec
+# for the block-level trailing dims.
+# ---------------------------------------------------------------------------
+
+
+def _spec_linear_out(leaf, cfg, mesh):
+    # dense (out, in): shard out on model
+    return P(MODEL_AXIS, None) if _divisible(leaf.shape[-2], mesh) else P()
+
+
+def _spec_linear_in(leaf, cfg, mesh):
+    return P(None, MODEL_AXIS) if _divisible(leaf.shape[-1], mesh) else P()
+
+
+# Above this per-device-bytes threshold, expert weights additionally shard
+# FSDP-style over the data axis (the per-layer all-gather is cheaper than
+# not fitting); below it, EP-only avoids the gather (§Perf iteration 3).
+_EXPERT_FSDP_BYTES = 2 << 30
+
+
+def _spec_expert_w(col: str):
+    def rule(leaf, cfg, mesh):
+        # dense expert stack (E, out, in)
+        e = leaf.shape[-3]
+        if _divisible(e, mesh):
+            # EP: experts over model.  Only 400B-class stacks that cannot
+            # hold E/tp experts per chip also shard the per-expert FFN dim
+            # over *data* (FSDP); GSPMD inserts the per-layer all-gather
+            # (visible in §Roofline).
+            tp = mesh.shape[MODEL_AXIS]
+            leaf_bytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            need_fsdp = leaf_bytes // tp > _EXPERT_FSDP_BYTES
+            ffn_axis = "data" if ("data" in mesh.axis_names and need_fsdp) else None
+            f = mesh.shape.get("data", 1) if ffn_axis else 1
+            if col in ("up", "gate") and f > 1 and leaf.shape[-2] % f == 0:
+                return P(MODEL_AXIS, ffn_axis, None)
+            if col == "down" and f > 1 and leaf.shape[-1] % f == 0:
+                return P(MODEL_AXIS, None, ffn_axis)
+            return P(MODEL_AXIS, None, None)
+        if col in ("up", "gate") and _divisible(leaf.shape[-2], mesh):
+            return P(None, MODEL_AXIS, None)          # per-expert FFN TP
+        if col == "down" and _divisible(leaf.shape[-1], mesh):
+            return P(None, None, MODEL_AXIS)
+        return P()
+    return rule
+
+
+def _spec_vocab_table(leaf, cfg, mesh):
+    return P(MODEL_AXIS, None) if _divisible(leaf.shape[-2], mesh) else P()
+
+
+def _spec_vec_model(leaf, cfg, mesh):
+    return P(MODEL_AXIS) if _divisible(leaf.shape[-1], mesh) else P()
+
+
+def _spec_replicated(leaf, cfg, mesh):
+    return P()
+
+
+# NOTE: TT cores never match a "w" rule — TTLinearParams flattens its cores
+# into list positions under key-path ".cores[i]" and stays replicated.
+_PARAM_RULES: tuple[tuple[str, Any], ...] = (
+    (r"\.cores\[", _spec_replicated),                       # TT/TTM cores
+    (r"attn.*\.(q|k|v)\..*\bw$", _spec_linear_out),
+    (r"attn.*\.o\..*\bw$", _spec_linear_in),
+    (r"patch_proj\..*\bw$", _spec_linear_out),
+    (r"mlp\.(up|gate)\..*\bw$", _spec_linear_out),
+    (r"mlp\.down\..*\bw$", _spec_linear_in),
+    (r"shared\.(up|gate)\..*\bw$", _spec_linear_out),
+    (r"shared\.down\..*\bw$", _spec_linear_in),
+    (r"moe\.up\..*\bw$", _spec_expert_w("up")),
+    (r"moe\.gate\..*\bw$", _spec_expert_w("gate")),
+    (r"moe\.down\..*\bw$", _spec_expert_w("down")),
+    (r"moe\.router", _spec_replicated),
+    (r"mixer\.(zx_proj|x_proj|gate_proj|a_gate|i_gate)\..*\bw$", _spec_linear_out),
+    (r"mixer\.out_proj\..*\bw$", _spec_linear_in),
+    (r"mixer\.(conv_kernel|gate_norm)$", _spec_vec_model),
+    (r"mixer\.lam$", _spec_vec_model),
+    (r"embed.*\btable$", _spec_vocab_table),
+    (r"head\..*\bw$", _spec_vocab_table),
+    (r"(intent|slot)_out\.w$", _spec_replicated),
+    (r"pos_table$", _spec_replicated),
+    (r".*", _spec_replicated),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts[-1:] = [parts[-1] + f"[{p.idx}]"] if parts else [f"[{p.idx}]"]
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        elif isinstance(p, jax.tree_util.FlattenedIndexKey):
+            parts[-1:] = [parts[-1] + f"[{p.key}]"] if parts else [f"[{p.key}]"]
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _pad_spec(spec: P, rank: int) -> P:
+    base = tuple(spec)
+    if len(base) > rank:
+        # scalar leaves matched a vector rule etc. — replicate
+        return P()
+    return P(*((None,) * (rank - len(base)) + base))
+
+
+def param_specs(cfg: ModelConfig, params_tree: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching ``params_tree`` (arrays or ShapeDtypeStruct)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        for pat, rule in _PARAM_RULES:
+            if re.search(pat, ps):
+                specs.append(_pad_spec(rule(leaf, cfg, mesh), len(leaf.shape)))
+                break
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(cfg: ModelConfig, state_tree: Any, param_spec_tree: Any,
+                    mesh: Mesh) -> Any:
+    """Optimizer state: moment trees mirror param specs, counters replicate."""
+    def per_entry(key, sub):
+        if key in ("m", "v", "mu"):
+            return param_spec_tree
+        return jax.tree.map(lambda _: P(), sub)
+    return {k: per_entry(k, v) for k, v in state_tree.items()}
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache.
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_tree: Any, mesh: Mesh) -> Any:
+    """Shard the leading (global-batch) dim over all DP axes; batch=1 decode
+    (long-context) replicates instead."""
+    dp = _dp(mesh)
+
+    def one(leaf):
+        b = leaf.shape[0] if leaf.shape else 0
+        n_dp = int(np.prod([mesh.shape[a] for a in (dp if isinstance(dp, tuple) else (dp,))
+                            if a])) if dp else 1
+        if dp and b % n_dp == 0 and b > 0:
+            return P(dp, *((None,) * (len(leaf.shape) - 1)))
+        return P()
+
+    return jax.tree.map(one, batch_tree)
+
+
+def kv_repeat_for_mesh(cfg: ModelConfig, mesh: Mesh) -> int:
+    """Repeat KV heads at cache layout so the head dim shards TP-cleanly
+    (MaxText-style).  Only for decode caches; training never materializes
+    repeated KV.  The repeat must divide the GQA group size (decode
+    attention reshapes H = KV_repeated x G); the smallest repeat achieving
+    TP divisibility wins (minimum cache memory), else no repeat."""
+    if MODEL_AXIS not in mesh.axis_names:
+        return 1
+    tp = mesh.shape[MODEL_AXIS]
+    kv = cfg.n_kv_heads
+    group = max(cfg.n_heads // max(kv, 1), 1)
+    for r in range(1, group + 1):
+        if group % r == 0 and (kv * r) % tp == 0:
+            return r
+    return 1
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_len: int) -> Any:
+    """PartitionSpec tree for a decode cache built with the same kv_repeat."""
+    dp = _dp(mesh)
+    kvr = kv_repeat_for_mesh(cfg, mesh)
+    n_dp = 1
+    if dp:
+        axes = dp if isinstance(dp, tuple) else (dp,)
+        n_dp = int(np.prod([mesh.shape[a] for a in axes]))
+    b_ax = dp if (dp and batch % n_dp == 0 and batch > 1) else None
+
+    def leaf_spec(leaf: CacheLeaf, cycles):
+        if leaf.role == "kv":      # (B, S, KV*kvr, dh)
+            kvh = leaf.shape[2]
+            h_ax = MODEL_AXIS if kvh % mesh.shape[MODEL_AXIS] == 0 else None
+            spec = (b_ax, None, h_ax, None)
+        elif leaf.role == "conv":  # (B, W, C)
+            c_ax = MODEL_AXIS if leaf.shape[2] % mesh.shape[MODEL_AXIS] == 0 else None
+            spec = (b_ax, None, c_ax)
+        elif leaf.role == "state":  # (B, H, P, N) ssd state
+            h_ax = MODEL_AXIS if leaf.shape[1] % mesh.shape[MODEL_AXIS] == 0 else None
+            spec = (b_ax, h_ax, None, None)
+        elif leaf.role == "vec":   # (B, D)
+            d_ax = MODEL_AXIS if leaf.shape[1] % mesh.shape[MODEL_AXIS] == 0 else None
+            spec = (b_ax, d_ax)
+        else:
+            spec = (None,) * len(leaf.shape)
+        if cycles is not None:
+            spec = (None,) + spec
+        return P(*spec)
+
+    return map_cache(leaf_spec, cfg, batch, seq_len, kv_repeat=kvr)
+
+
+def named_sharding_tree(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def spec_report(cfg: ModelConfig, params_tree: Any, mesh: Mesh) -> str:
+    """Human-readable param -> spec mapping (debugging / DESIGN docs)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params_tree)
+    spec_flat = jax.tree.leaves(
+        param_specs(cfg, params_tree, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+    lines = []
+    for (path, leaf), spec in zip(flat, spec_flat):
+        lines.append(f"{_path_str(path):70s} {str(leaf.shape):28s} {spec}")
+    return "\n".join(lines)

@@ -1,0 +1,81 @@
+"""Straggler detection + adaptive checkpoint cadence (host-side, pure Python).
+
+At 1000+-node scale the slowest worker sets the step time; persistent
+stragglers (thermal throttling, failing HBM, noisy neighbors) must be flagged
+for replacement before they degrade the whole job.  The monitor keeps an
+exponentially weighted mean/variance of per-step (or per-worker) latencies and
+flags samples exceeding ``mean + z * std``; repeated flags escalate.
+
+It also drives checkpoint cadence: when the flag rate rises (a node is
+wobbling — elevated failure risk) the recommended checkpoint interval
+shrinks, bounding lost work.  Tested with injected delays in
+tests/test_runtime.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["StragglerMonitor", "CheckpointCadence"]
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.05          # EWMA weight
+    z_threshold: float = 3.0     # flag at mean + z * std
+    escalate_after: int = 3      # consecutive flags -> persistent straggler
+    warmup: int = 8              # samples before flagging starts
+
+    mean: float = 0.0
+    var: float = 0.0
+    count: int = 0
+    consecutive_flags: int = 0
+    total_flags: int = 0
+    persistent: bool = False
+
+    def observe(self, latency_s: float) -> bool:
+        """Record one latency sample; returns True if it is a straggler event."""
+        self.count += 1
+        if self.count == 1:
+            self.mean = latency_s
+            self.var = 0.0
+            return False
+        delta = latency_s - self.mean
+        # Variance floor (5% of the mean): a perfectly steady baseline must
+        # still be able to flag a spike.
+        std = max(math.sqrt(self.var), 0.05 * abs(self.mean))
+        flagged = (self.count > self.warmup
+                   and std > 0.0
+                   and delta > self.z_threshold * std)
+        if flagged:
+            self.consecutive_flags += 1
+            self.total_flags += 1
+            if self.consecutive_flags >= self.escalate_after:
+                self.persistent = True
+        else:
+            self.consecutive_flags = 0
+            # Only fold non-outlier samples into the stats so one spike does
+            # not inflate the baseline and mask the next spike.
+            self.mean += self.alpha * delta
+            self.var = (1 - self.alpha) * (self.var + self.alpha * delta * delta)
+        return flagged
+
+    @property
+    def flag_rate(self) -> float:
+        return self.total_flags / max(self.count, 1)
+
+
+@dataclasses.dataclass
+class CheckpointCadence:
+    """Adaptive interval: shrink under instability, relax when healthy."""
+
+    base_interval: int = 1000    # steps between checkpoints when healthy
+    min_interval: int = 50
+
+    def interval(self, monitor: StragglerMonitor) -> int:
+        if monitor.persistent:
+            return self.min_interval
+        # flag_rate 0 -> base; 10%+ -> min.
+        frac = min(monitor.flag_rate / 0.1, 1.0)
+        return max(self.min_interval,
+                   int(self.base_interval * (1.0 - frac) + self.min_interval * frac))

@@ -1,0 +1,16 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device; only the dry-run
+launcher (repro.launch.dryrun) forces 512 placeholder devices, in its own
+process."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,210 @@
+"""Checkpointing (atomicity, keep-k, async, elastic restore) + runtime
+(sharding rules, straggler monitor, EF compression)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, latest_step, list_steps, restore, save
+from repro.configs import SHAPES, get_config
+from repro.core import tt_linear_init
+from repro.launch.steps import make_inputs
+from repro.models import init_params
+from repro.runtime import (
+    CheckpointCadence,
+    StragglerMonitor,
+    batch_specs,
+    cache_specs,
+    dequantize_int8,
+    ef_compress_tree,
+    ef_init,
+    kv_repeat_for_mesh,
+    param_specs,
+    quantize_int8,
+)
+
+
+def _tree(seed=0):
+    return {
+        "lin": tt_linear_init(jax.random.PRNGKey(seed), 128, 128, d=2, rank=4),
+        "emb": {"table": jax.random.normal(jax.random.PRNGKey(seed + 1), (64, 16))},
+        "step": jnp.asarray(41),
+    }
+
+
+def _template(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 7, t)
+    restored, step = restore(str(tmp_path), _template(t))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        mgr.save_async(s, _tree())
+    mgr.wait()
+    assert list_steps(str(tmp_path)) == [30, 40]
+    assert latest_step(str(tmp_path)) == 40
+    _, step = mgr.restore_latest(_template(_tree()))
+    assert step == 40
+
+
+def test_checkpoint_atomicity_partial_dir_ignored(tmp_path):
+    """A crash mid-save (stray tmp dir, no manifest entry) must not corrupt
+    restore."""
+    t = _tree()
+    save(str(tmp_path), 5, t)
+    # simulate a crashed writer: partial temp dir + orphan step dir
+    os.makedirs(tmp_path / ".tmp_save_crash")
+    (tmp_path / ".tmp_save_crash" / "leaf_00000.npy").write_bytes(b"garbage")
+    os.makedirs(tmp_path / "step_00000099")  # no meta.json, not in manifest
+    restored, step = restore(str(tmp_path), _template(t))
+    assert step == 5
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    bad = _template(t)
+    bad["emb"]["table"] = jax.ShapeDtypeStruct((65, 16), jnp.float32)
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), bad)
+
+
+def test_checkpoint_manifest_is_json(tmp_path):
+    save(str(tmp_path), 3, _tree())
+    m = json.load(open(tmp_path / "manifest.json"))
+    assert m["latest"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (single-device mesh: specs must still be derivable).
+# ---------------------------------------------------------------------------
+
+
+def _leaf_specs(tree):
+    return jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "llama4-maverick-400b-a17b",
+                                  "mamba2-130m", "recurrentgemma-2b"])
+def test_param_specs_cover_every_leaf(arch):
+    cfg = get_config(arch)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    specs = param_specs(cfg, params, mesh)
+    p_leaves = jax.tree.leaves(params)
+    s_leaves = _leaf_specs(specs)
+    assert len(p_leaves) == len(s_leaves)
+    for leaf, spec in zip(p_leaves, s_leaves):
+        assert len(tuple(spec)) <= len(leaf.shape)
+
+
+def test_param_specs_tt_cores_replicated():
+    cfg = get_config("qwen3-8b").with_tt(mode="tt")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    specs = param_specs(cfg, params, mesh)
+    sflat = _leaf_specs(specs)
+    for (path, leaf), spec in zip(flat, sflat):
+        if ".cores[" in jax.tree_util.keystr(path) or "cores" in str(path):
+            assert tuple(spec) == () or all(s is None for s in tuple(spec)), \
+                f"TT core {jax.tree_util.keystr(path)} not replicated: {spec}"
+
+
+def test_batch_and_cache_specs():
+    cfg = get_config("llama3-8b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    shape = SHAPES["decode_32k"]
+    kvr = kv_repeat_for_mesh(cfg, mesh)
+    inputs = make_inputs(cfg, shape, kv_repeat=kvr)
+    cs = cache_specs(cfg, mesh, shape.global_batch, shape.seq_len)
+    # structurally compatible with the cache inputs
+    jax.tree.map(lambda leaf, spec: None, inputs["cache"], cs)
+    bs = batch_specs({"tokens": inputs["tokens"]}, mesh)
+    assert isinstance(bs["tokens"], P)
+
+
+def test_kv_repeat_rules():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert kv_repeat_for_mesh(get_config("llama3-8b"), mesh) >= 1
+    # 16-way TP mesh requires fake devices; the divisor logic is pure:
+    from repro.runtime.sharding import kv_repeat_for_mesh as f
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    assert f(get_config("llama3-8b"), FakeMesh()) == 2       # kv8 x2 = 16
+    assert f(get_config("recurrentgemma-2b"), FakeMesh()) == 1  # 10 heads
+    assert f(get_config("qwen3-8b"), FakeMesh()) == 2        # kv8 group4
+
+
+# ---------------------------------------------------------------------------
+# Straggler monitor + cadence.
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_flags_injected_delay():
+    m = StragglerMonitor()
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        assert not m.observe(0.1 + 0.002 * rng.random())
+    assert m.observe(0.5)            # 5x spike -> flagged
+    assert not m.persistent
+    m.observe(0.5)
+    m.observe(0.5)
+    assert m.persistent              # 3 consecutive -> escalated
+
+
+def test_straggler_stats_robust_to_outliers():
+    m = StragglerMonitor()
+    for _ in range(30):
+        m.observe(0.1)
+    m.observe(10.0)                  # outlier must not poison the baseline
+    assert m.mean < 0.2
+
+
+def test_cadence_shrinks_under_instability():
+    mon = StragglerMonitor()
+    cad = CheckpointCadence(base_interval=1000, min_interval=50)
+    for _ in range(30):
+        mon.observe(0.1)
+    healthy = cad.interval(mon)
+    mon.persistent = True
+    assert cad.interval(mon) == 50 < healthy
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression + error feedback.
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024,))
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x).max()
+    assert float(err) <= float(s) / 2 + 1e-6
+    assert q.dtype == jnp.int8
+
+
+def test_error_feedback_unbiased_accumulation():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(1), (256,)) * 1e-3}
+    r = ef_init(g)
+    acc = jnp.zeros(256)
+    n = 100
+    for _ in range(n):
+        qg, r = ef_compress_tree(g, r)
+        acc = acc + qg["w"]
+    rel = float(jnp.abs(acc - n * g["w"]).max() / jnp.abs(n * g["w"]).max())
+    assert rel < 5e-3  # EF keeps the long-run average unbiased

@@ -1,0 +1,93 @@
+"""HLO analyzers: trip-count-aware walker + collective parser on synthetic
+HLO text with known ground truth."""
+from repro.launch.hlo_analysis import parse_collectives, roofline_terms
+from repro.launch.hlo_flops import analyze_hlo
+
+# A miniature partitioned module: one dot in a fusion inside a 10-trip while,
+# one all-reduce over groups of 16, one bf16-emulation convert fusion.
+HLO = """\
+HloModule test
+
+%wrapped_compare_computation (a: s32[], b: s32[]) -> pred[] {
+  %a = s32[] parameter(0)
+  %b = s32[] parameter(1)
+  ROOT %cmp = pred[] compare(%a, %b), direction=LT
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c10 = s32[] constant(10)
+  ROOT %lt = pred[] fusion(%i, %c10), kind=kLoop, calls=%wrapped_compare_computation
+}
+
+%inner.dot (pa: f32[8,32], pb: f32[32,16]) -> f32[8,16] {
+  %pa = f32[8,32]{1,0} parameter(0)
+  %pb = f32[32,16]{1,0} parameter(1)
+  ROOT %d = f32[8,16]{1,0} dot(%pa, %pb), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %x = f32[8,32]{1,0} parameter(1)
+  %w = f32[32,16]{1,0} parameter(2)
+  %y = f32[8,16]{1,0} fusion(%x, %w), kind=kOutput, calls=%inner.dot
+  %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups=[16,16]<=[256], to_apply=%sum
+  ROOT %t = (s32[], f32[8,16]) tuple(%ip, %ar)
+}
+
+%conv.emul (q: bf16[128,128]) -> f32[128,128] {
+  %q = bf16[128,128]{1,0} parameter(0)
+  ROOT %cv = f32[128,128]{1,0} convert(%q)
+}
+
+ENTRY %main (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %big = bf16[128,128]{1,0} parameter(1)
+  %emul = f32[128,128]{1,0} fusion(%big), kind=kLoop, calls=%conv.emul
+  ROOT %w = (s32[], f32[8,16]) while(%arg), condition=%cond.1, body=%body.1
+}
+"""
+
+
+def test_walker_trip_count_and_dot_flops():
+    s = analyze_hlo(HLO)
+    # dot: 2*8*16*32 = 8192 flops; while trips = 10; add(1 flop) per trip
+    assert s.flops == 10 * (8192 + 1)
+
+
+def test_walker_collectives_with_trips():
+    s = analyze_hlo(HLO)
+    # all-reduce of 8*16*4 bytes, group 16 -> wire = 2*512*15/16 = 960; x10
+    assert s.collective_counts["all-reduce"] == 10
+    assert abs(s.collective_wire_bytes - 10 * 960) < 1
+    assert s.collective_result_bytes == 10 * 512
+
+
+def test_walker_ignores_dtype_emulation():
+    s = analyze_hlo(HLO)
+    # the conv.emul fusion (pure convert) must contribute zero bytes; the
+    # remaining bytes come from the while body's dot fusion + all-reduce.
+    per_trip = (8 * 32 * 4 + 32 * 16 * 4 + 8 * 16 * 4) + 2 * 512
+    assert s.bytes == 10 * per_trip
+
+
+def test_collective_parser_group_formats():
+    stats = parse_collectives(
+        "%ag = f32[64,16]{1,0} all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}\n"
+        "%cp = bf16[32]{0} collective-permute(%y), source_target_pairs={{0,1}}\n")
+    assert stats.counts == {"all-gather": 1, "collective-permute": 1}
+    rb = 64 * 16 * 4
+    assert stats.result_bytes["all-gather"] == rb
+    assert stats.wire_bytes["all-gather"] == int(rb * 3 / 4)
+    assert stats.wire_bytes["collective-permute"] == 64
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline_terms(1e15, 1e9, 1e9)
+    assert t["bottleneck"] == "compute_s"
+    t2 = roofline_terms(1e12, 1e12, 1e9)
+    assert t2["bottleneck"] == "memory_s"

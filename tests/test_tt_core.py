@@ -1,0 +1,216 @@
+"""Core TT/TTM correctness: flows vs dense oracle, fused VJP vs autodiff,
+factorization properties (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    TTSpec,
+    factorize,
+    make_tt_spec,
+    make_ttm_spec,
+    tt_forward_btt,
+    tt_forward_rl,
+    tt_half_factors,
+    tt_init,
+    tt_linear_apply,
+    tt_linear_init,
+    tt_params_count,
+    tt_reconstruct,
+    ttm_embedding_apply,
+    ttm_embedding_init,
+    ttm_init,
+    ttm_lookup,
+    ttm_reconstruct,
+)
+
+PAPER_SPEC = TTSpec(out_factors=(8, 8, 12), in_factors=(12, 8, 8), rank=12)
+
+
+# ---------------------------------------------------------------------------
+# Contraction flows agree with the dense reconstruction (paper: contraction
+# order never changes the math, only the cost).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [
+    PAPER_SPEC,
+    TTSpec(out_factors=(4, 4), in_factors=(4, 4), rank=3),
+    TTSpec(out_factors=(16, 16, 16), in_factors=(8, 8, 8), rank=24),
+    TTSpec(out_factors=(3, 5, 7, 2), in_factors=(2, 7, 5, 3), rank=6),
+])
+@pytest.mark.parametrize("K", [1, 32])
+def test_flows_match_dense(spec, K, rng):
+    cores = tt_init(rng, spec)
+    w = tt_reconstruct(cores, spec)
+    assert w.shape == (spec.out_dim, spec.in_dim)
+    x = jax.random.normal(jax.random.PRNGKey(1), (K, spec.in_dim))
+    y_ref = x @ w.T
+    np.testing.assert_allclose(tt_forward_rl(cores, x, spec), y_ref,
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(tt_forward_btt(cores, x, spec), y_ref,
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_half_factors_shapes(rng):
+    cores = tt_init(rng, PAPER_SPEC)
+    a, b = tt_half_factors(cores, PAPER_SPEC)
+    assert a.shape == (PAPER_SPEC.out_dim, PAPER_SPEC.mid_rank)
+    assert b.shape == (PAPER_SPEC.mid_rank, PAPER_SPEC.in_dim)
+    np.testing.assert_allclose(a @ b, tt_reconstruct(cores, PAPER_SPEC),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_rank_clamping_boundary():
+    spec = TTSpec(out_factors=(2, 2), in_factors=(2, 2), rank=64)
+    rs = spec.ranks
+    assert rs[0] == rs[-1] == 1
+    # interior ranks clamp to the dense boundary (never waste params)
+    assert rs[1] == 2 and rs[2] == 4 and rs[3] == 2
+
+
+# ---------------------------------------------------------------------------
+# Fused custom VJP == plain autodiff == autodiff through dense reconstruct.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,rank,dims", [(3, 12, (768, 768)),
+                                         (2, 8, (64, 48)),
+                                         (3, 16, (512, 1024))])
+def test_fused_vjp_matches_autodiff(d, rank, dims, rng):
+    out_dim, in_dim = dims
+    p = tt_linear_init(rng, out_dim, in_dim, d=d, rank=rank)
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, in_dim))
+    ct = jax.random.normal(jax.random.PRNGKey(3), (16, out_dim))
+
+    def run(flow):
+        def f(cores, xx):
+            pp = dataclasses.replace(p, cores=list(cores))
+            y = tt_linear_apply(pp, xx, flow=flow)
+            return jnp.vdot(y, ct)
+        return jax.grad(f, argnums=(0, 1))(tuple(p.cores), x)
+
+    g_fused = run("btt_fused")
+    g_plain = run("btt")
+    g_rl = run("rl")
+    for a, b in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_plain)):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+    for a, b in zip(jax.tree.leaves(g_fused), jax.tree.leaves(g_rl)):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-4)
+
+
+def test_grad_vs_dense_reconstruction(rng):
+    """Core grads equal autodiff through the dense W = reconstruct(cores)."""
+    spec = TTSpec(out_factors=(4, 6), in_factors=(6, 4), rank=5)
+    cores = tuple(tt_init(rng, spec))
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, spec.in_dim))
+
+    def via_flow(cs):
+        return (tt_forward_btt(list(cs), x, spec) ** 2).sum()
+
+    def via_dense(cs):
+        w = tt_reconstruct(list(cs), spec)
+        return ((x @ w.T) ** 2).sum()
+
+    g1 = jax.grad(via_flow)(cores)
+    g2 = jax.grad(via_dense)(cores)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Padding path: logical dims that do not factorize exactly.
+# ---------------------------------------------------------------------------
+
+
+def test_padded_logical_dims(rng):
+    p = tt_linear_init(rng, 50, 70, d=3, rank=4)  # 50, 70 need padding
+    assert p.spec.in_dim >= 70 and p.spec.out_dim >= 50
+    x = jax.random.normal(jax.random.PRNGKey(5), (9, 70))
+    y = tt_linear_apply(p, x)
+    assert y.shape == (9, 50)
+    # padding must behave as zero-extension: matches manual pad + slice
+    w = tt_reconstruct(p.cores, p.spec)[:50, :70]
+    np.testing.assert_allclose(y, x @ w.T, rtol=2e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# TTM embedding.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("vocab,hidden,d,rank", [
+    (1000, 768, 3, 30),   # the paper's Table II embedding
+    (512, 64, 2, 8),
+    (50432, 768, 3, 16),
+])
+def test_ttm_lookup_matches_dense(vocab, hidden, d, rank, rng):
+    emb = ttm_embedding_init(rng, vocab, hidden, d=d, rank=rank)
+    ids = jax.random.randint(jax.random.PRNGKey(6), (33,), 0, vocab)
+    out = ttm_embedding_apply(emb, ids)
+    dense = ttm_reconstruct(emb.cores, emb.spec)[:vocab, :hidden]
+    np.testing.assert_allclose(out, jnp.take(dense, ids, axis=0),
+                               rtol=2e-4, atol=1e-6)
+
+
+def test_ttm_grads_flow(rng):
+    emb = ttm_embedding_init(rng, 100, 32, d=2, rank=4)
+    ids = jnp.arange(10)
+
+    def f(cores):
+        e = dataclasses.replace(emb, cores=list(cores))
+        return (ttm_embedding_apply(e, ids) ** 2).sum()
+
+    grads = jax.grad(f)(tuple(emb.cores))
+    assert all(bool(jnp.any(g != 0)) for g in grads)
+
+
+# ---------------------------------------------------------------------------
+# factorize: property-based.
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.integers(2, 300_000), d=st.integers(1, 4))
+@settings(max_examples=60, deadline=None)
+def test_factorize_properties(n, d):
+    fac, npad = factorize(n, d)
+    assert len(fac) == d
+    assert int(np.prod(fac)) == npad
+    assert npad >= n
+    assert all(f >= 1 for f in fac)
+
+
+@given(out_dim=st.sampled_from([64, 768, 4096, 12288]),
+       in_dim=st.sampled_from([64, 768, 5120]),
+       d=st.integers(2, 3), rank=st.sampled_from([1, 4, 12, 64]))
+@settings(max_examples=20, deadline=None)
+def test_tt_param_count_below_dense(out_dim, in_dim, d, rank):
+    if rank * rank >= min(out_dim, in_dim):
+        return  # not in the compression regime (e.g. 64x64 at rank 64)
+    spec = make_tt_spec(out_dim, in_dim, d, rank)
+    assert tt_params_count(spec) < spec.out_dim * spec.in_dim
+
+
+@given(K=st.integers(1, 64))
+@settings(max_examples=10, deadline=None)
+def test_flow_equivalence_property(K):
+    """Contraction order invariance, the paper's Sec. IV premise."""
+    spec = TTSpec(out_factors=(4, 4), in_factors=(4, 4), rank=5)
+    cores = tt_init(jax.random.PRNGKey(K), spec)
+    x = jax.random.normal(jax.random.PRNGKey(K + 1), (K, spec.in_dim))
+    np.testing.assert_allclose(tt_forward_rl(cores, x, spec),
+                               tt_forward_btt(cores, x, spec),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_init_variance_targets(rng):
+    """Reconstructed W element std matches the Glorot target (+-40%)."""
+    spec = make_tt_spec(768, 768, 3, 12)
+    cores = tt_init(rng, spec)
+    w = tt_reconstruct(cores, spec)
+    target = (2.0 / (spec.in_dim + spec.out_dim)) ** 0.5
+    assert 0.6 * target < float(jnp.std(w)) < 1.4 * target
