@@ -1,5 +1,6 @@
 """Paper Fig. 15 / Table V (memory columns) — computing-memory comparison of
-matrix vs tensor-compressed training, from *compiled* artifacts.
+matrix vs tensor-compressed training, from *compiled* artifacts, plus the
+per-stage on-chip residency ledger (``core.memory_ledger``).
 
 The paper compares GPU reserved memory against its FPGA's on-chip usage
 (17.2 / 17.8 / 34.5 MB for 2/4/6 encoders; 48.2x / 51.4x / 29.6x less than
@@ -7,13 +8,27 @@ matrix GPU training).  Without a GPU we report the backend-measured
 analogue: XLA buffer allocation (argument + output + temp) for one compiled
 training step of the matrix model vs the TT model, same batch (the paper's
 batch-1, seq-32 regime).  Energy (Table V) reduces to FLOPs + bytes moved on
-a dry-run — reported per cell in EXPERIMENTS.md §Roofline instead."""
+a dry-run — reported per cell in EXPERIMENTS.md §Roofline instead.
+
+Emitted rows (CSV via benchmarks.run; JSON trajectory schema is documented
+in ``benchmarks/run.py`` — these names are the stable ``"name"`` keys):
+
+  fig15/<n>enc/matrix_total_mb   compiled-step bytes, uncompressed model
+  fig15/<n>enc/tensor_total_mb   compiled-step bytes, TT model
+                                 (note carries the paper's FPGA MB)
+  fig15/<n>enc/reduction_x       matrix/tensor ratio (note: paper's ratio)
+  fig15/<n>enc/tensor_args_mb    params + opt state (on-chip-resident set)
+  ledger/<n>enc/<stage>_mb       analytic per-stage residency (FWD/BWD/PU),
+                                 note splits bram/uram pools
+  ledger/<n>enc/fits             1.0 iff peaks fit 6 MB BRAM + 22.5 MB URAM
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.atis_transformer import config_n
+from repro.core.memory_ledger import ledger_rows
 from repro.launch.steps import make_train_step
 from repro.models import init_params
 from repro.optim import sgd
@@ -56,4 +71,7 @@ def rows():
                     f"paper vs matrix-GPU: {PAPER_RATIO_VS_MATRIX_GPU[n_enc]}x"))
         out.append((f"fig15/{n_enc}enc/tensor_args_mb", tt["args"],
                     "params+opt state (the on-chip-resident set)"))
+        out.extend(ledger_rows(
+            config_n(n_enc, tt_mode="tt"), "sgd", f"ledger/{n_enc}enc",
+            fits_note=f"paper on-chip: {PAPER_FPGA_MB[n_enc]} MB"))
     return out

@@ -1,0 +1,86 @@
+"""Parameter-update (PU) stage: fused Pallas kernel vs unfused XLA update.
+
+The paper's training step has three on-chip stages (Sec. III-A); FWD/BWD
+fusion is covered by bench_flows.  This module times stage 3 in isolation
+over the real ATIS TT parameter tree: ``opt.update`` jitted with donated
+buffers, pure-JAX (``fused=False``) vs the fused Pallas kernel
+(``fused=True``, interpret mode on CPU — the *interpret* column measures
+the Python-emulated kernel, so on this backend it is an upper bound; TPU is
+the target where the fused path wins by touching each buffer once).
+
+Also reports the memory-ledger PU-stage residency, connecting the timing to
+the on-chip budget the kernel is designed for.
+
+Emitted rows (CSV via benchmarks.run, JSON schema documented there):
+  pu/<opt>/unfused_us       median jitted unfused update, microseconds
+  pu/<opt>/fused_us         median jitted fused update (interpret on CPU)
+  pu/<opt>/match_maxerr     max |fused - unfused| over params after a step
+  pu/ledger/<stage>_mb      ledger stage totals for the ATIS config
+  pu/ledger/fits            1.0 iff peaks fit the 6 + 22.5 MB envelope
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.atis_transformer import config_n
+from repro.core.memory_ledger import ledger_rows
+from repro.models import init_params
+from repro.optim import adamw, sgd
+
+REPS = 20
+
+
+def _median_us(fn, *args) -> float:
+    fn(*args)  # compile
+    ts = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def _max_err(a, b) -> float:
+    return max(
+        float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def rows():
+    cfg = config_n(2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    grads = jax.tree.map(
+        lambda p: 0.01 * jnp.ones_like(p, dtype=jnp.float32), params)
+    out = []
+    for name, mk in (("sgd", lambda f: sgd(4e-3, momentum=0.9, fused=f)),
+                     ("adamw", lambda f: adamw(1e-3, weight_decay=0.01,
+                                               fused=f))):
+        opt_u, opt_f = mk(False), mk(True)
+        state = opt_u.init(params)
+
+        def run(opt):
+            # No donate_argnums: the timing loop reuses the same param/state
+            # buffers every rep (donated inputs would be invalidated), and on
+            # CPU — where this bench runs — donation is a no-op anyway.  The
+            # in-place aliased path is exercised by the training drivers.
+            return jax.jit(lambda g, p, s: opt.update(g, p, s, s["step"]))
+
+        upd_u, upd_f = run(opt_u), run(opt_f)
+        err = _max_err(upd_u(grads, params, state)[0],
+                       upd_f(grads, params, state)[0])
+        t_u = _median_us(upd_u, grads, params, state)
+        t_f = _median_us(upd_f, grads, params, state)
+        out.append((f"pu/{name}/unfused_us", t_u, "pure-JAX XLA update"))
+        out.append((f"pu/{name}/fused_us", t_f,
+                    "Pallas fused kernel (interpret mode on CPU)"))
+        out.append((f"pu/{name}/match_maxerr", err,
+                    "max |fused - unfused| over params after one step"))
+    # momentum=0.9 so the ledger describes the SGD configuration timed above
+    # (a mu moment buffer + the 3-block momentum kernel).
+    out.extend(ledger_rows(cfg, "sgd", "pu/ledger", momentum=0.9))
+    return out

@@ -11,9 +11,43 @@ command ``python -m benchmarks.run`` produces a single auditable artifact.
   bench_memory       Fig. 15, Table V memory   (compiled-step memory)
   bench_flows        Table V latency proxy     (flow wall-times on CPU)
   bench_rank_sweep   (beyond paper)            (rank ablation at arch scale)
+  bench_pu           Sec. III-A PU stage       (fused vs unfused update +
+                                                per-stage memory ledger)
+
+Usage::
+
+  python -m benchmarks.run [module ...] [--json PATH]
+
+With ``--json PATH`` the same rows are also written as a ``BENCH_*.json``
+-style trajectory snapshot.  JSON schema (stable — downstream tooling diffs
+these files across commits, so only ADD keys, never rename)::
+
+  {
+    "schema": 1,                    # bump on incompatible change
+    "generated_unix": 1753833600,   # time.time() at emission
+    "modules": {
+      "<bench module name>": {
+        "status": "ok" | "error",
+        "seconds": 12.3,            # wall time for the module's rows()
+        "rows": [
+          {"name": "fig6/comp_mm_x", # metric path: <figure-or-table>/<metric>
+           "value": 22.51,           # float | int | str
+           "note": "paper: 22.51x"}, # free-text context, incl. paper value
+          ...
+        ]
+      },
+      ...
+    }
+  }
+
+Row ``name``s are slash-paths: the leading segment identifies the paper
+artifact (``fig15``, ``table3``, ``pu``, ...) and the remainder the metric;
+``note`` carries the paper's printed value where one exists, so a trajectory
+file is self-describing without the paper at hand.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 import traceback
@@ -26,17 +60,33 @@ MODULES = [
     "bench_memory",
     "bench_flows",
     "bench_rank_sweep",
+    "bench_pu",
 ]
 
 
 def main() -> None:
-    only = sys.argv[1:] or None
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            raise SystemExit("--json requires an output path")
+        json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    unknown = [a for a in argv if a not in MODULES]
+    if unknown:
+        raise SystemExit(f"unknown module(s) {unknown}; choose from {MODULES}")
+    only = argv or None
     print("name,value,note")
     failures = 0
+    record: dict = {"schema": 1, "generated_unix": int(time.time()),
+                    "modules": {}}
     for mod_name in MODULES:
         if only and mod_name not in only:
             continue
         t0 = time.time()
+        mod_rows = []
+        status = "ok"
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["rows"])
             for name, value, note in mod.rows():
@@ -44,12 +94,20 @@ def main() -> None:
                     print(f"{name},{value:.6g},{note}")
                 else:
                     print(f"{name},{value},{note}")
+                mod_rows.append({"name": name, "value": value, "note": note})
         except Exception:  # noqa: BLE001
             failures += 1
+            status = "error"
             traceback.print_exc()
             print(f"{mod_name},ERROR,see stderr")
-        print(f"# {mod_name} finished in {time.time() - t0:.1f}s",
-              file=sys.stderr)
+        dt = time.time() - t0
+        record["modules"][mod_name] = {
+            "status": status, "seconds": round(dt, 3), "rows": mod_rows}
+        print(f"# {mod_name} finished in {dt:.1f}s", file=sys.stderr)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"# wrote {json_path}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark module(s) failed")
 

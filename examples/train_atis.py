@@ -14,6 +14,7 @@ Run:  PYTHONPATH=src python examples/train_atis.py --steps 200 --scale-down
 """
 import argparse
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,8 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale-down", action="store_true")
+    ap.add_argument("--fused", action="store_true",
+                    help="Pallas fused PU-stage kernel for the SGD update")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-every", type=int, default=50)
     args = ap.parse_args(argv)
@@ -55,10 +58,13 @@ def main(argv=None):
     print(f"[atis] {args.encoders}-ENC {'matrix' if args.matrix else 'tensor'}: "
           f"{num_params(params):,} params ({param_bytes(params) / 1e6:.2f} MB)")
 
-    opt = sgd(warmup_cosine(lr, max(args.steps // 20, 1), args.steps))
+    opt = sgd(warmup_cosine(lr, max(args.steps // 20, 1), args.steps),
+              fused=args.fused)
     state = opt.init(params)
 
-    @jax.jit
+    # Donation lets XLA reuse the param/state memory across the step
+    # (no-op on CPU, which cannot donate).
+    @partial(jax.jit, donate_argnums=(0, 1))
     def step(params, state, batch):
         loss, grads = jax.value_and_grad(
             lambda p: atis_loss(p, cfg, batch))(params)

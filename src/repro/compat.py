@@ -1,0 +1,38 @@
+"""Version compatibility shims for the JAX API surface this repo targets.
+
+The codebase is written against the modern ``jax.shard_map`` entry point
+(with its ``check_vma`` replication-checker flag); older installs (<= 0.4.x)
+only ship ``jax.experimental.shard_map.shard_map`` with the flag spelled
+``check_rep``.  Everything that shard_maps goes through this wrapper so both
+generations of JAX run the same code.
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+__all__ = ["shard_map", "tpu_compiler_params", "axis_size"]
+
+# Renamed TPUCompilerParams -> CompilerParams across JAX releases.
+tpu_compiler_params = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams
+
+
+def axis_size(axis_name) -> int:
+    """Static mapped-axis size: ``jax.lax.axis_size`` where available,
+    ``jax.core.axis_frame`` on older JAX (returns the size directly on
+    ~0.4.36+, an AxisEnvFrame with ``.size`` before that)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    return frame if isinstance(frame, int) else frame.size
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -21,6 +21,15 @@ from .tt import (
     ttm_params_count,
     ttm_reconstruct,
 )
+from .memory_ledger import (
+    BRAM_BUDGET_BYTES,
+    URAM_BUDGET_BYTES,
+    StageLedger,
+    budget_report,
+    format_report,
+    ledger_rows,
+    training_step_ledger,
+)
 from .tt_linear import (
     FLOWS,
     TTLinearParams,
@@ -45,4 +54,6 @@ __all__ = [
     "TTLinearParams", "tt_linear_init", "tt_linear_apply", "FLOWS",
     "make_tt_spec", "make_ttm_spec",
     "TTMEmbeddingParams", "ttm_embedding_init", "ttm_embedding_apply",
+    "BRAM_BUDGET_BYTES", "URAM_BUDGET_BYTES", "StageLedger",
+    "training_step_ledger", "budget_report", "format_report", "ledger_rows",
 ]

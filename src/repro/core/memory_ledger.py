@@ -1,0 +1,304 @@
+"""Per-training-stage on-chip residency ledger (paper Sec. III-A / Table IV).
+
+The paper's headline hardware claim is an *on-chip-memory-only framework for
+each stage in training*: forward (FWD), backward (BWD), and parameter update
+(PU) all run against a <6 MB BRAM + 22.5 MB URAM budget on the ZCU102.  This
+module makes that claim *checkable in software*: for a model config it
+builds, per stage, the list of buffers that must be live at once, maps each
+onto the paper's two pools, and flags the peak against the budget envelope.
+
+Pools (the TPU/VMEM analogue keeps the paper's split):
+
+* ``bram`` — persistent, parameter-like residency: TT/TTM cores, biases,
+  and optimizer moments.  The paper streams these from BRAM every cycle
+  (Eqs. (22)-(25) size the blocks; ``cost_model.bram_blocks`` models them).
+* ``uram`` — transient, stage-scoped residency: activations/residuals,
+  gradients, and contraction intermediates.  These are the K-sized buffers
+  the paper's URAM holds between stages.
+
+Byte counts come from two places, both already validated elsewhere:
+
+* exact pytree accounting (``jax.eval_shape`` over ``init_params`` /
+  ``opt.init``) for parameters, moments, and gradients;
+* the paper's closed forms in ``cost_model`` (Eq. (21) ``mem_btt``) for the
+  contraction intermediates, evaluated over the actual ``TTSpec``s found in
+  the parameter tree — so ledger totals agree with the cost model by
+  construction (asserted in tests/test_fused_update.py).
+
+Activation residuals are first-order: the fused BTT VJP saves only each
+layer's *inputs* (see ``core.tt_linear._btt_fused_fwd``), so the ledger
+counts one ``(K, N)`` input per TT linear plus the autodiff-saved attention
+probabilities.  Shared inputs (Q/K/V projections read the same ``x``) are
+counted once per projection — a deliberate over-count, i.e. the "fits"
+verdict is conservative.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cost_model import mem_btt
+from .tt import TTSpec
+from .tt_linear import TTLinearParams
+from .ttm_embedding import TTMEmbeddingParams
+
+__all__ = [
+    "BRAM_BUDGET_BYTES",
+    "URAM_BUDGET_BYTES",
+    "LedgerEntry",
+    "StageLedger",
+    "training_step_ledger",
+    "budget_report",
+    "format_report",
+    "ledger_rows",
+]
+
+BRAM_BUDGET_BYTES = 6 * 2**20            # paper: <6 MB BRAM
+URAM_BUDGET_BYTES = int(22.5 * 2**20)    # paper: 22.5 MB URAM
+STAGES = ("FWD", "BWD", "PU")
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerEntry:
+    name: str
+    nbytes: int
+    pool: str  # "bram" | "uram"
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class StageLedger:
+    stage: str
+    entries: tuple[LedgerEntry, ...]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.nbytes for e in self.entries)
+
+    def pool_bytes(self, pool: str) -> int:
+        return sum(e.nbytes for e in self.entries if e.pool == pool)
+
+    def entry(self, name: str) -> LedgerEntry:
+        for e in self.entries:
+            if e.name == name:
+                return e
+        raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# Pytree accounting helpers.
+# ---------------------------------------------------------------------------
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def _tree_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def _collect_modules(params) -> tuple[list[TTLinearParams], list[TTMEmbeddingParams]]:
+    """All TT linear / TTM embedding modules in a parameter pytree (the
+    dataclass nodes survive ``jax.eval_shape``; specs are static aux)."""
+    tts: list[TTLinearParams] = []
+    ttms: list[TTMEmbeddingParams] = []
+
+    def visit(node):
+        if isinstance(node, TTLinearParams):
+            tts.append(node)
+        elif isinstance(node, TTMEmbeddingParams):
+            ttms.append(node)
+        return node
+
+    jax.tree.map(visit, params,
+                 is_leaf=lambda n: isinstance(n, (TTLinearParams,
+                                                  TTMEmbeddingParams)))
+    return tts, ttms
+
+
+def _stacked_multiplier(module) -> int:
+    """Layer-stacked modules (vmapped cycles) carry a leading stack dim on
+    every core; the spec describes ONE layer.  Infer the multiplier."""
+    core = module.cores[0]
+    spec_rank0 = module.spec.core_shapes()[0]
+    return int(core.shape[0]) if len(core.shape) == len(spec_rank0) + 1 else 1
+
+
+def _btt_kernel_vmem_bytes(spec: TTSpec, itemsize: int) -> int:
+    """VMEM working set of one ``btt_linear_pallas`` grid step — the
+    kernel's own tile chooser, so ledger and kernel cannot drift."""
+    from repro.kernels.btt_linear import choose_tiles
+
+    return choose_tiles(spec.out_dim, spec.mid_rank, itemsize)[4]
+
+
+def _pu_kernel_vmem_bytes(n_params: int, n_bufs: int) -> int:
+    """VMEM working set of one fused-update grid step: ``n_bufs`` blocks of
+    (block_rows, lanes) f32 (params + grads + moments, outputs aliased)."""
+    from repro.kernels.fused_update import pu_block_shape
+
+    br, _, lanes = pu_block_shape(n_params)
+    return n_bufs * br * lanes * 4
+
+
+# ---------------------------------------------------------------------------
+# The ledger.
+# ---------------------------------------------------------------------------
+
+
+def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
+                         batch: int = 1, seq: int = 32) -> dict[str, StageLedger]:
+    """Per-stage (FWD/BWD/PU) peak-residency ledgers for one training step.
+
+    ``optimizer`` sizes the moment buffers: "sgd" (none, or one with
+    ``momentum``) or "adamw" (two).  ``batch=1, seq=32`` is the paper's
+    regime (Sec. VI).  Everything is derived from ``jax.eval_shape`` — no
+    device memory is allocated.
+    """
+    from repro.models.transformer import init_params
+    from repro.optim import adamw as _adamw, sgd as _sgd
+
+    K = batch * seq
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    opt = _adamw(1e-3) if optimizer == "adamw" else _sgd(1e-3, momentum)
+    opt_state = jax.eval_shape(opt.init, params)
+
+    act_itemsize = jnp.dtype(cfg.dtype).itemsize
+    params_bytes = _tree_bytes(params)
+    n_params = _tree_count(params)
+    grads_bytes = n_params * 4  # train steps accumulate grads in f32
+    moments_bytes = _tree_bytes(opt_state) - 4  # minus the int32 step scalar
+
+    tts, ttms = _collect_modules(params)
+    specs = [m.spec for m in tts]
+
+    # Contraction intermediates (paper Eq. (21)): layers run sequentially,
+    # so the live set is the *largest* layer's, not the sum.
+    tt_inter_peak = max(
+        (mem_btt(s, K) * act_itemsize for s in specs), default=0)
+
+    # Residuals the fused VJP saves for BWD: one (K, N) input per TT-linear
+    # application (stacked modules apply once per stacked layer).
+    n_tt_apps = 0
+    resid_bytes = 0
+    for m in tts:
+        mult = _stacked_multiplier(m)
+        n_tt_apps += mult
+        resid_bytes += mult * K * m.spec.in_dim * act_itemsize
+    # Autodiff-saved attention probabilities, (B, h, S, S) per attn layer.
+    n_layers = cfg.num_layers
+    attn_probs = n_layers * batch * cfg.n_heads * seq * seq * act_itemsize
+    # Embedding output + positional sum, the first saved activation
+    # (one per TTM/dense embedding module).
+    embed_act = max(len(ttms), 1) * K * cfg.d_model * act_itemsize
+    resid_total = resid_bytes + attn_probs + embed_act
+
+    fwd_kernel_vmem = max(
+        (_btt_kernel_vmem_bytes(s, act_itemsize) for s in specs), default=0)
+    # Live VMEM blocks per fused_update grid step = the input buffer list
+    # (outputs are aliased onto inputs): (p, g) / (p, mu, g) / (p, m, v, g).
+    n_pu_bufs = {"sgd": 3 if momentum else 2, "adamw": 4}[optimizer]
+    pu_kernel_vmem = _pu_kernel_vmem_bytes(n_params, n_pu_bufs)
+
+    fwd = StageLedger("FWD", (
+        LedgerEntry("params", params_bytes, "bram",
+                    "TT/TTM cores + biases + norms (eval_shape-exact)"),
+        LedgerEntry("residuals", resid_total, "uram",
+                    f"fused-VJP saved inputs ({n_tt_apps} TT apps) "
+                    "+ attn probs + embed"),
+        LedgerEntry("tt_intermediates", tt_inter_peak, "uram",
+                    "paper Eq. (21) mem_btt, max over layers"),
+        LedgerEntry("kernel_vmem", fwd_kernel_vmem, "uram",
+                    "btt_linear_pallas working set, largest layer"),
+    ))
+    bwd = StageLedger("BWD", (
+        LedgerEntry("params", params_bytes, "bram",
+                    "re-read for half-factor rebuild"),
+        LedgerEntry("residuals", resid_total, "uram",
+                    "consumed as BWD walks the graph"),
+        LedgerEntry("grads", grads_bytes, "uram", "f32 accumulators"),
+        LedgerEntry("tt_intermediates", tt_inter_peak, "uram",
+                    "t = x @ B^T recomputed per layer (never stored)"),
+        LedgerEntry("kernel_vmem", fwd_kernel_vmem, "uram",
+                    "backward reuses the fused forward kernel (operand swap)"),
+    ))
+    pu = StageLedger("PU", (
+        LedgerEntry("params", params_bytes, "bram", "updated in place"),
+        LedgerEntry("moments", moments_bytes, "bram",
+                    f"{optimizer} optimizer state (eval_shape-exact)"),
+        LedgerEntry("grads", grads_bytes, "uram", "consumed by the update"),
+        LedgerEntry("kernel_vmem", pu_kernel_vmem, "uram",
+                    f"fused_update: {n_pu_bufs} live blocks per grid step"),
+    ))
+    return {"FWD": fwd, "BWD": bwd, "PU": pu}
+
+
+def budget_report(ledgers: dict[str, StageLedger]) -> dict[str, Any]:
+    """Peak per-pool residency across stages vs the paper's envelope."""
+    bram_peak = max(ledgers[s].pool_bytes("bram") for s in STAGES)
+    uram_peak = max(ledgers[s].pool_bytes("uram") for s in STAGES)
+    return {
+        "bram_peak_bytes": bram_peak,
+        "uram_peak_bytes": uram_peak,
+        "bram_budget_bytes": BRAM_BUDGET_BYTES,
+        "uram_budget_bytes": URAM_BUDGET_BYTES,
+        "fits_bram": bram_peak <= BRAM_BUDGET_BYTES,
+        "fits_uram": uram_peak <= URAM_BUDGET_BYTES,
+        "fits": (bram_peak <= BRAM_BUDGET_BYTES
+                 and uram_peak <= URAM_BUDGET_BYTES),
+        "peak_stage_bytes": {s: ledgers[s].total_bytes for s in STAGES},
+    }
+
+
+def ledger_rows(cfg, optimizer: str, prefix: str, *, momentum: float = 0.0,
+                fits_note: str = "") -> list[tuple[str, float, str]]:
+    """Benchmark rows for one config: per-stage MB + a fits flag.
+
+    Shared by bench_memory and bench_pu so the emitted names/notes cannot
+    diverge.  Notes are CSV-safe ("; "-separated — benchmarks.run emits
+    bare 3-column ``name,value,note`` lines).
+    """
+    led = training_step_ledger(cfg, optimizer, momentum=momentum)
+    rep = budget_report(led)
+    mb = 1 / 2**20
+    out: list[tuple[str, float, str]] = []
+    for stage in STAGES:
+        out.append((
+            f"{prefix}/{stage}_mb", led[stage].total_bytes * mb,
+            f"bram {led[stage].pool_bytes('bram') * mb:.3f} MB + "
+            f"uram {led[stage].pool_bytes('uram') * mb:.3f} MB"))
+    note = (f"peak bram {rep['bram_peak_bytes'] * mb:.2f}/6.0 MB; "
+            f"uram {rep['uram_peak_bytes'] * mb:.2f}/22.5 MB")
+    if fits_note:
+        note += f"; {fits_note}"
+    out.append((f"{prefix}/fits", 1.0 if rep["fits"] else 0.0, note))
+    return out
+
+
+def format_report(ledgers: dict[str, StageLedger]) -> str:
+    """Human-readable ledger table (used by benchmarks and docs examples)."""
+    rep = budget_report(ledgers)
+    mb = 1 / 2**20
+    lines = []
+    for s in STAGES:
+        led = ledgers[s]
+        lines.append(f"{s}: {led.total_bytes * mb:.3f} MB "
+                     f"(bram {led.pool_bytes('bram') * mb:.3f}, "
+                     f"uram {led.pool_bytes('uram') * mb:.3f})")
+        for e in led.entries:
+            lines.append(f"    {e.name:<18} {e.nbytes * mb:8.3f} MB "
+                         f"[{e.pool}]  {e.note}")
+    lines.append(
+        f"peak: bram {rep['bram_peak_bytes'] * mb:.3f}/"
+        f"{rep['bram_budget_bytes'] * mb:.1f} MB "
+        f"({'OK' if rep['fits_bram'] else 'OVER'}), "
+        f"uram {rep['uram_peak_bytes'] * mb:.3f}/"
+        f"{rep['uram_budget_bytes'] * mb:.1f} MB "
+        f"({'OK' if rep['fits_uram'] else 'OVER'})")
+    return "\n".join(lines)

@@ -5,11 +5,15 @@
 ``flash_attention`` — causal/windowed GQA flash attention (online-softmax
                       state in VMEM scratch; closes the 86%-of-traffic gap
                       the pure-JAX blockwise path leaves on prefill cells).
+``fused_update``    — fused parameter-update (PU) stage: SGD(+momentum) /
+                      AdamW over flattened parameter buffers in one pass,
+                      moments updated in place (paper Sec. III-A step 3).
 ``ops``        — jit wrappers + fused custom VJP + pure-JAX fallbacks.
 ``ref``        — pure-jnp oracles the kernels are swept against.
 """
 from .btt_linear import btt_linear_pallas
 from .flash_attention import flash_attention_pallas
+from .fused_update import fused_adamw_update, fused_sgd_update
 from .ops import btt_linear_op, kernel_interpret_default, ttm_embed_op
 from .ref import btt_linear_ref, btt_t_ref, ttm_embed_ref
 from .ttm_embed import ttm_embed_pallas
@@ -18,4 +22,5 @@ __all__ = [
     "btt_linear_pallas", "ttm_embed_pallas", "flash_attention_pallas",
     "btt_linear_op", "ttm_embed_op", "kernel_interpret_default",
     "btt_linear_ref", "btt_t_ref", "ttm_embed_ref",
+    "fused_sgd_update", "fused_adamw_update",
 ]

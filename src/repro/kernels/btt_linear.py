@@ -35,10 +35,37 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["btt_linear_pallas", "DEFAULT_TK", "DEFAULT_TN"]
+from repro.compat import tpu_compiler_params
+
+__all__ = ["btt_linear_pallas", "choose_tiles", "DEFAULT_TK", "DEFAULT_TN"]
 
 DEFAULT_TK = 256
 DEFAULT_TN = 512
+VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def choose_tiles(M: int, R: int, itemsize: int, *, tk: int | None = None,
+                 tn: int | None = None) -> tuple[int, int, int, int, int]:
+    """(tk, tn, mp, rp, vmem_bytes): tile sizes + padded dims + the per-grid-
+    step VMEM working set, shrinking ``tk`` until it fits VMEM_BUDGET.
+
+    Single source of truth for the kernel's residency: ``btt_linear_pallas``
+    launches with these tiles and ``core.memory_ledger`` reports the same
+    ``vmem_bytes`` — the two cannot drift.
+    """
+    tk = tk or DEFAULT_TK
+    tn = tn or DEFAULT_TN
+    mp = _round_up(M, 128)
+    rp = _round_up(R, 128)
+
+    # y block (tk, mp) + a (mp, rp) + x (tk, tn) + b (rp, tn) + t (tk, rp) f32
+    def vmem(tk_):
+        return (tk_ * mp * itemsize + mp * rp * itemsize + tk_ * tn * itemsize
+                + rp * tn * itemsize + tk_ * rp * 4)
+
+    while tk > 64 and vmem(tk) > VMEM_BUDGET:
+        tk //= 2
+    return tk, tn, mp, rp, vmem(tk)
 
 
 def _fwd_kernel(x_ref, b_ref, a_ref, y_ref, t_ref, *, n_blocks: int):
@@ -88,16 +115,7 @@ def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
 
     # --- choose tiles under a VMEM budget -------------------------------
     itemsize = jnp.dtype(x.dtype).itemsize
-    tk = tk or DEFAULT_TK
-    tn = tn or DEFAULT_TN
-    mp = _round_up(M, 128)
-    rp = _round_up(R, 128)
-    # y block (tk, Mp) + a (Mp, rp) + x (tk, tn) + b (rp, tn) + t (tk, rp) f32
-    def vmem(tk_):
-        return (tk_ * mp * itemsize + mp * rp * itemsize + tk_ * tn * itemsize
-                + rp * tn * itemsize + tk_ * rp * 4)
-    while tk > 64 and vmem(tk) > 12 * 1024 * 1024:
-        tk //= 2
+    tk, tn, mp, rp, _ = choose_tiles(M, R, itemsize, tk=tk, tn=tn)
 
     kp = _round_up(K, tk)
     np_ = _round_up(N, tn)
@@ -119,7 +137,7 @@ def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
         out_specs=pl.BlockSpec((tk, mp), lambda k, n: (k, 0)),
         out_shape=jax.ShapeDtypeStruct((kp, mp), out_dtype),
         scratch_shapes=[pltpu.VMEM((tk, rp), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

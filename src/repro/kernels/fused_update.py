@@ -1,0 +1,271 @@
+"""Pallas TPU kernels: fused parameter-update (PU) stage.
+
+The paper's framework keeps *every* training stage on chip (Sec. III-A):
+FWD, BWD, and the parameter update (step 3, "PU") all run against the
+BRAM/URAM budget.  FWD/BWD are already fused (``btt_linear.py`` +
+the custom VJP in ``ops.py``); this module fuses the third stage.  The idiom
+follows Count-Sketch Optimizers' dense path — "update the auxiliary
+variables and perform the gradient update in a single fused kernel" — so a
+training step touches each optimizer buffer exactly once.
+
+Why fuse an elementwise update?  Unfused, an AdamW step is ~10 XLA HLOs per
+parameter leaf; each moment buffer round-trips HBM<->VMEM several times
+(read m, write m', read m' again for the step, ...).  Fused, the kernel
+tiles **flattened** parameter / gradient / moment buffers through VMEM once:
+per grid step it reads one (rows, lanes) block of each operand, computes the
+entire update (moment EMAs, bias correction, weight decay, parameter delta)
+in registers/VMEM f32, and writes the block back.  ``input_output_aliases``
+makes the update in-place at the *packed-buffer* level — the kernel itself
+never double-buffers optimizer state, which matters when the budget is a
+few MB of on-chip SRAM.  The pack/unpack reshapes around the kernel are
+ordinary XLA ops: leaves still round-trip into the packed layout each step
+(XLA fuses but does not alias through concatenate/pad), so end-to-end
+leaf-level aliasing awaits storing optimizer state flat-packed between
+steps — noted as future work in docs/memory_optimizations.md.
+
+Layout: each dtype-group of leaves is raveled and concatenated into one 1-D
+buffer, zero-padded to a (rows, LANES) tile grid — one kernel launch per
+*training step*, not per core.  This is the PU analogue of the packed core
+buffers in ``core.cost_model.tpu_packing_efficiency``: TT cores are tiny
+(a (12, 8, 12) core wastes >90% of an (8, 128) tile stored alone), so the
+flat packing is also what makes the PU stage's VMEM residency minimal.
+
+All kernels run ``interpret=True`` on CPU (the validation path, like every
+other kernel here); TPU is the target.  Pure-JAX fallbacks live in
+``optim.optimizers`` (``fused=False``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "fused_sgd_update",
+    "fused_adamw_update",
+    "pack_leaves",
+    "unpack_leaves",
+    "pu_block_shape",
+]
+
+LANES = 1024          # minor dim of the flattened tile grid (8 x 128 lanes)
+BLOCK_ROWS = 256      # rows per grid step: (256, 1024) f32 block = 1 MB
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def pu_block_shape(n_elems: int) -> tuple[int, int, int]:
+    """(block_rows, padded_rows, lanes) for a flat buffer of ``n_elems``.
+
+    Small buffers (the whole ATIS TT model is ~0.3M elements) collapse to a
+    single sublane-aligned block; large ones stream BLOCK_ROWS-row tiles.
+    """
+    lanes = LANES if n_elems >= LANES else 128
+    rows = max(1, -(-n_elems // lanes))
+    br = min(BLOCK_ROWS, _round_up(rows, 8))
+    return br, _round_up(rows, br), lanes
+
+
+def pack_leaves(leaves: Sequence[jax.Array], dtype, rows_p: int,
+                lanes: int) -> jax.Array:
+    """Ravel+concat ``leaves`` into one padded (rows_p, lanes) buffer."""
+    flat = jnp.concatenate([jnp.ravel(x).astype(dtype) for x in leaves])
+    return jnp.pad(flat, (0, rows_p * lanes - flat.size)).reshape(rows_p, lanes)
+
+
+def unpack_leaves(buf: jax.Array, shapes: Sequence[tuple[int, ...]],
+                  dtypes: Sequence[Any]) -> list[jax.Array]:
+    """Inverse of :func:`pack_leaves` (slices are static; XLA fuses them)."""
+    flat = buf.reshape(-1)
+    sizes = [int(np.prod(s)) for s in shapes]
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    return [
+        jax.lax.slice(flat, (int(offs[i]),), (int(offs[i + 1]),))
+        .reshape(shapes[i]).astype(dtypes[i])
+        for i in range(len(shapes))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies.  Grid is 1-D over row blocks; scalars ride in SMEM as a
+# (1, k) f32 vector (TPU scalars must be 2-D); hyperparameters that are
+# Python floats are baked in as compile-time constants via partial.
+# ---------------------------------------------------------------------------
+
+
+def _sgd_kernel(scal_ref, p_ref, g_ref, o_ref):
+    lr = scal_ref[0, 0]
+    p = p_ref[...].astype(jnp.float32)
+    o_ref[...] = (p - lr * g_ref[...]).astype(o_ref.dtype)
+
+
+def _sgd_momentum_kernel(scal_ref, p_ref, mu_ref, g_ref, o_ref, omu_ref, *,
+                         momentum: float):
+    lr = scal_ref[0, 0]
+    mu = momentum * mu_ref[...] + g_ref[...]
+    p = p_ref[...].astype(jnp.float32)
+    omu_ref[...] = mu
+    o_ref[...] = (p - lr * mu).astype(o_ref.dtype)
+
+
+def _adamw_kernel(scal_ref, p_ref, m_ref, v_ref, g_ref,
+                  o_ref, om_ref, ov_ref, *,
+                  b1: float, b2: float, eps: float, weight_decay: float):
+    lr = scal_ref[0, 0]
+    t = scal_ref[0, 1]
+    # Bias correction computed IN-KERNEL from the step scalar.
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    g = g_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * jnp.square(g)
+    p = p_ref[...].astype(jnp.float32)
+    step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+    if weight_decay:
+        step = step + lr * weight_decay * p
+    om_ref[...] = m
+    ov_ref[...] = v
+    o_ref[...] = (p - step).astype(o_ref.dtype)
+
+
+def _pu_call(kernel, scal: jax.Array, bufs: Sequence[jax.Array],
+             n_outs: int, br: int, interpret: bool) -> tuple[jax.Array, ...]:
+    """Launch a PU kernel over flat (rows_p, lanes) buffers.
+
+    ``bufs`` order is (aliased..., grads): param buffer first (its dtype is
+    the first output's dtype), then f32 moment buffers, grads last.  The
+    first ``n_outs`` bufs are aliased to the outputs, so donated inputs
+    update in place.  ``br`` is the block-row count from the same
+    ``pu_block_shape`` call that sized the buffers (rows_p % br == 0).
+    """
+    rows_p, lanes = bufs[0].shape
+    grid = (rows_p // br,)
+    blk = pl.BlockSpec((br, lanes), lambda i: (i, 0))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM)]
+        + [blk] * len(bufs),
+        out_specs=[blk] * n_outs,
+        out_shape=[jax.ShapeDtypeStruct(b.shape, b.dtype)
+                   for b in bufs[:n_outs]],
+        # scal is input 0; alias param/state inputs onto the outputs.
+        input_output_aliases={1 + i: i for i in range(n_outs)},
+        interpret=interpret,
+    )(scal, *bufs)
+    return tuple(out)
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _dtype_groups(leaves: Sequence[jax.Array]) -> list[list[int]]:
+    """Indices of ``leaves`` grouped by dtype (one kernel launch per group)."""
+    groups: dict[Any, list[int]] = {}
+    for i, x in enumerate(leaves):
+        groups.setdefault(jnp.dtype(x.dtype), []).append(i)
+    return list(groups.values())
+
+
+def _scal(lr_t, t=0.0) -> jax.Array:
+    return jnp.stack([jnp.asarray(lr_t, jnp.float32),
+                      jnp.asarray(t, jnp.float32)]).reshape(1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Public pytree-level entry points.
+# ---------------------------------------------------------------------------
+
+
+def fused_sgd_update(params, grads, lr_t, *, momentum: float = 0.0,
+                     mu=None, interpret: bool | None = None):
+    """One fused SGD(+momentum) PU stage over a parameter pytree.
+
+    Returns ``new_params`` (momentum == 0) or ``(new_params, new_mu)``.
+    Numerics match the pure-JAX path in ``optim.optimizers.sgd`` (all math
+    in f32, params cast back to their storage dtype).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    mu_leaves = treedef.flatten_up_to(mu) if mu is not None else None
+    new_p: list = [None] * len(p_leaves)
+    new_mu: list = [None] * len(p_leaves)
+    scal = _scal(lr_t)
+    for idx in _dtype_groups(p_leaves):
+        group = [p_leaves[i] for i in idx]
+        n = sum(int(np.prod(x.shape)) for x in group)
+        br, rows_p, lanes = pu_block_shape(n)
+        pdt = group[0].dtype
+        pb = pack_leaves(group, pdt, rows_p, lanes)
+        gb = pack_leaves([g_leaves[i] for i in idx], jnp.float32, rows_p, lanes)
+        shapes = [x.shape for x in group]
+        if momentum == 0.0:
+            (ob,) = _pu_call(_sgd_kernel, scal, [pb, gb], 1, br, interpret)
+            outs = unpack_leaves(ob, shapes, [pdt] * len(group))
+            for j, i in enumerate(idx):
+                new_p[i] = outs[j]
+        else:
+            mb = pack_leaves([mu_leaves[i] for i in idx], jnp.float32,
+                             rows_p, lanes)
+            kern = functools.partial(_sgd_momentum_kernel, momentum=momentum)
+            ob, omb = _pu_call(kern, scal, [pb, mb, gb], 2, br, interpret)
+            outs = unpack_leaves(ob, shapes, [pdt] * len(group))
+            mouts = unpack_leaves(omb, shapes, [jnp.float32] * len(group))
+            for j, i in enumerate(idx):
+                new_p[i], new_mu[i] = outs[j], mouts[j]
+    params_out = jax.tree.unflatten(treedef, new_p)
+    if momentum == 0.0:
+        return params_out
+    return params_out, jax.tree.unflatten(treedef, new_mu)
+
+
+def fused_adamw_update(params, grads, m, v, lr_t, t, *, b1: float,
+                       b2: float, eps: float, weight_decay: float,
+                       interpret: bool | None = None):
+    """One fused AdamW PU stage: ``(new_params, new_m, new_v)``.
+
+    ``t`` is the 1-based step (bias correction is computed in-kernel from
+    it); hyperparameters are compile-time constants.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(m)
+    v_leaves = treedef.flatten_up_to(v)
+    new_p: list = [None] * len(p_leaves)
+    new_m: list = [None] * len(p_leaves)
+    new_v: list = [None] * len(p_leaves)
+    scal = _scal(lr_t, t)
+    kern = functools.partial(_adamw_kernel, b1=b1, b2=b2, eps=eps,
+                             weight_decay=weight_decay)
+    for idx in _dtype_groups(p_leaves):
+        group = [p_leaves[i] for i in idx]
+        n = sum(int(np.prod(x.shape)) for x in group)
+        br, rows_p, lanes = pu_block_shape(n)
+        pdt = group[0].dtype
+        pb = pack_leaves(group, pdt, rows_p, lanes)
+        mb = pack_leaves([m_leaves[i] for i in idx], jnp.float32, rows_p, lanes)
+        vb = pack_leaves([v_leaves[i] for i in idx], jnp.float32, rows_p, lanes)
+        gb = pack_leaves([g_leaves[i] for i in idx], jnp.float32, rows_p, lanes)
+        ob, omb, ovb = _pu_call(kern, scal, [pb, mb, vb, gb], 3, br, interpret)
+        shapes = [x.shape for x in group]
+        outs = unpack_leaves(ob, shapes, [pdt] * len(group))
+        mouts = unpack_leaves(omb, shapes, [jnp.float32] * len(group))
+        vouts = unpack_leaves(ovb, shapes, [jnp.float32] * len(group))
+        for j, i in enumerate(idx):
+            new_p[i], new_m[i], new_v[i] = outs[j], mouts[j], vouts[j]
+    return (jax.tree.unflatten(treedef, new_p),
+            jax.tree.unflatten(treedef, new_m),
+            jax.tree.unflatten(treedef, new_v))

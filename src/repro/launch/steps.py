@@ -43,6 +43,13 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
     lineage for its new leading axis, so without an explicit constraint
     GSPMD may drop the DP sharding of the per-microbatch batch (observed:
     16x activation memory on the 400B MoE cell).
+
+    The PU stage is whatever ``opt.update`` lowers to: construct the
+    optimizer with ``fused=True`` (optim.optimizers) to run it as the
+    Pallas fused-update kernel.  Callers should jit the returned step with
+    ``donate_argnums=(0, 1)`` (as launch.train does) so XLA can reuse the
+    donated param/state memory across the step (the kernel's own aliasing
+    is at the packed-buffer level — see kernels.fused_update).
     """
 
     def grads_of(params, batch):
@@ -97,9 +104,15 @@ def make_ddp_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
 
     State: (params, opt_state, ef_residuals).  Returns a jitted callable
     ``(params, opt_state, ef, batch) -> (params, opt_state, ef, metrics)``.
+
+    A ``fused=True`` optimizer composes with this path: params are
+    replicated per-shard inside shard_map, so the fused PU kernel runs on
+    each device's full (tiny, TT-compressed) parameter set — args 0/1 are
+    donated below so XLA can reuse their memory across the step.
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map
     from repro.runtime.compress import compressed_allreduce_mean, ef_compress_tree
 
     def step(params, opt_state, ef, batch):
@@ -123,7 +136,7 @@ def make_ddp_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
 
     rep = P()
     batch_spec = P("data")
-    mapped = jax.shard_map(
+    mapped = shard_map(
         step, mesh=mesh,
         in_specs=(rep, rep, rep, batch_spec),
         out_specs=(rep, rep, rep, rep),

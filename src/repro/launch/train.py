@@ -64,6 +64,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--optimizer", choices=("sgd", "adamw"), default="adamw")
+    ap.add_argument("--fused", action="store_true",
+                    help="run the PU stage as the Pallas fused-update "
+                         "kernel (interpret mode off-TPU)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -79,7 +82,8 @@ def main(argv=None) -> dict:
     vocab = cfg.vocab_size
 
     lr = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
-    opt = sgd(lr) if args.optimizer == "sgd" else adamw(lr)
+    opt = (sgd(lr, fused=args.fused) if args.optimizer == "sgd"
+           else adamw(lr, fused=args.fused))
     train_step = make_train_step(cfg, opt, microbatches=args.microbatches)
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)

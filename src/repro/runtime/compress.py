@@ -20,6 +20,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.compat import axis_size
+
 __all__ = [
     "quantize_int8", "dequantize_int8",
     "compressed_allreduce_mean", "ef_compress_tree", "ef_init",
@@ -46,7 +48,7 @@ def compressed_allreduce_mean(x: jax.Array, axis_name: str) -> jax.Array:
     every device after a full loop is the (approximate) sum; divide for mean.
     Bytes on wire per element per step: 1 (plus one f32 scale per tensor).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     perm = [(i, (i + 1) % n) for i in range(n)]

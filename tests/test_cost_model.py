@@ -6,7 +6,7 @@ the paper's printed example ratios come out exactly (Fig. 6: 22.51x /
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import TTSpec, btt_contraction_cost, dense_matmul_cost, rl_contraction_cost
 from repro.core.cost_model import (
