@@ -1,0 +1,108 @@
+"""BWD stage: fused single-kernel backward vs the unfused 4-GEMM path.
+
+The paper's training step has three on-chip stages (Sec. III-A); this
+module covers stage 2, where ~2/3 of the step FLOPs live.  It compares the
+fused ``kernels.btt_backward`` launch (gx/ga/gb in one pass, t/gt resident
+in VMEM) against the unfused path (operand-swap forward launch for gx +
+four XLA GEMMs that round-trip t/gt through HBM) on three axes:
+
+* **FLOPs** — identical by construction (same five contractions); emitted
+  once so trajectory files are self-describing.
+* **HBM bytes moved** — the analytic tile-derived traffic models in
+  ``kernels.btt_backward`` (the quantity the fusion exists to shrink).
+  Emitted per shipped ATIS config over every TT layer in its parameter
+  tree; the ``fewer_bytes`` flag asserts the fused path moves strictly
+  fewer bytes for every layer of every config.
+* **wall-clock** — median jitted microseconds.  On CPU the fused column
+  runs the kernel in *interpret* mode (Python emulation) and is an upper
+  bound, as with bench_pu; TPU is the target.
+
+Emitted rows (CSV via benchmarks.run, JSON schema documented there):
+  bwd/paper_layer/flops         five-contraction FLOPs, paper 768x768 r12
+  bwd/paper_layer/fused_bytes   analytic fused HBM traffic (K=32)
+  bwd/paper_layer/unfused_bytes analytic unfused HBM traffic
+  bwd/paper_layer/bytes_ratio   unfused / fused (>1 = fused wins)
+  bwd/paper_layer/fused_us      median jitted fused bwd (interpret on CPU)
+  bwd/paper_layer/unfused_us    median jitted unfused bwd
+  bwd/paper_layer/match_maxerr  max |fused - unfused| over (gx, ga, gb)
+  bwd/atis_<n>enc/bytes_ratio   min ratio over the config's TT layers
+  bwd/atis_<n>enc/fewer_bytes   1.0 iff fused < unfused for EVERY layer
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import median_us
+from repro.configs.atis_transformer import config_n
+from repro.core.memory_ledger import _collect_modules
+from repro.kernels import (
+    btt_backward_pallas,
+    btt_backward_ref,
+    fused_bwd_hbm_bytes,
+    unfused_bwd_hbm_bytes,
+)
+from repro.kernels.btt_backward import bwd_flops
+from repro.models import init_params
+
+REPS = 5                # interpret-mode kernels are slow; median of 5
+K_PAPER = 32            # batch 1 x seq 32, the paper's training regime
+PAPER = (32, 768, 768, 12)  # (K, M, N, R): the paper's 768x768 rank-12 layer
+
+
+def _config_specs(cfg):
+    """(out_dim, in_dim, mid_rank) of every TT linear in the config."""
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    tts, _ = _collect_modules(params)
+    return sorted({(m.spec.out_dim, m.spec.in_dim, m.spec.mid_rank)
+                   for m in tts})
+
+
+def rows():
+    K, M, N, R = PAPER
+    kx, kg, kb, ka = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(kx, (K, N))
+    gy = jax.random.normal(kg, (K, M))
+    b = jax.random.normal(kb, (R, N)) * 0.05
+    a = jax.random.normal(ka, (M, R)) * 0.05
+
+    fused = jax.jit(lambda *ops: btt_backward_pallas(*ops, interpret=True))
+    unfused = jax.jit(btt_backward_ref)
+
+    g_f = fused(x, gy, b, a)
+    g_u = unfused(x, gy, b, a)
+    err = max(float(jnp.max(jnp.abs(u.astype(jnp.float32)
+                                    - v.astype(jnp.float32))))
+              for u, v in zip(g_f, g_u))
+
+    fb = fused_bwd_hbm_bytes(K, M, N, R, 4)
+    ub = unfused_bwd_hbm_bytes(K, M, N, R, 4)
+    out = [
+        ("bwd/paper_layer/flops", float(bwd_flops(K, M, N, R)),
+         "t/gt/gx/ga/gb contractions; 768x768 r12; K=32"),
+        ("bwd/paper_layer/fused_bytes", float(fb),
+         "analytic HBM traffic of one fused btt_backward launch"),
+        ("bwd/paper_layer/unfused_bytes", float(ub),
+         "operand-swap gx launch + 4 XLA GEMMs (t/gt round-trip f32)"),
+        ("bwd/paper_layer/bytes_ratio", ub / fb,
+         ">1 = fused moves fewer HBM bytes"),
+        ("bwd/paper_layer/fused_us",
+         median_us(fused, x, gy, b, a, reps=REPS),
+         "Pallas fused BWD kernel (interpret mode on CPU; upper bound)"),
+        ("bwd/paper_layer/unfused_us",
+         median_us(unfused, x, gy, b, a, reps=REPS),
+         "pure-XLA reference backward"),
+        ("bwd/paper_layer/match_maxerr", err,
+         "max |fused - unfused| over (gx, ga, gb)"),
+    ]
+
+    for n_enc in (2, 4, 6):
+        ratios = [unfused_bwd_hbm_bytes(K_PAPER, m, n, r, 4)
+                  / fused_bwd_hbm_bytes(K_PAPER, m, n, r, 4)
+                  for m, n, r in _config_specs(config_n(n_enc))]
+        out.append((f"bwd/atis_{n_enc}enc/bytes_ratio", min(ratios),
+                    f"min over {len(ratios)} distinct TT layer shapes"))
+        out.append((f"bwd/atis_{n_enc}enc/fewer_bytes",
+                    1.0 if min(ratios) > 1.0 else 0.0,
+                    "1 = fused < unfused HBM bytes for every TT layer"))
+    return out

@@ -20,29 +20,17 @@ Emitted rows (CSV via benchmarks.run, JSON schema documented there):
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.timing import median_us
 from repro.configs.atis_transformer import config_n
 from repro.core.memory_ledger import ledger_rows
 from repro.models import init_params
 from repro.optim import adamw, sgd
 
 REPS = 20
-
-
-def _median_us(fn, *args) -> float:
-    fn(*args)  # compile
-    ts = []
-    for _ in range(REPS):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
 
 
 def _max_err(a, b) -> float:
@@ -73,8 +61,8 @@ def rows():
         upd_u, upd_f = run(opt_u), run(opt_f)
         err = _max_err(upd_u(grads, params, state)[0],
                        upd_f(grads, params, state)[0])
-        t_u = _median_us(upd_u, grads, params, state)
-        t_f = _median_us(upd_f, grads, params, state)
+        t_u = median_us(upd_u, grads, params, state, reps=REPS)
+        t_f = median_us(upd_f, grads, params, state, reps=REPS)
         out.append((f"pu/{name}/unfused_us", t_u, "pure-JAX XLA update"))
         out.append((f"pu/{name}/fused_us", t_f,
                     "Pallas fused kernel (interpret mode on CPU)"))

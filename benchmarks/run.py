@@ -13,6 +13,9 @@ command ``python -m benchmarks.run`` produces a single auditable artifact.
   bench_rank_sweep   (beyond paper)            (rank ablation at arch scale)
   bench_pu           Sec. III-A PU stage       (fused vs unfused update +
                                                 per-stage memory ledger)
+  bench_bwd          Sec. III-A BWD stage      (fused single-kernel backward
+                                                vs 4-GEMM path: FLOPs, HBM
+                                                bytes moved, wall-clock)
 
 Usage::
 
@@ -61,6 +64,7 @@ MODULES = [
     "bench_flows",
     "bench_rank_sweep",
     "bench_pu",
+    "bench_bwd",
 ]
 
 

@@ -1,0 +1,26 @@
+"""Shared wall-clock helper for the benchmark modules.
+
+One definition so the fused-vs-unfused timing columns emitted by different
+modules (bench_pu, bench_bwd, ...) stay methodologically comparable: warm
+the jit cache with one call, then report the median of ``reps`` blocked
+runs in microseconds.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["median_us"]
+
+
+def median_us(fn, *args, reps: int = 20) -> float:
+    fn(*args)  # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

@@ -40,11 +40,23 @@ def main(argv=None):
     ap.add_argument("--scale-down", action="store_true")
     ap.add_argument("--fused", action="store_true",
                     help="Pallas fused PU-stage kernel for the SGD update")
+    ap.add_argument("--kernel-flow", action="store_true",
+                    help="run TT linears through the fused Pallas kernels "
+                         "(flow='kernel'; interpret mode off-TPU)")
+    ap.add_argument("--fused-bwd", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="with --kernel-flow: fused single-kernel BWD stage "
+                         "(--no-fused-bwd = operand-swap + XLA GEMMs; "
+                         "unset keeps the config's fused_bwd)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-every", type=int, default=50)
     args = ap.parse_args(argv)
 
     cfg = config_n(args.encoders, tt_mode="off" if args.matrix else "tt")
+    if args.kernel_flow:
+        cfg = cfg.with_tt(flow="kernel")
+    if args.fused_bwd is not None:
+        cfg = cfg.with_tt(fused_bwd=args.fused_bwd)
     if args.scale_down:
         cfg = cfg.scaled_down(d_model=256, n_heads=4, d_ff=256,
                               vocab_size=1000, num_layers=args.encoders,

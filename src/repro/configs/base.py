@@ -26,7 +26,9 @@ class TTConfig:
     rank: int = 64                # TT rank for weight matrices
     embed_rank: int = 64          # TTM rank for the embedding table
     d: int = 3                    # tensorization order (2d cores per matrix)
-    flow: str = "btt_fused"       # "rl" | "btt" | "btt_fused"
+    flow: str = "btt_fused"       # "rl" | "btt" | "btt_fused" | "kernel"
+    fused_bwd: bool = True        # flow="kernel": run the BWD stage as the
+                                  # single fused Pallas kernel (btt_backward)
     scope: tuple[str, ...] = ("attn", "ffn", "embed")  # what gets compressed
     clamp_ranks: bool = True      # False = paper-exact uniform interior ranks
 

@@ -130,12 +130,27 @@ def _stacked_multiplier(module) -> int:
     return int(core.shape[0]) if len(core.shape) == len(spec_rank0) + 1 else 1
 
 
-def _btt_kernel_vmem_bytes(spec: TTSpec, itemsize: int) -> int:
+def _btt_kernel_vmem_bytes(spec: TTSpec, itemsize: int, K: int) -> int:
     """VMEM working set of one ``btt_linear_pallas`` grid step — the
-    kernel's own tile chooser, so ledger and kernel cannot drift."""
+    kernel's own tile chooser (with the step's actual K), so ledger and
+    kernel cannot drift."""
     from repro.kernels.btt_linear import choose_tiles
 
-    return choose_tiles(spec.out_dim, spec.mid_rank, itemsize)[4]
+    return choose_tiles(spec.out_dim, spec.mid_rank, itemsize, K=K)[4]
+
+
+def _btt_bwd_kernel_vmem_bytes(spec: TTSpec, itemsize: int, K: int,
+                               fused: bool) -> int:
+    """VMEM working set of the BWD-stage launch for one layer — the fused
+    ``btt_backward_pallas`` kernel's when ``cfg.tt.fused_bwd`` and it fits
+    the budget (the path ``kernels.ops`` takes), else the operand-swap
+    forward launch's.  Derived by the same chooser the kernel launches
+    with, so ledger and tiles cannot drift (the FWD stage makes the
+    identical promise)."""
+    from repro.kernels.btt_backward import bwd_stage_vmem_bytes
+
+    return bwd_stage_vmem_bytes(spec.out_dim, spec.in_dim, spec.mid_rank,
+                                itemsize, K=K, fused=fused)
 
 
 def _pu_kernel_vmem_bytes(n_params: int, n_bufs: int) -> int:
@@ -200,7 +215,12 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     resid_total = resid_bytes + attn_probs + embed_act
 
     fwd_kernel_vmem = max(
-        (_btt_kernel_vmem_bytes(s, act_itemsize) for s in specs), default=0)
+        (_btt_kernel_vmem_bytes(s, act_itemsize, K) for s in specs),
+        default=0)
+    bwd_kernel_vmem = max(
+        (_btt_bwd_kernel_vmem_bytes(s, act_itemsize, K, cfg.tt.fused_bwd)
+         for s in specs),
+        default=0)
     # Live VMEM blocks per fused_update grid step = the input buffer list
     # (outputs are aliased onto inputs): (p, g) / (p, mu, g) / (p, m, v, g).
     n_pu_bufs = {"sgd": 3 if momentum else 2, "adamw": 4}[optimizer]
@@ -225,8 +245,11 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         LedgerEntry("grads", grads_bytes, "uram", "f32 accumulators"),
         LedgerEntry("tt_intermediates", tt_inter_peak, "uram",
                     "t = x @ B^T recomputed per layer (never stored)"),
-        LedgerEntry("kernel_vmem", fwd_kernel_vmem, "uram",
-                    "backward reuses the fused forward kernel (operand swap)"),
+        LedgerEntry("kernel_vmem", bwd_kernel_vmem, "uram",
+                    ("btt_backward_pallas working set (gx/ga/gb one pass), "
+                     "largest layer") if cfg.tt.fused_bwd else
+                    "operand-swap btt_linear_pallas working set "
+                    "(fused_bwd=False)"),
     ))
     pu = StageLedger("PU", (
         LedgerEntry("params", params_bytes, "bram", "updated in place"),

@@ -115,8 +115,14 @@ _btt_fused.defvjp(_btt_fused_fwd, _btt_fused_bwd)
 
 
 def tt_linear_apply(params: TTLinearParams, x: jax.Array, *,
-                    flow: str = "btt_fused") -> jax.Array:
-    """Apply ``y = W x + b`` with W in TT format.  ``x (..., N) -> (..., M)``."""
+                    flow: str = "btt_fused",
+                    fused_bwd: bool = True) -> jax.Array:
+    """Apply ``y = W x + b`` with W in TT format.  ``x (..., N) -> (..., M)``.
+
+    ``fused_bwd`` only affects ``flow="kernel"``: True (default) runs the
+    BWD stage as the single fused Pallas kernel (``kernels.btt_backward``),
+    False forces the operand-swap + XLA-GEMM reference backward.
+    """
     spec = params.spec
     lead = x.shape[:-1]
     xk = x.reshape(-1, x.shape[-1])
@@ -130,7 +136,8 @@ def tt_linear_apply(params: TTLinearParams, x: jax.Array, *,
         y = _btt_fused(tuple(params.cores), xk, spec)
     elif flow == "kernel":
         from repro.kernels.ops import btt_linear_op  # lazy: pallas import
-        y = btt_linear_op(params.cores, xk, spec, use_kernel=True)
+        y = btt_linear_op(params.cores, xk, spec, use_kernel=True,
+                          fused_bwd=fused_bwd)
     else:
         raise ValueError(f"unknown flow {flow!r}; expected one of {FLOWS}")
     if params.out_dim != spec.out_dim:

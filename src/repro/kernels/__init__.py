@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
 ``btt_linear``      — fused two-GEMM BTT linear (VMEM-resident intermediate).
+``btt_backward``    — fused BWD stage: gx/ga/gb in one pass, t/gt recomputed
+                      into VMEM scratch, ga/gb accumulated on chip
+                      (paper Eqs. (10)/(11)/(16); zero HBM intermediates).
 ``ttm_embed``       — gather-free d=3 TTM embedding lookup (one-hot MXU GEMMs).
 ``flash_attention`` — causal/windowed GQA flash attention (online-softmax
                       state in VMEM scratch; closes the 86%-of-traffic gap
@@ -11,16 +14,26 @@
 ``ops``        — jit wrappers + fused custom VJP + pure-JAX fallbacks.
 ``ref``        — pure-jnp oracles the kernels are swept against.
 """
+from .btt_backward import (
+    btt_backward_pallas,
+    bwd_vmem_fits,
+    choose_bwd_tiles,
+    fused_bwd_hbm_bytes,
+    unfused_bwd_hbm_bytes,
+)
 from .btt_linear import btt_linear_pallas
 from .flash_attention import flash_attention_pallas
 from .fused_update import fused_adamw_update, fused_sgd_update
 from .ops import btt_linear_op, kernel_interpret_default, ttm_embed_op
-from .ref import btt_linear_ref, btt_t_ref, ttm_embed_ref
+from .ref import btt_backward_ref, btt_linear_ref, btt_t_ref, ttm_embed_ref
 from .ttm_embed import ttm_embed_pallas
 
 __all__ = [
-    "btt_linear_pallas", "ttm_embed_pallas", "flash_attention_pallas",
+    "btt_linear_pallas", "btt_backward_pallas", "ttm_embed_pallas",
+    "flash_attention_pallas",
     "btt_linear_op", "ttm_embed_op", "kernel_interpret_default",
-    "btt_linear_ref", "btt_t_ref", "ttm_embed_ref",
+    "btt_linear_ref", "btt_t_ref", "btt_backward_ref", "ttm_embed_ref",
     "fused_sgd_update", "fused_adamw_update",
+    "choose_bwd_tiles", "bwd_vmem_fits",
+    "fused_bwd_hbm_bytes", "unfused_bwd_hbm_bytes",
 ]

@@ -45,9 +45,15 @@ VMEM_BUDGET = 12 * 1024 * 1024
 
 
 def choose_tiles(M: int, R: int, itemsize: int, *, tk: int | None = None,
-                 tn: int | None = None) -> tuple[int, int, int, int, int]:
+                 tn: int | None = None,
+                 K: int | None = None) -> tuple[int, int, int, int, int]:
     """(tk, tn, mp, rp, vmem_bytes): tile sizes + padded dims + the per-grid-
     step VMEM working set, shrinking ``tk`` until it fits VMEM_BUDGET.
+
+    ``K`` (the paper's batch x seq, tiny in the on-FPGA regime: 32) caps
+    ``tk`` at the sublane-aligned row count actually present, so a K=32
+    launch doesn't pad to — and stream — a 256-row block (8x the real
+    traffic and residency).
 
     Single source of truth for the kernel's residency: ``btt_linear_pallas``
     launches with these tiles and ``core.memory_ledger`` reports the same
@@ -55,6 +61,10 @@ def choose_tiles(M: int, R: int, itemsize: int, *, tk: int | None = None,
     """
     tk = tk or DEFAULT_TK
     tn = tn or DEFAULT_TN
+    if K is not None:
+        # 32-row alignment satisfies every dtype's sublane tile (f32 8,
+        # bf16 16, int8 32).
+        tk = min(tk, _round_up(K, 32))
     mp = _round_up(M, 128)
     rp = _round_up(R, 128)
 
@@ -115,7 +125,7 @@ def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
 
     # --- choose tiles under a VMEM budget -------------------------------
     itemsize = jnp.dtype(x.dtype).itemsize
-    tk, tn, mp, rp, _ = choose_tiles(M, R, itemsize, tk=tk, tn=tn)
+    tk, tn, mp, rp, _ = choose_tiles(M, R, itemsize, tk=tk, tn=tn, K=K)
 
     kp = _round_up(K, tk)
     np_ = _round_up(N, tn)

@@ -2,9 +2,14 @@
 
 * ``btt_linear_op(cores, x, spec)`` — the paper's BTT linear executed by the
   fused Pallas forward (``btt_linear.py``) under a custom VJP that implements
-  the paper's fused backward (Sec. V-B2): no K-sized intermediate is saved;
-  the backward recomputes ``t`` and routes the data gradient through the same
-  fused kernel by operand swap (``gx = btt(gy, A^T, B^T)``).
+  the paper's fused backward (Sec. V-B2): no K-sized intermediate is saved.
+  With ``fused_bwd=True`` (default) the whole BWD stage — data gradient AND
+  half-factor gradients — runs as ONE Pallas kernel
+  (``btt_backward.py``) with the recomputed ``t``/``gt`` intermediates
+  resident in VMEM scratch; shapes whose working set exceeds the VMEM
+  budget, or ``fused_bwd=False``, take the reference path: ``gx`` through
+  the forward kernel by operand swap (``gx = btt(gy, A^T, B^T)``) plus four
+  XLA GEMMs for the core gradients (f32 end to end).
 
 * ``ttm_embed_op(cores, ids, spec)`` — gather-free TTM lookup via the d=3
   one-hot kernel; falls back to the jnp gather chain when d != 3 or the cores
@@ -26,6 +31,7 @@ import numpy as np
 from repro.core.contraction import tt_forward_btt, ttm_lookup, token_digits
 from repro.core.tt import TTMSpec, TTSpec, tt_half_factors
 
+from .btt_backward import btt_backward_pallas, bwd_vmem_fits
 from .btt_linear import btt_linear_pallas
 from .ttm_embed import ttm_embed_pallas
 
@@ -44,20 +50,20 @@ def kernel_interpret_default() -> bool:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def _btt_kernel_fused(cores: tuple, x: jax.Array, spec: TTSpec,
-                      interpret: bool) -> jax.Array:
+                      interpret: bool, fused_bwd: bool) -> jax.Array:
     a, b = tt_half_factors(cores, spec)
     return btt_linear_pallas(x, b, a, interpret=interpret)
 
 
-def _btt_kernel_fwd(cores, x, spec, interpret):
+def _btt_kernel_fwd(cores, x, spec, interpret, fused_bwd):
     a, b = tt_half_factors(cores, spec)
     y = btt_linear_pallas(x, b, a, interpret=interpret)
     return y, (cores, x)  # paper-faithful: only inputs saved, no K-sized state
 
 
-def _btt_kernel_bwd(spec, interpret, residuals, gy):
+def _btt_kernel_bwd(spec, interpret, fused_bwd, residuals, gy):
     cores, x = residuals
     d = spec.d
 
@@ -65,15 +71,26 @@ def _btt_kernel_bwd(spec, interpret, residuals, gy):
         return tt_half_factors(list(oc) + list(ic), spec)
 
     (a, b), build_vjp = jax.vjp(build, tuple(cores[:d]), tuple(cores[d:]))
-    # Data gradient through the SAME fused kernel (operand swap):
-    #   gx = (gy @ A) @ B = btt(gy; b=A^T, a=B^T)
-    gx = btt_linear_pallas(gy, a.T, b.T, interpret=interpret)
-    # Core gradients: small K-reduction GEMMs (outputs are r-sized).
-    t = jnp.dot(x, b.T, preferred_element_type=jnp.float32).astype(x.dtype)
-    gt = jnp.dot(gy, a, preferred_element_type=jnp.float32).astype(gy.dtype)
-    ga = jnp.dot(gy.T, t, preferred_element_type=jnp.float32).astype(a.dtype)
-    gb = jnp.dot(gt.T, x, preferred_element_type=jnp.float32).astype(b.dtype)
-    g_out, g_in = build_vjp((ga, gb))
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if fused_bwd and bwd_vmem_fits(spec.out_dim, spec.in_dim, spec.mid_rank,
+                                   itemsize, K=x.shape[0]):
+        # ONE kernel launch: gx streamed, ga/gb accumulated on chip —
+        # t/gt never leave VMEM (paper Eqs. (10)/(11)/(16) as one stage).
+        gx, ga, gb = btt_backward_pallas(x, gy, b, a, interpret=interpret)
+    else:
+        # Reference path: data gradient through the fused FORWARD kernel by
+        # operand swap (gx = (gy @ A) @ B = btt(gy; b=A^T, a=B^T)); core
+        # gradients as four XLA GEMMs with t/gt kept f32 through the
+        # dependent products (same math as btt_backward_ref, minus its
+        # kernel-idiom gx GEMM, which the operand-swap launch replaces).
+        gx = btt_linear_pallas(gy, a.T, b.T, interpret=interpret)
+        t = jnp.dot(x, b.T, preferred_element_type=jnp.float32)
+        gt = jnp.dot(gy, a, preferred_element_type=jnp.float32)
+        ga = jnp.dot(gy.T.astype(jnp.float32), t,
+                     preferred_element_type=jnp.float32)
+        gb = jnp.dot(gt.T, x.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    g_out, g_in = build_vjp((ga.astype(a.dtype), gb.astype(b.dtype)))
     return (tuple(g_out) + tuple(g_in), gx)
 
 
@@ -82,13 +99,20 @@ _btt_kernel_fused.defvjp(_btt_kernel_fwd, _btt_kernel_bwd)
 
 def btt_linear_op(cores, x: jax.Array, spec: TTSpec, *,
                   use_kernel: bool = True,
-                  interpret: bool | None = None) -> jax.Array:
-    """``x (K, N) -> y (K, M)`` with W in TT format, BTT contraction."""
+                  interpret: bool | None = None,
+                  fused_bwd: bool = True) -> jax.Array:
+    """``x (K, N) -> y (K, M)`` with W in TT format, BTT contraction.
+
+    ``fused_bwd`` selects the single-kernel BWD stage for the gradients
+    (falls back automatically when the shape's working set exceeds the
+    kernel VMEM budget); ``False`` forces the operand-swap + XLA-GEMM
+    reference path.
+    """
     if not use_kernel:
         return tt_forward_btt(cores, x, spec)
     if interpret is None:
         interpret = kernel_interpret_default()
-    return _btt_kernel_fused(tuple(cores), x, spec, interpret)
+    return _btt_kernel_fused(tuple(cores), x, spec, interpret, fused_bwd)
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["btt_linear_ref", "btt_t_ref", "ttm_embed_ref"]
+__all__ = ["btt_linear_ref", "btt_t_ref", "btt_backward_ref", "ttm_embed_ref"]
 
 
 def btt_linear_ref(x: jnp.ndarray, b: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
@@ -25,6 +25,29 @@ def btt_linear_ref(x: jnp.ndarray, b: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarra
 def btt_t_ref(x: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """First stage only: ``t = x @ b^T`` in f32 (the VMEM-resident tensor)."""
     return jnp.dot(x, b.T, preferred_element_type=jnp.float32)
+
+
+def btt_backward_ref(x: jnp.ndarray, gy: jnp.ndarray, b: jnp.ndarray,
+                     a: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """BTT backward: ``(gx, ga, gb)`` for ``y = (x @ b^T) @ a^T``.
+
+    ``x (K, N)`` saved input, ``gy (K, M)`` output cotangent, ``b (R, N)``
+    / ``a (M, R)`` half-factors -> ``gx (K, N)`` in ``x.dtype``, ``ga
+    (M, R)`` / ``gb (R, N)`` in f32.  The intermediates ``t``/``gt`` stay
+    f32 through the dependent products — the precision contract the fused
+    kernel and the unfused fallback both honor (the final cast to the core
+    dtype happens in ``ops.py``, after this math).
+    """
+    t = jnp.dot(x, b.T, preferred_element_type=jnp.float32)
+    gt = jnp.dot(gy, a, preferred_element_type=jnp.float32)
+    gx = jnp.dot(gt.astype(b.dtype), b,
+                 preferred_element_type=jnp.float32).astype(x.dtype)
+    ga = jnp.dot(gy.T.astype(jnp.float32), t,
+                 preferred_element_type=jnp.float32)
+    gb = jnp.dot(gt.T, x.astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    return gx, ga, gb
 
 
 def ttm_embed_ref(oh: tuple[jnp.ndarray, ...], cores: tuple[jnp.ndarray, ...]

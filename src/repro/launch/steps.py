@@ -31,7 +31,7 @@ __all__ = [
 
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
                     clip_norm: float = 1.0, remat: bool = True,
-                    batch_constraint=None):
+                    batch_constraint=None, fused_bwd: bool | None = None):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     ``microbatches > 1`` accumulates gradients over leading batch splits in a
@@ -50,7 +50,14 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
     ``donate_argnums=(0, 1)`` (as launch.train does) so XLA can reuse the
     donated param/state memory across the step (the kernel's own aliasing
     is at the packed-buffer level — see kernels.fused_update).
+
+    ``fused_bwd`` (optional) overrides ``cfg.tt.fused_bwd`` for this step:
+    with ``flow="kernel"``, True runs the BWD stage as the single fused
+    Pallas kernel (``kernels.btt_backward``), False the operand-swap +
+    XLA-GEMM reference path.  ``None`` keeps the config's setting.
     """
+    if fused_bwd is not None:
+        cfg = cfg.with_tt(fused_bwd=fused_bwd)
 
     def grads_of(params, batch):
         return jax.value_and_grad(loss_fn)(params, cfg, batch, remat=remat)

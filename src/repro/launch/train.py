@@ -46,6 +46,8 @@ def build(args):
     if args.tt:
         cfg = cfg.with_tt(mode="tt", rank=args.tt_rank,
                           embed_rank=args.tt_rank)
+    if args.kernel_flow:
+        cfg = cfg.with_tt(flow="kernel")
     if args.fp32:
         import dataclasses
         cfg = dataclasses.replace(cfg, dtype="float32")
@@ -67,6 +69,15 @@ def main(argv=None) -> dict:
     ap.add_argument("--fused", action="store_true",
                     help="run the PU stage as the Pallas fused-update "
                          "kernel (interpret mode off-TPU)")
+    ap.add_argument("--kernel-flow", action="store_true",
+                    help="run TT linears through the fused Pallas kernels "
+                         "(flow='kernel'; interpret mode off-TPU)")
+    ap.add_argument("--fused-bwd", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="with --kernel-flow: run the BWD stage as the "
+                         "single fused Pallas kernel (--no-fused-bwd "
+                         "forces the operand-swap + XLA-GEMM path; "
+                         "unset keeps the config's fused_bwd)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -84,7 +95,8 @@ def main(argv=None) -> dict:
     lr = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
     opt = (sgd(lr, fused=args.fused) if args.optimizer == "sgd"
            else adamw(lr, fused=args.fused))
-    train_step = make_train_step(cfg, opt, microbatches=args.microbatches)
+    train_step = make_train_step(cfg, opt, microbatches=args.microbatches,
+                                 fused_bwd=args.fused_bwd)
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     opt_state = opt.init(params)

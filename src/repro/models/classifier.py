@@ -51,12 +51,14 @@ def atis_forward(params: dict, cfg: ModelConfig, tokens: jax.Array):
     """Returns (intent_logits (B, I), slot_logits (B, S, L))."""
     h, _ = forward(params["backbone"], cfg, tokens, mode="train",
                    features_only=True, remat=False)
-    flow = cfg.tt.flow
+    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
     cls = h[:, 0, :]  # position 0 acts as [CLS]
-    hi = jnp.tanh(linear_apply(params["heads"]["intent_proj"], cls, flow=flow))
+    hi = jnp.tanh(linear_apply(params["heads"]["intent_proj"], cls,
+                               flow=flow, fused_bwd=fb))
     io = params["heads"]["intent_out"]
     intent_logits = jnp.einsum("bd,cd->bc", hi, io["w"]) + io["b"]
-    hs = jnp.tanh(linear_apply(params["heads"]["slot_proj"], h, flow=flow))
+    hs = jnp.tanh(linear_apply(params["heads"]["slot_proj"], h,
+                               flow=flow, fused_bwd=fb))
     so = params["heads"]["slot_out"]
     slot_logits = jnp.einsum("bsd,cd->bsc", hs, so["w"]) + so["b"]
     return intent_logits, slot_logits

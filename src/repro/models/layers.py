@@ -58,9 +58,10 @@ def make_linear(key: jax.Array, out_dim: int, in_dim: int, cfg: ModelConfig,
     return DenseLinearParams(w=w, bias=bias)
 
 
-def linear_apply(params, x: jax.Array, *, flow: str = "btt_fused") -> jax.Array:
+def linear_apply(params, x: jax.Array, *, flow: str = "btt_fused",
+                 fused_bwd: bool = True) -> jax.Array:
     if isinstance(params, TTLinearParams):
-        return tt_linear_apply(params, x, flow=flow)
+        return tt_linear_apply(params, x, flow=flow, fused_bwd=fused_bwd)
     y = jnp.einsum("...n,mn->...m", x, params.w,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     if params.bias is not None:
@@ -134,21 +135,21 @@ def make_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None,
 
 
 def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    flow = cfg.tt.flow
+    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
     # Megatron cut point: the hidden dim shards on "model".  Dense weights
     # give GSPMD this lineage for free; TT factors are REPLICATED, so an
     # explicit constraint is required or the whole FFN replicates 16x
     # (EXPERIMENTS.md §Perf, technique-cell iteration).
-    up = constrain(linear_apply(p["up"], x, flow=flow),
+    up = constrain(linear_apply(p["up"], x, flow=flow, fused_bwd=fb),
                    ("pod", "data"), None, "model")
     if cfg.mlp_gated:
-        gate = constrain(linear_apply(p["gate"], x, flow=flow),
+        gate = constrain(linear_apply(p["gate"], x, flow=flow, fused_bwd=fb),
                          ("pod", "data"), None, "model")
         act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
         h = act * up
     else:
         h = jax.nn.gelu(up) if cfg.act == "gelu" else jax.nn.silu(up)
-    return linear_apply(p["down"], h, flow=flow)
+    return linear_apply(p["down"], h, flow=flow, fused_bwd=fb)
 
 
 # ---------------------------------------------------------------------------

@@ -35,10 +35,12 @@ def _expert_linear_init(key, e: int, out_dim: int, in_dim: int, cfg: ModelConfig
     return {"w": w * jnp.asarray(std, w.dtype)}
 
 
-def _expert_linear_apply(params, x: jax.Array, flow: str) -> jax.Array:
+def _expert_linear_apply(params, x: jax.Array, flow: str,
+                         fb: bool = True) -> jax.Array:
     """``x (E, C, in) -> (E, C, out)`` batched over experts."""
     if isinstance(params, TTLinearParams):
-        return jax.vmap(lambda p, xe: tt_linear_apply(p, xe, flow=flow))(params, x)
+        return jax.vmap(lambda p, xe: tt_linear_apply(
+            p, xe, flow=flow, fused_bwd=fb))(params, x)
     return jnp.einsum("ecd,efd->ecf", x, params["w"],
                       preferred_element_type=jnp.float32).astype(x.dtype)
 
@@ -94,7 +96,7 @@ def _moe_grouped(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     Capacity is per group: C = ceil(S * k / E * cf).
     """
     m = cfg.moe
-    flow = cfg.tt.flow
+    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
     G, S, D = x.shape  # group per sequence
     E, k = m.padded_experts, m.top_k  # dispatch over the padded expert dim
     cap = int(math.ceil(S * k / m.num_experts * m.capacity_factor))
@@ -130,10 +132,10 @@ def _moe_grouped(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     else:
         xg = xg.reshape(E, G * cap, D)
 
-    up = _expert_linear_apply(p["up"], xg, flow)
-    gate = _expert_linear_apply(p["gate"], xg, flow)
+    up = _expert_linear_apply(p["up"], xg, flow, fb)
+    gate = _expert_linear_apply(p["gate"], xg, flow, fb)
     h = jax.nn.silu(gate) * up
-    yg = _expert_linear_apply(p["down"], h, flow)                # (E, G*cap, D)
+    yg = _expert_linear_apply(p["down"], h, flow, fb)                # (E, G*cap, D)
 
     yg = yg.reshape(E, G, cap, D).transpose(1, 0, 2, 3)          # all-to-all back
     if pin:

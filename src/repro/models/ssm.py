@@ -158,13 +158,13 @@ def mamba2_apply(p: dict, u: jax.Array, cfg: ModelConfig,
     s = cfg.ssm
     d_in = s.d_inner(cfg.d_model)
     h = s.n_heads(cfg.d_model)
-    flow = cfg.tt.flow
+    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
     # channel-dim TP cut point (TT factors are replicated; see layers.py)
-    zx = constrain(linear_apply(p["zx_proj"], u, flow=flow),
+    zx = constrain(linear_apply(p["zx_proj"], u, flow=flow, fused_bwd=fb),
                    ("pod", "data"), None, "model")
     z, x0 = jnp.split(zx, 2, axis=-1)
-    bc = linear_apply(p["bc_proj"], u, flow=flow)
-    dt_raw = linear_apply(p["dt_proj"], u, flow=flow)
+    bc = linear_apply(p["bc_proj"], u, flow=flow, fused_bwd=fb)
+    dt_raw = linear_apply(p["dt_proj"], u, flow=flow, fused_bwd=fb)
     xbc = jnp.concatenate([x0, bc], axis=-1)
 
     new_cache = {}
@@ -202,7 +202,7 @@ def mamba2_apply(p: dict, u: jax.Array, cfg: ModelConfig,
     y = (y + xh * p["D"][None, None, :, None]).astype(u.dtype)
     y = y.reshape(B_, L, d_in)
     y = _gated_rms(y, z, p["gate_norm"], cfg.norm_eps)
-    out = linear_apply(p["out_proj"], y, flow=flow)
+    out = linear_apply(p["out_proj"], y, flow=flow, fused_bwd=fb)
     return out, new_cache
 
 
@@ -228,9 +228,11 @@ def rglru_init(key: jax.Array, cfg: ModelConfig) -> dict:
     }
 
 
-def _rglru_coeffs(p: dict, x: jax.Array, flow: str):
-    r = jax.nn.sigmoid(linear_apply(p["a_gate"], x, flow=flow).astype(jnp.float32))
-    i = jax.nn.sigmoid(linear_apply(p["i_gate"], x, flow=flow).astype(jnp.float32))
+def _rglru_coeffs(p: dict, x: jax.Array, flow: str, fb: bool = True):
+    r = jax.nn.sigmoid(linear_apply(p["a_gate"], x, flow=flow,
+                                    fused_bwd=fb).astype(jnp.float32))
+    i = jax.nn.sigmoid(linear_apply(p["i_gate"], x, flow=flow,
+                                    fused_bwd=fb).astype(jnp.float32))
     log_a = -_RGLRU_C * r * jax.nn.softplus(p["lam"])          # log a_t  (<0)
     a = jnp.exp(log_a)
     mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
@@ -241,10 +243,10 @@ def _rglru_coeffs(p: dict, x: jax.Array, flow: str):
 def rglru_apply(p: dict, u: jax.Array, cfg: ModelConfig,
                 cache: dict | None = None, *, mode: str = "train"):
     """Griffin recurrent block.  cache = {"conv": (B, 3, d), "h": (B, d)}."""
-    flow = cfg.tt.flow
-    x = constrain(linear_apply(p["x_proj"], u, flow=flow),
+    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
+    x = constrain(linear_apply(p["x_proj"], u, flow=flow, fused_bwd=fb),
                   ("pod", "data"), None, "model")
-    g = constrain(linear_apply(p["gate_proj"], u, flow=flow),
+    g = constrain(linear_apply(p["gate_proj"], u, flow=flow, fused_bwd=fb),
                   ("pod", "data"), None, "model")
 
     new_cache = {}
@@ -256,7 +258,7 @@ def rglru_apply(p: dict, u: jax.Array, cfg: ModelConfig,
         xc = causal_conv(x, p["conv_kernel"])
         new_cache["conv"] = x[:, -3:, :]  # raw inputs, not conv output
 
-    a, b = _rglru_coeffs(p, xc, flow)
+    a, b = _rglru_coeffs(p, xc, flow, fb)
     if mode == "decode":
         h_prev = cache["h"].astype(jnp.float32)
         h = a[:, 0] * h_prev + b[:, 0]
@@ -273,4 +275,4 @@ def rglru_apply(p: dict, u: jax.Array, cfg: ModelConfig,
         _, hseq = jax.lax.associative_scan(combine, (a, b), axis=1)
         new_cache["h"] = hseq[:, -1, :]
     y = hseq.astype(u.dtype) * jax.nn.gelu(g)
-    return linear_apply(p["out_proj"], y, flow=flow), new_cache
+    return linear_apply(p["out_proj"], y, flow=flow, fused_bwd=fb), new_cache

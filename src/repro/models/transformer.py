@@ -74,13 +74,13 @@ def _attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, window: int | None,
     decode step writes O(B·KV·dh) bytes, not O(B·S·KV·dh)."""
     B, S, _ = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    flow = cfg.tt.flow
+    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
     # Head-dim TP cut point (see mlp_apply note re: replicated TT factors).
-    q = meshctx_constrain(linear_apply(p["q"], x, flow=flow),
+    q = meshctx_constrain(linear_apply(p["q"], x, flow=flow, fused_bwd=fb),
                           ("pod", "data"), None, "model").reshape(B, S, H, dh)
-    k = meshctx_constrain(linear_apply(p["k"], x, flow=flow),
+    k = meshctx_constrain(linear_apply(p["k"], x, flow=flow, fused_bwd=fb),
                           ("pod", "data"), None, "model").reshape(B, S, KV, dh)
-    v = meshctx_constrain(linear_apply(p["v"], x, flow=flow),
+    v = meshctx_constrain(linear_apply(p["v"], x, flow=flow, fused_bwd=fb),
                           ("pod", "data"), None, "model").reshape(B, S, KV, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
@@ -112,7 +112,7 @@ def _attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, window: int | None,
         if mode == "prefill":
             new_cache = {"k": k, "v": v}
     out = out.reshape(B, S, H * dh)
-    return linear_apply(p["o"], out, flow=flow), new_cache
+    return linear_apply(p["o"], out, flow=flow, fused_bwd=fb), new_cache
 
 
 def block_init(key: jax.Array, kind: str, cfg: ModelConfig) -> dict:
@@ -215,7 +215,8 @@ def _embed_inputs(params: dict, cfg: ModelConfig, tokens: jax.Array,
                   patches: jax.Array | None, pos_offset) -> jax.Array:
     h = embedding_apply(params["embed"], tokens)
     if cfg.frontend == "patch" and patches is not None:
-        pe = linear_apply(params["patch_proj"], patches, flow=cfg.tt.flow)
+        pe = linear_apply(params["patch_proj"], patches, flow=cfg.tt.flow,
+                          fused_bwd=cfg.tt.fused_bwd)
         h = jnp.concatenate([pe, h[:, patches.shape[1]:, :]], axis=1)
     if cfg.pos_embed == "learned":
         S = tokens.shape[1]
@@ -339,7 +340,8 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
         logits = jnp.einsum("bsd,vd->bsv", h, table,
                             preferred_element_type=jnp.float32).astype(h.dtype)
     else:
-        logits = linear_apply(params["head"], h, flow=cfg.tt.flow)
+        logits = linear_apply(params["head"], h, flow=cfg.tt.flow,
+                              fused_bwd=cfg.tt.fused_bwd)
     # Vocab-shard the logits explicitly: with a TT head the weight factors
     # are replicated, so GSPMD has no lineage to shard the (B, S, V) output
     # — unconstrained it replicates ~40 GB/device of logits on 150k-vocab

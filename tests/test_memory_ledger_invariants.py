@@ -1,0 +1,120 @@
+"""Memory-ledger invariants over EVERY shipped config.
+
+The ledger's contract is that its per-stage kernel rows are *derived from
+the kernels' own tile choosers* — the residency it reports is the residency
+the launched tiles imply, with no second bookkeeping that could drift.
+These tests walk every registered arch (TT-compressed, scaled to the CPU
+test regime for the non-paper archs), recompute each stage's working set
+straight from ``choose_tiles`` / ``bwd_stage_vmem_bytes`` /
+``pu_block_shape``, and assert byte-for-byte equality with the ledger —
+plus the paper's envelope checks: kernel working sets fit the 22.5 MB URAM
+pool everywhere, and the paper's own ATIS models fit the full
+6 MB BRAM + 22.5 MB URAM budget at every stage.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.configs.atis_transformer import config_n
+from repro.core.memory_ledger import (
+    BRAM_BUDGET_BYTES,
+    URAM_BUDGET_BYTES,
+    _collect_modules,
+    budget_report,
+    training_step_ledger,
+)
+from repro.kernels.btt_backward import bwd_stage_vmem_bytes
+from repro.kernels.btt_linear import choose_tiles
+from repro.kernels.fused_update import pu_block_shape
+
+BATCH, SEQ = 1, 32          # the paper's training regime (Sec. VI)
+K = BATCH * SEQ
+
+
+def _tt_config(arch):
+    cfg = get_config(arch)
+    if arch != "atis-transformer":
+        cfg = cfg.scaled_down().with_tt(mode="tt", rank=8, embed_rank=8)
+    return cfg
+
+
+def _abstract_params(cfg):
+    from repro.models.transformer import init_params
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def _specs(cfg):
+    tts, _ = _collect_modules(_abstract_params(cfg))
+    return [m.spec for m in tts]
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_kernel_rows_are_chooser_derived(arch):
+    """FWD and BWD kernel_vmem == the max over TT layers of the values the
+    tile choosers return for this step's K — recomputed here independently
+    of the ledger's own code path."""
+    cfg = _tt_config(arch)
+    led = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    specs = _specs(cfg)
+    assert specs, f"{arch}: TT mode produced no TT layers"
+
+    fwd_expect = max(
+        choose_tiles(s.out_dim, s.mid_rank, itemsize, K=K)[4] for s in specs)
+    bwd_expect = max(
+        bwd_stage_vmem_bytes(s.out_dim, s.in_dim, s.mid_rank, itemsize, K=K)
+        for s in specs)
+    assert led["FWD"].entry("kernel_vmem").nbytes == fwd_expect
+    assert led["BWD"].entry("kernel_vmem").nbytes == bwd_expect
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_kernel_working_sets_fit_uram_envelope(arch):
+    """Every stage's kernel-derived VMEM working set fits the paper's
+    22.5 MB URAM pool — the transient on-chip residency the kernels are
+    designed around (the PU row is checked against its own chooser too)."""
+    cfg = _tt_config(arch)
+    led = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD", "PU"):
+        kv = led[stage].entry("kernel_vmem").nbytes
+        assert kv <= URAM_BUDGET_BYTES, (arch, stage, kv)
+
+    params = _abstract_params(cfg)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    br, _, lanes = pu_block_shape(n)
+    assert led["PU"].entry("kernel_vmem").nbytes == 2 * br * lanes * 4
+
+
+def test_bwd_row_tracks_fused_bwd_flag():
+    """With fused_bwd=False the op launches the operand-swap forward kernel
+    instead of btt_backward_pallas; the ledger's BWD row must follow the
+    flag (no drift in either direction)."""
+    cfg = config_n(2)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    specs = _specs(cfg)
+    led_off = training_step_ledger(cfg.with_tt(fused_bwd=False), "sgd",
+                                   batch=BATCH, seq=SEQ)
+    expect_off = max(
+        bwd_stage_vmem_bytes(s.out_dim, s.in_dim, s.mid_rank, itemsize,
+                             K=K, fused=False) for s in specs)
+    expect_swap = max(
+        choose_tiles(s.in_dim, s.mid_rank, itemsize, K=K)[4] for s in specs)
+    assert led_off["BWD"].entry("kernel_vmem").nbytes == expect_off
+    assert expect_off == expect_swap  # the operand-swap launch's tiles
+    led_on = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    assert (led_on["BWD"].entry("kernel_vmem").nbytes
+            != led_off["BWD"].entry("kernel_vmem").nbytes)
+
+
+@pytest.mark.parametrize("n_enc", [2, 4, 6])
+def test_paper_atis_models_fit_full_envelope(n_enc):
+    """The paper's central claim for its own models: every training stage
+    of the 2/4/6-encoder ATIS transformer fits 6 MB BRAM + 22.5 MB URAM,
+    now with the BWD row derived from the fused backward kernel."""
+    led = training_step_ledger(config_n(n_enc), "sgd", batch=BATCH, seq=SEQ)
+    rep = budget_report(led)
+    assert rep["fits_bram"] and rep["fits_uram"] and rep["fits"]
+    assert rep["bram_peak_bytes"] <= BRAM_BUDGET_BYTES
+    assert rep["uram_peak_bytes"] <= URAM_BUDGET_BYTES
