@@ -1,0 +1,132 @@
+"""ATTN stage: fused flash forward + single-kernel flash backward vs the
+pure-JAX blockwise path under autodiff.
+
+The paper's hardware thesis (Sec. V-B2) is that every training stage keeps
+its intermediates on chip; FTRANS (arXiv 2007.08563) identifies attention's
+S×S score matrix as the dominant off-chip tensor in transformer
+accelerators.  This module compares the two training-attention paths on
+three axes, mirroring bench_bwd's BWD-stage methodology:
+
+* **FLOPs** — identical by construction (six matmuls over the unmasked
+  region); emitted once so trajectory files are self-describing.
+* **HBM bytes moved** — the analytic traffic models in
+  ``kernels.flash_backward``: the fused side is tile-derived from
+  ``choose_attn_tiles`` (padded bytes are real bytes); the blockwise side
+  counts raw reads, chunk-restack copies, the online-softmax carry
+  round-tripping HBM per KV chunk, and the autodiff-saved S×S
+  probabilities — generously to XLA (everything once per pass).
+* **wall-clock** — median jitted microseconds of a full fwd+bwd
+  (``jax.grad``).  On CPU the fused column runs the kernels in *interpret*
+  mode (Python emulation) and is an upper bound; TPU is the target.
+
+Emitted rows (CSV via benchmarks.run, JSON schema documented there):
+  attn/paper_shape/flops          fwd+bwd attention FLOPs, ATIS B=1 S=32
+  attn/paper_shape/fused_bytes    analytic fused fwd+bwd HBM traffic
+  attn/paper_shape/unfused_bytes  analytic blockwise+autodiff HBM traffic
+  attn/paper_shape/bytes_ratio    unfused / fused (>1 = fused wins)
+  attn/paper_shape/fused_us       median jitted grad step (interpret on CPU)
+  attn/paper_shape/unfused_us     median jitted blockwise grad step
+  attn/paper_shape/match_maxerr   max |fused - blockwise| over (dq, dk, dv)
+  attn/atis_<n>enc/bytes_ratio    per-step (all layers) ratio per config
+  attn/atis_<n>enc/fewer_bytes    1.0 iff fused < unfused for the config
+  attn/gqa_4k/bytes_ratio         context-scale GQA shape (S×S term wins)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import median_us
+from repro.configs.atis_transformer import config_n
+from repro.kernels import (
+    flash_mha_op,
+    fused_attn_hbm_bytes,
+    unfused_attn_hbm_bytes,
+)
+from repro.kernels.flash_backward import attn_flops
+from repro.models.attention import blockwise_attention
+
+REPS = 5                    # interpret-mode kernels are slow; median of 5
+PAPER = (1, 32, 12, 12, 64)  # (B, S, H, KV, d_head): ATIS Table II, seq 32
+
+
+def _grad_fns(B, S, H, KV, D, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    do = jax.random.normal(ks[3], (B, S, H, D))
+
+    def fused(q_, k_, v_):
+        return (flash_mha_op(q_, k_, v_, causal=causal, interpret=True)
+                * do).sum()
+
+    def unfused(q_, k_, v_):
+        return (blockwise_attention(q_, k_, v_, causal=causal,
+                                    q_chunk=32, kv_chunk=32) * do).sum()
+
+    g_fused = jax.jit(jax.grad(fused, argnums=(0, 1, 2)))
+    g_unfused = jax.jit(jax.grad(unfused, argnums=(0, 1, 2)))
+    return g_fused, g_unfused, (q, k, v)
+
+
+def rows():
+    B, S, H, KV, D = PAPER
+    cfg = config_n(2)
+    its = jnp.dtype(cfg.dtype).itemsize
+    causal = cfg.causal                    # False: the paper's encoder
+
+    fb = fused_attn_hbm_bytes(B, H, KV, S, D, its, causal=causal)
+    ub = unfused_attn_hbm_bytes(B, H, KV, S, D, its,
+                                q_chunk=cfg.attn_q_chunk,
+                                kv_chunk=cfg.attn_kv_chunk)
+
+    g_fused, g_unfused, ops = _grad_fns(B, S, H, KV, D, causal)
+    gf = g_fused(*ops)
+    gu = g_unfused(*ops)
+    err = max(float(jnp.max(jnp.abs(u.astype(jnp.float32)
+                                    - v.astype(jnp.float32))))
+              for u, v in zip(gf, gu))
+
+    out = [
+        ("attn/paper_shape/flops",
+         float(attn_flops(B, H, S, D, causal=causal)),
+         "fwd (QK^T, PV) + bwd (dV, dP, dQ, dK); ATIS B=1 S=32 h=12 d=64"),
+        ("attn/paper_shape/fused_bytes", float(fb),
+         "analytic HBM traffic: flash fwd + single-kernel bwd, (O,m,l) "
+         "residuals only"),
+        ("attn/paper_shape/unfused_bytes", float(ub),
+         "blockwise+autodiff: chunk restacks + carry round-trips + saved "
+         "S^2 probabilities"),
+        ("attn/paper_shape/bytes_ratio", ub / fb,
+         ">1 = fused moves fewer HBM bytes"),
+        ("attn/paper_shape/fused_us",
+         median_us(g_fused, *ops, reps=REPS),
+         "flash fwd+bwd kernels (interpret mode on CPU; upper bound)"),
+        ("attn/paper_shape/unfused_us",
+         median_us(g_unfused, *ops, reps=REPS),
+         "pure-XLA blockwise fwd+bwd"),
+        ("attn/paper_shape/match_maxerr", err,
+         "max |fused - blockwise| over (dq, dk, dv)"),
+    ]
+
+    for n_enc in (2, 4, 6):
+        c = config_n(n_enc)
+        f = n_enc * fused_attn_hbm_bytes(B, c.n_heads, c.n_kv_heads, S,
+                                         c.d_head, its, causal=c.causal)
+        u = n_enc * unfused_attn_hbm_bytes(B, c.n_heads, c.n_kv_heads, S,
+                                           c.d_head, its,
+                                           q_chunk=c.attn_q_chunk,
+                                           kv_chunk=c.attn_kv_chunk)
+        out.append((f"attn/atis_{n_enc}enc/bytes_ratio", u / f,
+                    f"per training step, {n_enc} attention layers"))
+        out.append((f"attn/atis_{n_enc}enc/fewer_bytes",
+                    1.0 if f < u else 0.0,
+                    "1 = fused < unfused HBM bytes for this config"))
+
+    f = fused_attn_hbm_bytes(1, 8, 2, 4096, 128, 2)
+    u = unfused_attn_hbm_bytes(1, 8, 2, 4096, 128, 2)
+    out.append(("attn/gqa_4k/bytes_ratio", u / f,
+                "B=1 S=4096 H=8 KV=2 d=128 bf16: the S^2 probability "
+                "term dominates the blockwise side"))
+    return out

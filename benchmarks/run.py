@@ -16,6 +16,9 @@ command ``python -m benchmarks.run`` produces a single auditable artifact.
   bench_bwd          Sec. III-A BWD stage      (fused single-kernel backward
                                                 vs 4-GEMM path: FLOPs, HBM
                                                 bytes moved, wall-clock)
+  bench_attn         Sec. V-B2 ATTN stage      (flash fwd + single-kernel bwd
+                                                vs blockwise+autodiff: FLOPs,
+                                                HBM bytes moved, wall-clock)
 
 Usage::
 
@@ -65,6 +68,7 @@ MODULES = [
     "bench_rank_sweep",
     "bench_pu",
     "bench_bwd",
+    "bench_attn",
 ]
 
 

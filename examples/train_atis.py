@@ -48,6 +48,12 @@ def main(argv=None):
                     help="with --kernel-flow: fused single-kernel BWD stage "
                          "(--no-fused-bwd = operand-swap + XLA GEMMs; "
                          "unset keeps the config's fused_bwd)")
+    ap.add_argument("--fused-attn", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="fused flash attention fwd + single-kernel bwd "
+                         "(only (O, m, l) saved per encoder — no S×S "
+                         "probabilities; --no-fused-attn = pure-JAX "
+                         "blockwise path; unset keeps the config)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-every", type=int, default=50)
     args = ap.parse_args(argv)
@@ -57,6 +63,8 @@ def main(argv=None):
         cfg = cfg.with_tt(flow="kernel")
     if args.fused_bwd is not None:
         cfg = cfg.with_tt(fused_bwd=args.fused_bwd)
+    if args.fused_attn is not None:
+        cfg = cfg.with_fused_attn(args.fused_attn)
     if args.scale_down:
         cfg = cfg.scaled_down(d_model=256, n_heads=4, d_ff=256,
                               vocab_size=1000, num_layers=args.encoders,

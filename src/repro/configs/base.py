@@ -104,6 +104,11 @@ class ModelConfig:
     qkv_bias: bool = False
     rope_theta: float = 10000.0
     window: int | None = None     # sliding-window size for local-attn layers
+    # Training/prefill attention through the fused flash kernels (forward
+    # saves only (O, m, l); backward is one Pallas kernel — no S×S
+    # probability tensor).  Falls back to blockwise_attention per shape
+    # when the backward working set exceeds the kernel VMEM budget.
+    fused_attn: bool = False
     # block structure
     hybrid_pattern: tuple[str, ...] = ("attn",)   # cycle of "attn"|"rec"|"ssm"
     moe: MoEConfig | None = None
@@ -141,6 +146,9 @@ class ModelConfig:
 
     def with_tt(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, tt=dataclasses.replace(self.tt, **kw))
+
+    def with_fused_attn(self, on: bool = True) -> "ModelConfig":
+        return dataclasses.replace(self, fused_attn=on)
 
     def scaled_down(self, **overrides) -> "ModelConfig":
         """Reduced config of the same family for CPU smoke tests."""

@@ -27,10 +27,14 @@ Byte counts come from two places, both already validated elsewhere:
 
 Activation residuals are first-order: the fused BTT VJP saves only each
 layer's *inputs* (see ``core.tt_linear._btt_fused_fwd``), so the ledger
-counts one ``(K, N)`` input per TT linear plus the autodiff-saved attention
-probabilities.  Shared inputs (Q/K/V projections read the same ``x``) are
-counted once per projection — a deliberate over-count, i.e. the "fits"
-verdict is conservative.
+counts one ``(K, N)`` input per TT linear plus the attention residuals —
+the autodiff-saved S×S probabilities on the blockwise path, or only
+``(O, m, l)`` per layer with ``cfg.fused_attn`` (the fused flash backward
+recomputes probability tiles in VMEM; ``attn_residual_bytes`` is the single
+source for both numbers, and the ledger gates on the same
+``attn_bwd_vmem_fits`` the op dispatches on).  Shared inputs (Q/K/V
+projections read the same ``x``) are counted once per projection — a
+deliberate over-count, i.e. the "fits" verdict is conservative.
 """
 from __future__ import annotations
 
@@ -162,6 +166,17 @@ def _pu_kernel_vmem_bytes(n_params: int, n_bufs: int) -> int:
     return n_bufs * br * lanes * 4
 
 
+def _attn_kernel_vmem_bytes(cfg, seq: int, itemsize: int, stage: str) -> int:
+    """VMEM working set of the attention-stage flash launch — derived from
+    the BACKWARD kernel's own tile chooser (``choose_attn_tiles``), so
+    ledger and launched tiles cannot drift; 0 when ``fused_attn`` is off or
+    the shape falls back to the pure-JAX blockwise path."""
+    from repro.kernels.flash_backward import attn_stage_vmem_bytes
+
+    return attn_stage_vmem_bytes(seq, cfg.d_head, itemsize,
+                                 stage=stage, fused=cfg.fused_attn)
+
+
 # ---------------------------------------------------------------------------
 # The ledger.
 # ---------------------------------------------------------------------------
@@ -206,13 +221,29 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         mult = _stacked_multiplier(m)
         n_tt_apps += mult
         resid_bytes += mult * K * m.spec.in_dim * act_itemsize
-    # Autodiff-saved attention probabilities, (B, h, S, S) per attn layer.
+    # Attention residuals, per layer: the autodiff-saved (B, h, S, S)
+    # probabilities on the blockwise path, or only (O, m, l) with
+    # fused_attn — gated on the SAME attn_bwd_vmem_fits the op dispatches
+    # on, so the ledger reports the path actually taken.
+    from repro.kernels.flash_backward import (
+        attn_bwd_vmem_fits,
+        attn_residual_bytes,
+    )
+
     n_layers = cfg.num_layers
-    attn_probs = n_layers * batch * cfg.n_heads * seq * seq * act_itemsize
+    attn_fused_eff = cfg.fused_attn and attn_bwd_vmem_fits(
+        seq, cfg.d_head, act_itemsize)
+    attn_resid = n_layers * attn_residual_bytes(
+        batch, cfg.n_heads, seq, cfg.d_head, act_itemsize,
+        fused=attn_fused_eff)
+    attn_note = ("(O, m, l) per layer — flash bwd recomputes probability "
+                 "tiles in VMEM; no S×S residual"
+                 if attn_fused_eff else
+                 "autodiff-saved S×S attention probabilities per layer")
     # Embedding output + positional sum, the first saved activation
     # (one per TTM/dense embedding module).
     embed_act = max(len(ttms), 1) * K * cfg.d_model * act_itemsize
-    resid_total = resid_bytes + attn_probs + embed_act
+    resid_total = resid_bytes + embed_act
 
     fwd_kernel_vmem = max(
         (_btt_kernel_vmem_bytes(s, act_itemsize, K) for s in specs),
@@ -221,6 +252,8 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         (_btt_bwd_kernel_vmem_bytes(s, act_itemsize, K, cfg.tt.fused_bwd)
          for s in specs),
         default=0)
+    attn_fwd_vmem = _attn_kernel_vmem_bytes(cfg, seq, act_itemsize, "FWD")
+    attn_bwd_vmem = _attn_kernel_vmem_bytes(cfg, seq, act_itemsize, "BWD")
     # Live VMEM blocks per fused_update grid step = the input buffer list
     # (outputs are aliased onto inputs): (p, g) / (p, mu, g) / (p, m, v, g).
     n_pu_bufs = {"sgd": 3 if momentum else 2, "adamw": 4}[optimizer]
@@ -231,17 +264,23 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                     "TT/TTM cores + biases + norms (eval_shape-exact)"),
         LedgerEntry("residuals", resid_total, "uram",
                     f"fused-VJP saved inputs ({n_tt_apps} TT apps) "
-                    "+ attn probs + embed"),
+                    "+ embed"),
+        LedgerEntry("attn_residuals", attn_resid, "uram", attn_note),
         LedgerEntry("tt_intermediates", tt_inter_peak, "uram",
                     "paper Eq. (21) mem_btt, max over layers"),
         LedgerEntry("kernel_vmem", fwd_kernel_vmem, "uram",
                     "btt_linear_pallas working set, largest layer"),
+        LedgerEntry("attn_kernel_vmem", attn_fwd_vmem, "uram",
+                    "flash_attention_pallas working set (fused_attn)"
+                    if attn_fused_eff else
+                    "no flash launch (blockwise path)"),
     ))
     bwd = StageLedger("BWD", (
         LedgerEntry("params", params_bytes, "bram",
                     "re-read for half-factor rebuild"),
         LedgerEntry("residuals", resid_total, "uram",
                     "consumed as BWD walks the graph"),
+        LedgerEntry("attn_residuals", attn_resid, "uram", attn_note),
         LedgerEntry("grads", grads_bytes, "uram", "f32 accumulators"),
         LedgerEntry("tt_intermediates", tt_inter_peak, "uram",
                     "t = x @ B^T recomputed per layer (never stored)"),
@@ -250,6 +289,11 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                      "largest layer") if cfg.tt.fused_bwd else
                     "operand-swap btt_linear_pallas working set "
                     "(fused_bwd=False)"),
+        LedgerEntry("attn_kernel_vmem", attn_bwd_vmem, "uram",
+                    "flash_attention_bwd_pallas working set "
+                    "(choose_attn_tiles-derived: dQ/dK/dV one pass)"
+                    if attn_fused_eff else
+                    "no flash launch (blockwise path)"),
     ))
     pu = StageLedger("PU", (
         LedgerEntry("params", params_bytes, "bram", "updated in place"),

@@ -8,6 +8,10 @@
 ``flash_attention`` — causal/windowed GQA flash attention (online-softmax
                       state in VMEM scratch; closes the 86%-of-traffic gap
                       the pure-JAX blockwise path leaves on prefill cells).
+``flash_backward``  — fused flash-attention backward: dQ/dK/dV in one pass,
+                      probability tiles recomputed from the saved (m, l)
+                      statistics in VMEM — the S×S matrix never exists,
+                      forward or backward.
 ``fused_update``    — fused parameter-update (PU) stage: SGD(+momentum) /
                       AdamW over flattened parameter buffers in one pass,
                       moments updated in place (paper Sec. III-A step 3).
@@ -23,17 +27,40 @@ from .btt_backward import (
 )
 from .btt_linear import btt_linear_pallas
 from .flash_attention import flash_attention_pallas
+from .flash_backward import (
+    attn_bwd_vmem_fits,
+    attn_residual_bytes,
+    choose_attn_tiles,
+    flash_attention_bwd_pallas,
+    fused_attn_hbm_bytes,
+    unfused_attn_hbm_bytes,
+)
 from .fused_update import fused_adamw_update, fused_sgd_update
-from .ops import btt_linear_op, kernel_interpret_default, ttm_embed_op
-from .ref import btt_backward_ref, btt_linear_ref, btt_t_ref, ttm_embed_ref
+from .ops import (
+    btt_linear_op,
+    flash_mha_op,
+    kernel_interpret_default,
+    ttm_embed_op,
+)
+from .ref import (
+    btt_backward_ref,
+    btt_linear_ref,
+    btt_t_ref,
+    flash_attention_bwd_ref,
+    ttm_embed_ref,
+)
 from .ttm_embed import ttm_embed_pallas
 
 __all__ = [
     "btt_linear_pallas", "btt_backward_pallas", "ttm_embed_pallas",
-    "flash_attention_pallas",
-    "btt_linear_op", "ttm_embed_op", "kernel_interpret_default",
+    "flash_attention_pallas", "flash_attention_bwd_pallas",
+    "btt_linear_op", "ttm_embed_op", "flash_mha_op",
+    "kernel_interpret_default",
     "btt_linear_ref", "btt_t_ref", "btt_backward_ref", "ttm_embed_ref",
+    "flash_attention_bwd_ref",
     "fused_sgd_update", "fused_adamw_update",
     "choose_bwd_tiles", "bwd_vmem_fits",
     "fused_bwd_hbm_bytes", "unfused_bwd_hbm_bytes",
+    "choose_attn_tiles", "attn_bwd_vmem_fits", "attn_residual_bytes",
+    "fused_attn_hbm_bytes", "unfused_attn_hbm_bytes",
 ]

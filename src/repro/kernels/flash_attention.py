@@ -13,6 +13,13 @@ Grid = (B·H, S/TQ, S/TK), KV innermost (sequential); GQA without
 materializing repeated KV: the K/V BlockSpec index maps query-head ``h`` to
 its KV head ``h // group`` — the repeat happens in the index computation,
 not in memory.  Fully-masked causal blocks are skipped via ``pl.when``.
+
+``return_residuals=True`` additionally emits the per-row softmax statistics
+``(m, l)`` — the residuals the fused backward (``flash_backward.py``)
+recomputes probability tiles from, so training never saves the S×S
+probability matrix.  Tiles may go as low as 32 rows (sublane granule) so the
+paper's S=32 regime launches unpadded on the sequence axis; lane padding of
+sub-128 tiles is left to Mosaic.
 """
 from __future__ import annotations
 
@@ -33,9 +40,13 @@ DEFAULT_TK = 256
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _kernel(q_ref, k_ref, v_ref, *refs,
             nk: int, tq: int, tk: int, scale: float, causal: bool,
-            window: int | None, s_real: int):
+            window: int | None, s_real: int, emit_stats: bool):
+    if emit_stats:
+        o_ref, mo_ref, lo_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     iq = pl.program_id(1)
     ik = pl.program_id(2)
 
@@ -83,6 +94,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _emit():
         o_ref[0] = (acc_ref[...] /
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        if emit_stats:
+            mo_ref[0] = m_ref[...][:, 0]
+            lo_ref[0] = l_ref[...][:, 0]
 
 
 def _round_up(v: int, m: int) -> int:
@@ -90,18 +104,24 @@ def _round_up(v: int, m: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "group", "tq", "tk", "interpret"))
+    "causal", "window", "group", "tq", "tk", "interpret",
+    "return_residuals"))
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int | None = None,
                            group: int = 1, tq: int | None = None,
                            tk: int | None = None,
-                           interpret: bool = False) -> jax.Array:
+                           interpret: bool = False,
+                           return_residuals: bool = False):
     """``q (BH, S, D); k, v (BH/group, S, D) -> o (BH, S, D)``.
 
     ``group`` = GQA group size (query heads per KV head); the K/V block
     index maps ``h -> h // group`` so repeated KV never materializes.
     S is padded to the tile grid; padded KV columns are masked, padded Q
     rows sliced off.
+
+    ``return_residuals=True`` returns ``(o, m, l)`` with ``m, l (BH, S)``
+    f32 — the per-row softmax max / normalizer the fused backward kernel
+    needs to recompute probability tiles without the S×S matrix.
     """
     BH, S, D = q.shape
     scale = 1.0 / math.sqrt(D)
@@ -115,17 +135,26 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
     nq, nk = sp // tq, sp // tk
     grid = (BH, nq, nk)
 
-    out = pl.pallas_call(
+    out_specs = [pl.BlockSpec((1, tq, dp_), lambda h, i, j: (h, i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((BH, sp, dp_), q.dtype)]
+    if return_residuals:
+        out_specs += [pl.BlockSpec((1, tq), lambda h, i, j: (h, i)),
+                      pl.BlockSpec((1, tq), lambda h, i, j: (h, i))]
+        out_shape += [jax.ShapeDtypeStruct((BH, sp), jnp.float32),
+                      jax.ShapeDtypeStruct((BH, sp), jnp.float32)]
+
+    res = pl.pallas_call(
         functools.partial(_kernel, nk=nk, tq=tq, tk=tk, scale=scale,
-                          causal=causal, window=window, s_real=S),
+                          causal=causal, window=window, s_real=S,
+                          emit_stats=return_residuals),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, tq, dp_), lambda h, i, j: (h, i, 0)),
             pl.BlockSpec((1, tk, dp_), lambda h, i, j, g=group: (h // g, j, 0)),
             pl.BlockSpec((1, tk, dp_), lambda h, i, j, g=group: (h // g, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, tq, dp_), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, sp, dp_), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((tq, 1), jnp.float32),     # m
             pltpu.VMEM((tq, 1), jnp.float32),     # l
@@ -136,4 +165,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ),
         interpret=interpret,
     )(qp, kp, vp)
-    return out[:, :S, :D]
+    if return_residuals:
+        out, m, l = res
+        return out[:, :S, :D], m[:, :S], l[:, :S]
+    return res[0][:, :S, :D]

@@ -13,7 +13,17 @@
 
 * ``ttm_embed_op(cores, ids, spec)`` — gather-free TTM lookup via the d=3
   one-hot kernel; falls back to the jnp gather chain when d != 3 or the cores
-  exceed the VMEM residency budget.
+  exceed the VMEM residency budget.  A custom VJP routes the core gradients
+  through autodiff of the pure-jnp one-hot chain (``ref.ttm_embed_ref``) —
+  the same math as the gather-chain oracle, so the kernel path is
+  trainable.
+
+* ``flash_mha_op(q, k, v)`` — training/prefill attention as the fused flash
+  kernels: forward saves only ``(O, m, l)`` per layer; the backward is ONE
+  ``pallas_call`` (``flash_backward.py``) recomputing probability tiles in
+  VMEM — no S×S tensor is ever saved or moved.  Shapes whose backward
+  working set exceeds the VMEM budget (dK/dV residency grows with S) fall
+  back to the pure-JAX ``blockwise_attention`` under plain autodiff.
 
 Kernel selection: on a TPU backend the compiled kernel runs natively; on CPU
 (this container) ``interpret=True`` executes the kernel body in Python — the
@@ -33,9 +43,16 @@ from repro.core.tt import TTMSpec, TTSpec, tt_half_factors
 
 from .btt_backward import btt_backward_pallas, bwd_vmem_fits
 from .btt_linear import btt_linear_pallas
+from .flash_attention import flash_attention_pallas
+from .flash_backward import (
+    attn_bwd_vmem_fits,
+    choose_attn_tiles,
+    flash_attention_bwd_pallas,
+)
 from .ttm_embed import ttm_embed_pallas
 
-__all__ = ["btt_linear_op", "ttm_embed_op", "kernel_interpret_default"]
+__all__ = ["btt_linear_op", "ttm_embed_op", "flash_mha_op",
+           "kernel_interpret_default"]
 
 _VMEM_CORE_BUDGET = 8 * 1024 * 1024  # resident-core budget for ttm kernel
 
@@ -116,6 +133,91 @@ def btt_linear_op(cores, x: jax.Array, spec: TTSpec, *,
 
 
 # ---------------------------------------------------------------------------
+# Flash attention (fused fwd + single-kernel bwd under a custom VJP).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_fused(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool,
+                 window: int | None, group: int, interpret: bool,
+                 budget: int | None) -> jax.Array:
+    o, _, _ = _flash_fwd_call(q, k, v, causal, window, group, interpret,
+                              budget)
+    return o
+
+
+def _flash_fwd_call(q, k, v, causal, window, group, interpret, budget):
+    # One tile choice (under the caller's budget) feeds BOTH launches, so
+    # the gate, the forward, and the backward agree on the working set.
+    # The (m, l) statistics are per-row and tile-independent; the
+    # backward's recomputed probabilities track the forward's to an ulp
+    # (its score dot folds the softmax scale into Q — see
+    # flash_backward._bwd_kernel), which the oracle tolerances absorb.
+    itemsize = jnp.dtype(q.dtype).itemsize
+    tq, tk, _, _, _ = choose_attn_tiles(q.shape[1], q.shape[2], itemsize,
+                                        budget=budget)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  group=group, tq=tq, tk=tk,
+                                  interpret=interpret, return_residuals=True)
+
+
+def _flash_fused_fwd(q, k, v, causal, window, group, interpret, budget):
+    o, m, l = _flash_fwd_call(q, k, v, causal, window, group, interpret,
+                              budget)
+    # Paper-faithful residual set: (O, m, l) — never the S×S probabilities.
+    return o, (q, k, v, o, m, l)
+
+
+def _flash_fused_bwd(causal, window, group, interpret, budget, residuals, do):
+    q, k, v, o, m, l = residuals
+    itemsize = jnp.dtype(q.dtype).itemsize
+    tq, tk, _, _, _ = choose_attn_tiles(q.shape[1], q.shape[2], itemsize,
+                                        budget=budget)
+    dq, dk, dv = flash_attention_bwd_pallas(
+        q, k, v, o, m, l, do, causal=causal, window=window, group=group,
+        tq=tq, tk=tk, interpret=interpret)
+    return dq, dk, dv
+
+
+_flash_fused.defvjp(_flash_fused_fwd, _flash_fused_bwd)
+
+
+def flash_mha_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool = True, window: int | None = None,
+                 q_chunk: int = 512, kv_chunk: int = 1024,
+                 use_kernel: bool = True, interpret: bool | None = None,
+                 budget: int | None = None) -> jax.Array:
+    """``q (B, S, H, D); k, v (B, S, KV, D) -> (B, S, H, D)``, trainable.
+
+    The fused path runs the flash forward and the single-kernel flash
+    backward with only ``(O, m, l)`` saved between them.  When the
+    backward's VMEM working set exceeds ``budget`` (default: the kernel
+    VMEM budget) — or ``use_kernel=False`` — the op silently takes the
+    pure-JAX ``blockwise_attention`` path under plain autodiff, with the
+    given chunk sizes.  ``core.memory_ledger`` gates on the same
+    ``attn_bwd_vmem_fits``, so ledger and dispatch cannot drift.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    group = H // KV
+    itemsize = jnp.dtype(q.dtype).itemsize
+    if not use_kernel or not attn_bwd_vmem_fits(S, D, itemsize,
+                                                budget=budget):
+        # Lazy import: kernels must not depend on models at module scope.
+        from repro.models.attention import blockwise_attention
+
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   q_chunk=q_chunk, kv_chunk=kv_chunk)
+    if interpret is None:
+        interpret = kernel_interpret_default()
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    o = _flash_fused(qf, kf, vf, causal, window, group, interpret, budget)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
 # TTM embedding (one-hot kernel when eligible).
 # ---------------------------------------------------------------------------
 
@@ -125,6 +227,34 @@ def _ttm_kernel_eligible(spec: TTMSpec) -> bool:
         return False
     core_bytes = sum(int(np.prod(s)) * 4 for s in spec.core_shapes())
     return core_bytes <= _VMEM_CORE_BUDGET
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _ttm_kernel_fused(cores: tuple, oh: tuple, spec_dims: tuple,
+                      interpret: bool) -> jax.Array:
+    return ttm_embed_pallas(oh, cores, spec_dims=spec_dims,
+                            interpret=interpret)
+
+
+def _ttm_kernel_fwd(cores, oh, spec_dims, interpret):
+    y = ttm_embed_pallas(oh, cores, spec_dims=spec_dims, interpret=interpret)
+    return y, (cores, oh)
+
+
+def _ttm_kernel_bwd(spec_dims, interpret, residuals, gy):
+    # Core gradients via autodiff of the pure-jnp one-hot chain — the same
+    # stage-A..E math the kernel executes (paper Eq. (12): scatter-free,
+    # the one-hot GEMMs transpose into the scatter-add).
+    cores, oh = residuals
+    from .ref import ttm_embed_ref
+
+    _, vjp = jax.vjp(
+        lambda c, o: ttm_embed_ref(o, c).astype(gy.dtype), cores, oh)
+    gc, goh = vjp(gy)
+    return gc, goh
+
+
+_ttm_kernel_fused.defvjp(_ttm_kernel_fwd, _ttm_kernel_bwd)
 
 
 def ttm_embed_op(cores, ids: jax.Array, spec: TTMSpec, *,
@@ -145,6 +275,5 @@ def ttm_embed_op(cores, ids: jax.Array, spec: TTMSpec, *,
     rs = spec.ranks
     spec_dims = (tuple(spec.vocab_factors), tuple(spec.hidden_factors),
                  (rs[1], rs[2]))
-    out = ttm_embed_pallas(oh, tuple(cores), spec_dims=spec_dims,
-                           interpret=interpret)
+    out = _ttm_kernel_fused(tuple(cores), oh, spec_dims, interpret)
     return out.reshape(batch_shape + (spec.hidden_dim,))

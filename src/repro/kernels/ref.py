@@ -6,9 +6,13 @@ tiling, no padding, no dtype tricks — so a mismatch always indicts the kernel.
 """
 from __future__ import annotations
 
+import math
+
+import jax
 import jax.numpy as jnp
 
-__all__ = ["btt_linear_ref", "btt_t_ref", "btt_backward_ref", "ttm_embed_ref"]
+__all__ = ["btt_linear_ref", "btt_t_ref", "btt_backward_ref", "ttm_embed_ref",
+           "flash_attention_bwd_ref"]
 
 
 def btt_linear_ref(x: jnp.ndarray, b: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
@@ -48,6 +52,65 @@ def btt_backward_ref(x: jnp.ndarray, gy: jnp.ndarray, b: jnp.ndarray,
     gb = jnp.dot(gt.T, x.astype(jnp.float32),
                  preferred_element_type=jnp.float32)
     return gx, ga, gb
+
+
+def flash_attention_bwd_ref(q, k, v, o, m, l, do, *, causal: bool = True,
+                            window: int | None = None, group: int = 1
+                            ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Flash-attention backward from the saved ``(O, m, l)`` residuals.
+
+    ``q/o/do (BH, S, D)``, ``m/l (BH, S)`` f32, ``k/v (BH/group, S, D)`` ->
+    ``(dq, dk, dv)``.  A per-head Python loop issuing EXACTLY the fused
+    kernel's contractions in the kernel's accumulation order (group members
+    ascending per KV head), so on unpadded single-tile shapes the kernel
+    must match this bit-for-bit.  ``D = rowsum(dO ⊙ O)`` — the same
+    in-kernel recomputation, not the softmax-VJP ``rowsum(P ⊙ dP)`` form.
+    """
+    BH, S, D = q.shape
+    BKV = k.shape[0]
+    scale = 1.0 / math.sqrt(D)
+    idx = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= idx[None, :] <= idx[:, None]
+    if window is not None:
+        mask &= idx[None, :] > idx[:, None] - window
+
+    dq = []
+    dk = [jnp.zeros((S, D), jnp.float32) for _ in range(BKV)]
+    dv = [jnp.zeros((S, D), jnp.float32) for _ in range(BKV)]
+    for hk in range(BKV):
+        kf = k[hk].astype(jnp.float32)
+        vf = v[hk].astype(jnp.float32)
+        for g in range(group):
+            h = hk * group + g
+            qf = q[h].astype(jnp.float32)
+            dof = do[h].astype(jnp.float32)
+            of = o[h].astype(jnp.float32)
+            mh = m[h][:, None]
+            lh = l[h][:, None]
+            s = jax.lax.dot_general(
+                qf * scale, kf, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            s = jnp.where(mask, s, -1e30)
+            p = jnp.exp(s - mh) / jnp.maximum(lh, 1e-30)
+            dv[hk] = dv[hk] + jax.lax.dot_general(
+                p, dof, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            dp_ = jax.lax.dot_general(
+                dof, vf, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            d_row = jnp.sum(dof * of, axis=1, keepdims=True)
+            ds = p * (dp_ - d_row) * scale
+            dq.append(jax.lax.dot_general(
+                ds, kf, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32))
+            dk[hk] = dk[hk] + jax.lax.dot_general(
+                ds, qf, (((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    return (jnp.stack(dq).astype(q.dtype),
+            jnp.stack(dk).astype(k.dtype),
+            jnp.stack(dv).astype(v.dtype))
 
 
 def ttm_embed_ref(oh: tuple[jnp.ndarray, ...], cores: tuple[jnp.ndarray, ...]

@@ -31,7 +31,8 @@ __all__ = [
 
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
                     clip_norm: float = 1.0, remat: bool = True,
-                    batch_constraint=None, fused_bwd: bool | None = None):
+                    batch_constraint=None, fused_bwd: bool | None = None,
+                    fused_attn: bool | None = None):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     ``microbatches > 1`` accumulates gradients over leading batch splits in a
@@ -55,9 +56,16 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
     with ``flow="kernel"``, True runs the BWD stage as the single fused
     Pallas kernel (``kernels.btt_backward``), False the operand-swap +
     XLA-GEMM reference path.  ``None`` keeps the config's setting.
+
+    ``fused_attn`` (optional) likewise overrides ``cfg.fused_attn``: True
+    runs training attention as the fused flash forward + single-kernel
+    flash backward (only ``(O, m, l)`` saved per layer — no S×S
+    probabilities), False the pure-JAX blockwise path under autodiff.
     """
     if fused_bwd is not None:
         cfg = cfg.with_tt(fused_bwd=fused_bwd)
+    if fused_attn is not None:
+        cfg = cfg.with_fused_attn(fused_attn)
 
     def grads_of(params, batch):
         return jax.value_and_grad(loss_fn)(params, cfg, batch, remat=remat)

@@ -48,6 +48,8 @@ def build(args):
                           embed_rank=args.tt_rank)
     if args.kernel_flow:
         cfg = cfg.with_tt(flow="kernel")
+    if args.fused_attn is not None:
+        cfg = cfg.with_fused_attn(args.fused_attn)
     if args.fp32:
         import dataclasses
         cfg = dataclasses.replace(cfg, dtype="float32")
@@ -78,6 +80,13 @@ def main(argv=None) -> dict:
                          "single fused Pallas kernel (--no-fused-bwd "
                          "forces the operand-swap + XLA-GEMM path; "
                          "unset keeps the config's fused_bwd)")
+    ap.add_argument("--fused-attn", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="run training attention as the fused flash "
+                         "forward + single-kernel flash backward (only "
+                         "(O, m, l) saved per layer; --no-fused-attn "
+                         "forces the pure-JAX blockwise path; unset keeps "
+                         "the config's fused_attn)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)

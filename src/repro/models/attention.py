@@ -1,10 +1,19 @@
 """Attention: double-blocked (flash-style) causal/windowed attention + decode.
 
-Training/prefill attention is computed blockwise with an online-softmax scan
-over KV chunks inside a scan over Q chunks, so the score matrix never
-materializes beyond ``(B, kv_heads, groups, q_chunk, kv_chunk)`` — required
-for the 32k-prefill cells to fit HBM.  GQA is handled by folding query heads
-as ``(kv_heads, group)`` so no KV repeat is materialized in training.
+Training/prefill attention has two paths, selected by ``train_attention``:
+
+* ``blockwise_attention`` — pure JAX: an online-softmax scan over KV chunks
+  inside a scan over Q chunks, so the score matrix never materializes
+  beyond ``(B, kv_heads, groups, q_chunk, kv_chunk)`` — required for the
+  32k-prefill cells to fit HBM.  GQA is handled by folding query heads as
+  ``(kv_heads, group)`` so no KV repeat is materialized.  Under autodiff
+  this path saves the per-chunk probabilities (S×S per head in aggregate)
+  and round-trips the scan carry through HBM every KV chunk.
+* ``fused=True`` — the fused flash kernels (``kernels.flash_attention`` /
+  ``flash_backward`` under ``kernels.ops.flash_mha_op``): forward saves
+  only ``(O, m, l)``; the backward recomputes probability tiles in VMEM in
+  a single Pallas kernel.  Shapes whose backward working set exceeds the
+  kernel VMEM budget silently take the blockwise path.
 
 Decode attends a single query position against a (possibly ring-buffered)
 KV cache; KV heads are repeated to the TP degree at cache-layout time by the
@@ -17,7 +26,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["blockwise_attention", "decode_attention"]
+__all__ = ["blockwise_attention", "train_attention", "decode_attention"]
 
 NEG_INF = -1e30
 
@@ -99,6 +108,30 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     # (nq, B, q_chunk, KV, G, D) -> (B, S, H, D); padded Q rows sliced off
     out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, s_q, H, D)
     return out[:, :S].astype(q.dtype)
+
+
+def train_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    fused: bool = False,
+                    interpret: bool | None = None) -> jax.Array:
+    """Training/prefill attention: ``q (B, S, H, D); k, v (B, S, KV, D)``.
+
+    ``fused=True`` routes through the fused flash forward + single-kernel
+    backward (``kernels.ops.flash_mha_op``), which itself falls back to
+    ``blockwise_attention`` when the shape's backward working set exceeds
+    the kernel VMEM budget — so the flag is always safe to set.
+    """
+    if fused:
+        # Lazy import keeps models importable without the kernels package
+        # in the dependency path of non-fused configs.
+        from repro.kernels.ops import flash_mha_op
+
+        return flash_mha_op(q, k, v, causal=causal, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            interpret=interpret)
+    return blockwise_attention(q, k, v, causal=causal, window=window,
+                               q_chunk=q_chunk, kv_chunk=kv_chunk)
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.attention import decode_attention, train_attention
 from repro.models.layers import (
     embedding_apply,
     linear_apply,
@@ -107,8 +107,9 @@ def _attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, window: int | None,
     else:
         qc = cfg.attn_q_chunk or S
         kc = cfg.attn_kv_chunk or S
-        out = blockwise_attention(q, k, v, causal=cfg.causal, window=window,
-                                  q_chunk=qc, kv_chunk=kc)
+        out = train_attention(q, k, v, causal=cfg.causal, window=window,
+                              q_chunk=qc, kv_chunk=kc,
+                              fused=cfg.fused_attn)
         if mode == "prefill":
             new_cache = {"k": k, "v": v}
     out = out.reshape(B, S, H * dh)

@@ -125,6 +125,42 @@ print("OK elastic", step)
     assert "OK elastic" in r.stdout
 
 
+def test_microbatch_accumulation_parity():
+    """make_train_step(microbatches=4) on one batch == microbatches=1:
+    same loss/grad-norm metrics and the same updated parameters (the
+    accumulation scan averages per-microbatch grads; with a uniform mask
+    the full-batch gradient is the same average, up to f32 reordering)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.data import lm_batch
+    from repro.launch.steps import make_train_step
+    from repro.models.transformer import init_params
+    from repro.optim import sgd
+
+    cfg = (get_config("qwen3-8b").scaled_down()
+           .with_tt(mode="tt", rank=8, embed_rank=8))
+    opt = sgd(1e-2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params)
+    batch = {k: jnp.asarray(v)
+             for k, v in lm_batch(0, 0, 8, 64, cfg.vocab_size).items()}
+
+    step1 = jax.jit(make_train_step(cfg, opt, microbatches=1))
+    step4 = jax.jit(make_train_step(cfg, opt, microbatches=4))
+    p1, s1, m1 = step1(params, state, batch)
+    p4, s4, m4 = step4(params, state, batch)
+
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(m1["grad_norm"]),
+                               float(m4["grad_norm"]), rtol=1e-4)
+    assert int(s1["step"]) == int(s4["step"]) == 1
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
 def test_atis_task_learns():
     """Short tensor-compressed ATIS run: joint loss drops substantially."""
     import jax

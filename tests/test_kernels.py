@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core import TTSpec, make_ttm_spec, tt_init, ttm_init
 from repro.core.contraction import tt_forward_btt, ttm_lookup
 from repro.kernels import (
@@ -102,6 +103,58 @@ def test_ttm_kernel_ref_oracle_matches_gather():
     ref = ttm_embed_ref(oh, tuple(cores))
     np.testing.assert_allclose(ref, ttm_lookup(cores, ids, spec),
                                rtol=1e-5, atol=1e-6)
+
+
+def test_ttm_kernel_grads_match_gather_chain_oracle():
+    """Kernel-path core gradients (custom VJP through the one-hot chain)
+    vs plain autodiff through the gather-chain lookup — two independent
+    gradient paths for the same function (paper Eq. (12))."""
+    spec = make_ttm_spec(1000, 768, 3, 30)      # the paper's embedding
+    cores = ttm_init(jax.random.PRNGKey(8), spec)
+    ids = jax.random.randint(jax.random.PRNGKey(9), (64,), 0, 1000)
+    gk = jax.grad(lambda c: (ttm_embed_op(
+        list(c), ids, spec, use_kernel=True, interpret=True) ** 2).sum())(
+        tuple(cores))
+    gg = jax.grad(lambda c: (ttm_lookup(list(c), ids, spec) ** 2).sum())(
+        tuple(cores))
+    for i, (u, v) in enumerate(zip(gk, gg)):
+        np.testing.assert_allclose(u, v, rtol=1e-4, atol=1e-5,
+                                   err_msg=f"core {i}")
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    vocab=st.integers(64, 2000),
+    hidden=st.sampled_from([27, 64, 125, 768]),
+    rank=st.integers(2, 30),
+    n_ids=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ttm_kernel_grad_parity_property(vocab, hidden, rank, n_ids, seed):
+    """Property: over sampled (vocab, hidden, rank, batch), kernel-path
+    core gradients track the gather-chain autodiff oracle.  Duplicate ids
+    are drawn deliberately — the backward must scatter-add, not overwrite."""
+    spec = make_ttm_spec(vocab, hidden, 3, rank)
+    cores = ttm_init(jax.random.PRNGKey(seed), spec)
+    ids = jax.random.randint(jax.random.PRNGKey(seed + 1), (n_ids,), 0,
+                             vocab)
+    gy = jax.random.normal(jax.random.PRNGKey(seed + 2),
+                           (n_ids, spec.hidden_dim))
+
+    def loss(c, op):
+        return (op(list(c)) * gy).sum()
+
+    gk = jax.grad(loss)(tuple(cores),
+                        lambda c: ttm_embed_op(c, ids, spec,
+                                               use_kernel=True,
+                                               interpret=True))
+    gg = jax.grad(loss)(tuple(cores),
+                        lambda c: ttm_lookup(c, ids, spec))
+    for i, (u, v) in enumerate(zip(gk, gg)):
+        u, v = np.asarray(u, np.float32), np.asarray(v, np.float32)
+        scale = max(float(np.max(np.abs(v))), 1e-6)
+        np.testing.assert_allclose(u / scale, v / scale, rtol=0, atol=1e-5,
+                                   err_msg=f"core {i}")
 
 
 def test_ttm_kernel_falls_back_when_ineligible():

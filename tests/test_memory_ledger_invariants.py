@@ -108,13 +108,71 @@ def test_bwd_row_tracks_fused_bwd_flag():
             != led_off["BWD"].entry("kernel_vmem").nbytes)
 
 
+@pytest.mark.parametrize("fused_attn", [False, True])
 @pytest.mark.parametrize("n_enc", [2, 4, 6])
-def test_paper_atis_models_fit_full_envelope(n_enc):
+def test_paper_atis_models_fit_full_envelope(n_enc, fused_attn):
     """The paper's central claim for its own models: every training stage
     of the 2/4/6-encoder ATIS transformer fits 6 MB BRAM + 22.5 MB URAM,
-    now with the BWD row derived from the fused backward kernel."""
-    led = training_step_ledger(config_n(n_enc), "sgd", batch=BATCH, seq=SEQ)
+    with the BWD row derived from the fused backward kernel — and with the
+    attention stage on either path (fused flash kernels / blockwise)."""
+    cfg = config_n(n_enc).with_fused_attn(fused_attn)
+    led = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
     rep = budget_report(led)
     assert rep["fits_bram"] and rep["fits_uram"] and rep["fits"]
     assert rep["bram_peak_bytes"] <= BRAM_BUDGET_BYTES
     assert rep["uram_peak_bytes"] <= URAM_BUDGET_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Attention rows: chooser-derived, and no S×S residual under fused_attn.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_attn_kernel_rows_are_chooser_derived(arch):
+    """With fused_attn the FWD/BWD attn_kernel_vmem rows must equal the
+    flash backward kernel's own tile-chooser numbers (recomputed here
+    independently); without it, 0 — no Pallas launch on the blockwise
+    path."""
+    from repro.kernels.flash_backward import attn_stage_vmem_bytes
+
+    cfg = _tt_config(arch)
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+
+    led_on = training_step_ledger(cfg.with_fused_attn(True), "sgd",
+                                  batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD"):
+        expect = attn_stage_vmem_bytes(SEQ, cfg.d_head, itemsize,
+                                       stage=stage, fused=True)
+        assert led_on[stage].entry("attn_kernel_vmem").nbytes == expect
+        assert expect <= URAM_BUDGET_BYTES
+
+    led_off = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD"):
+        assert led_off[stage].entry("attn_kernel_vmem").nbytes == 0
+
+
+@pytest.mark.parametrize("n_enc", [2, 4, 6])
+def test_fused_attn_reports_no_sxs_probability_residual(n_enc):
+    """Acceptance: with fused_attn=True the ledger charges only (O, m, l)
+    per layer — byte-for-byte the attn_residual_bytes closed form, never
+    the S×S probabilities the blockwise path saves."""
+    from repro.kernels.flash_backward import attn_residual_bytes
+
+    cfg = config_n(n_enc)
+    its = jnp.dtype(cfg.dtype).itemsize
+    probs = cfg.num_layers * BATCH * cfg.n_heads * SEQ * SEQ * its
+    oml = cfg.num_layers * attn_residual_bytes(
+        BATCH, cfg.n_heads, SEQ, cfg.d_head, its, fused=True)
+
+    led = training_step_ledger(cfg.with_fused_attn(True), "sgd",
+                               batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD"):
+        got = led[stage].entry("attn_residuals").nbytes
+        assert got == oml
+        assert got != probs
+        assert "S×S" not in led[stage].entry("attn_residuals").note \
+            or "no S×S" in led[stage].entry("attn_residuals").note
+
+    led_off = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    assert led_off["FWD"].entry("attn_residuals").nbytes == probs
