@@ -50,6 +50,28 @@ REPS = 5                    # interpret-mode kernels are slow; median of 5
 PAPER = (1, 32, 12, 12, 64)  # (B, S, H, KV, d_head): ATIS Table II, seq 32
 
 
+def check_rows():
+    """Analytic byte rows — the single source for both ``rows()`` and the
+    ``benchmarks.run --check`` regression guard (no wall-clock)."""
+    B, S, H, KV, D = PAPER
+    out = []
+    for n_enc in (2, 4, 6):
+        c = config_n(n_enc)
+        its = jnp.dtype(c.dtype).itemsize
+        f = n_enc * fused_attn_hbm_bytes(B, c.n_heads, c.n_kv_heads, S,
+                                         c.d_head, its, causal=c.causal)
+        u = n_enc * unfused_attn_hbm_bytes(B, c.n_heads, c.n_kv_heads, S,
+                                           c.d_head, its,
+                                           q_chunk=c.attn_q_chunk,
+                                           kv_chunk=c.attn_kv_chunk)
+        out.append((f"attn/atis_{n_enc}enc/bytes_ratio", u / f,
+                    f"per training step, {n_enc} attention layers"))
+        out.append((f"attn/atis_{n_enc}enc/fewer_bytes",
+                    1.0 if f < u else 0.0,
+                    "1 = fused < unfused HBM bytes for this config"))
+    return out
+
+
 def _grad_fns(B, S, H, KV, D, causal):
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q = jax.random.normal(ks[0], (B, S, H, D))
@@ -110,19 +132,7 @@ def rows():
          "max |fused - blockwise| over (dq, dk, dv)"),
     ]
 
-    for n_enc in (2, 4, 6):
-        c = config_n(n_enc)
-        f = n_enc * fused_attn_hbm_bytes(B, c.n_heads, c.n_kv_heads, S,
-                                         c.d_head, its, causal=c.causal)
-        u = n_enc * unfused_attn_hbm_bytes(B, c.n_heads, c.n_kv_heads, S,
-                                           c.d_head, its,
-                                           q_chunk=c.attn_q_chunk,
-                                           kv_chunk=c.attn_kv_chunk)
-        out.append((f"attn/atis_{n_enc}enc/bytes_ratio", u / f,
-                    f"per training step, {n_enc} attention layers"))
-        out.append((f"attn/atis_{n_enc}enc/fewer_bytes",
-                    1.0 if f < u else 0.0,
-                    "1 = fused < unfused HBM bytes for this config"))
+    out.extend(check_rows())  # per-config byte rows: one source with CI
 
     f = fused_attn_hbm_bytes(1, 8, 2, 4096, 128, 2)
     u = unfused_attn_hbm_bytes(1, 8, 2, 4096, 128, 2)

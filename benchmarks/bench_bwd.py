@@ -58,6 +58,32 @@ def _config_specs(cfg):
                    for m in tts})
 
 
+def check_rows():
+    """Analytic byte rows — the single source for both ``rows()`` and the
+    ``benchmarks.run --check`` regression guard (no wall-clock)."""
+    K, M, N, R = PAPER
+    fb = fused_bwd_hbm_bytes(K, M, N, R, 4)
+    ub = unfused_bwd_hbm_bytes(K, M, N, R, 4)
+    out = [
+        ("bwd/paper_layer/fused_bytes", float(fb),
+         "analytic HBM traffic of one fused btt_backward launch"),
+        ("bwd/paper_layer/unfused_bytes", float(ub),
+         "operand-swap gx launch + 4 XLA GEMMs (t/gt round-trip f32)"),
+        ("bwd/paper_layer/bytes_ratio", ub / fb,
+         ">1 = fused moves fewer HBM bytes"),
+    ]
+    for n_enc in (2, 4, 6):
+        ratios = [unfused_bwd_hbm_bytes(K_PAPER, m, n, r, 4)
+                  / fused_bwd_hbm_bytes(K_PAPER, m, n, r, 4)
+                  for m, n, r in _config_specs(config_n(n_enc))]
+        out.append((f"bwd/atis_{n_enc}enc/bytes_ratio", min(ratios),
+                    f"min over {len(ratios)} distinct TT layer shapes"))
+        out.append((f"bwd/atis_{n_enc}enc/fewer_bytes",
+                    1.0 if min(ratios) > 1.0 else 0.0,
+                    "1 = fused < unfused HBM bytes for every TT layer"))
+    return out
+
+
 def rows():
     K, M, N, R = PAPER
     kx, kg, kb, ka = jax.random.split(jax.random.PRNGKey(0), 4)
@@ -75,17 +101,9 @@ def rows():
                                     - v.astype(jnp.float32))))
               for u, v in zip(g_f, g_u))
 
-    fb = fused_bwd_hbm_bytes(K, M, N, R, 4)
-    ub = unfused_bwd_hbm_bytes(K, M, N, R, 4)
     out = [
         ("bwd/paper_layer/flops", float(bwd_flops(K, M, N, R)),
          "t/gt/gx/ga/gb contractions; 768x768 r12; K=32"),
-        ("bwd/paper_layer/fused_bytes", float(fb),
-         "analytic HBM traffic of one fused btt_backward launch"),
-        ("bwd/paper_layer/unfused_bytes", float(ub),
-         "operand-swap gx launch + 4 XLA GEMMs (t/gt round-trip f32)"),
-        ("bwd/paper_layer/bytes_ratio", ub / fb,
-         ">1 = fused moves fewer HBM bytes"),
         ("bwd/paper_layer/fused_us",
          median_us(fused, x, gy, b, a, reps=REPS),
          "Pallas fused BWD kernel (interpret mode on CPU; upper bound)"),
@@ -95,14 +113,5 @@ def rows():
         ("bwd/paper_layer/match_maxerr", err,
          "max |fused - unfused| over (gx, ga, gb)"),
     ]
-
-    for n_enc in (2, 4, 6):
-        ratios = [unfused_bwd_hbm_bytes(K_PAPER, m, n, r, 4)
-                  / fused_bwd_hbm_bytes(K_PAPER, m, n, r, 4)
-                  for m, n, r in _config_specs(config_n(n_enc))]
-        out.append((f"bwd/atis_{n_enc}enc/bytes_ratio", min(ratios),
-                    f"min over {len(ratios)} distinct TT layer shapes"))
-        out.append((f"bwd/atis_{n_enc}enc/fewer_bytes",
-                    1.0 if min(ratios) > 1.0 else 0.0,
-                    "1 = fused < unfused HBM bytes for every TT layer"))
+    out.extend(check_rows())  # byte rows: one source with the CI guard
     return out

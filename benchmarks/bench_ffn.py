@@ -1,0 +1,132 @@
+"""FFN stage: fused megakernel (both TT linears + activation in one
+pallas_call per direction) vs the two-call path.
+
+The FFN hidden state is the widest per-layer tensor in training; executed
+as separate ``btt_linear_op`` calls it round-trips HBM twice in the
+forward and again in the backward (saved as the down projection's input
+residual).  This module compares the two paths on three axes, mirroring
+bench_bwd's BWD-stage methodology:
+
+* **FLOPs** — identical GEMM work by construction; emitted once so
+  trajectory files are self-describing.
+* **HBM bytes moved** — the analytic traffic models in
+  ``kernels.btt_ffn``: the fused side is tile-derived from
+  ``choose_ffn_tiles`` (x/gy/y/gx streamed once, half-factors fetched
+  once, f32 gradient accumulators flushed once — the hidden state on
+  NEITHER side); the unfused side is generous to XLA (its backward
+  launches are the per-linear FUSED btt_backward kernels, every
+  activation tensor moves once per use).
+* **wall-clock** — median jitted fwd+bwd (``jax.grad``) microseconds.  On
+  CPU the fused column runs the kernels in *interpret* mode (Python
+  emulation) and is an upper bound; TPU is the target.
+
+Emitted rows (CSV via benchmarks.run, JSON schema documented there):
+  ffn/paper_block/flops          fwd+bwd GEMM FLOPs, ATIS 768x768 r12 K=32
+  ffn/paper_block/fused_bytes    analytic megakernel fwd+bwd HBM traffic
+  ffn/paper_block/unfused_bytes  analytic two-call fwd+bwd HBM traffic
+  ffn/paper_block/bytes_ratio    unfused / fused (>1 = fused wins)
+  ffn/paper_block/fused_us       median jitted grad step (interpret on CPU)
+  ffn/paper_block/unfused_us     median jitted two-call grad step
+  ffn/paper_block/match_maxerr   max |fused - two-call| over all grads
+  ffn/atis_<n>enc/bytes_ratio    min ratio over the config's FFN blocks
+  ffn/atis_<n>enc/fewer_bytes    1.0 iff fused < unfused for EVERY block
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.timing import median_us
+from repro.configs.atis_transformer import config_n
+from repro.core.memory_ledger import _collect_ffn_blocks, _ffn_block_dims
+from repro.core.tt import tt_init
+from repro.core.tt_linear import make_tt_spec
+from repro.kernels import (
+    btt_ffn_op,
+    fused_ffn_hbm_bytes,
+    unfused_ffn_hbm_bytes,
+)
+from repro.kernels.btt_ffn import ffn_flops
+from repro.models import init_params
+
+REPS = 5                # interpret-mode kernels are slow; median of 5
+K_PAPER = 32            # batch 1 x seq 32, the paper's training regime
+PAPER = (32, 768, 768, 768, 12, 12, 0)  # (K, M, N, F, R1, R2, Rg)
+
+
+def _config_ffn_dims(cfg):
+    """(M, N, F, R1, R2, Rg) of every TT FFN block in the config."""
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    dims = [_ffn_block_dims(b) for b in _collect_ffn_blocks(params)]
+    return sorted({d[:6] for d in dims if d is not None})
+
+
+def _byte_rows():
+    """The analytic-only rows (fast; also the run.py --check subset)."""
+    K, M, N, F, R1, R2, Rg = PAPER
+    fb = fused_ffn_hbm_bytes(K, M, N, F, R1, R2, Rg, 4)
+    ub = unfused_ffn_hbm_bytes(K, M, N, F, R1, R2, Rg, 4)
+    out = [
+        ("ffn/paper_block/flops", float(ffn_flops(K, M, N, F, R1, R2, Rg)),
+         "up/down GEMMs fwd+bwd; 768x768 r12; K=32"),
+        ("ffn/paper_block/fused_bytes", float(fb),
+         "analytic HBM traffic of one fused fwd + one fused bwd launch"),
+        ("ffn/paper_block/unfused_bytes", float(ub),
+         "two btt_linear launches + act round-trips + two fused "
+         "btt_backward launches + act VJP traffic"),
+        ("ffn/paper_block/bytes_ratio", ub / fb,
+         ">1 = megakernel moves fewer HBM bytes"),
+    ]
+    for n_enc in (2, 4, 6):
+        ratios = [unfused_ffn_hbm_bytes(K_PAPER, m, n, f, r1, r2, rg, 4)
+                  / fused_ffn_hbm_bytes(K_PAPER, m, n, f, r1, r2, rg, 4)
+                  for m, n, f, r1, r2, rg in _config_ffn_dims(config_n(n_enc))]
+        out.append((f"ffn/atis_{n_enc}enc/bytes_ratio", min(ratios),
+                    f"min over {len(ratios)} distinct FFN block shapes"))
+        out.append((f"ffn/atis_{n_enc}enc/fewer_bytes",
+                    1.0 if min(ratios) > 1.0 else 0.0,
+                    "1 = fused < unfused HBM bytes for every FFN block"))
+    return out
+
+
+def check_rows():
+    """Analytic rows for ``benchmarks.run --check`` (no wall-clock)."""
+    return _byte_rows()
+
+
+def rows():
+    K, M, N, F, R1, R2, _ = PAPER
+    up_spec = make_tt_spec(F, N, 3, R1)
+    down_spec = make_tt_spec(M, F, 3, R2)
+    up = tt_init(jax.random.PRNGKey(0), up_spec)
+    down = tt_init(jax.random.PRNGKey(1), down_spec)
+    x = jax.random.normal(jax.random.PRNGKey(2), (K, N))
+
+    def loss(fused_ffn):
+        def f(cu, cd, xx):
+            return (btt_ffn_op(list(cu), list(cd), None, xx, up_spec,
+                               down_spec, act="gelu", interpret=True,
+                               fused_ffn=fused_ffn) ** 2).sum()
+        return jax.jit(jax.grad(f, argnums=(0, 1, 2)))
+
+    g_fused = loss(True)
+    g_two = loss(False)
+    ops = (tuple(up), tuple(down), x)
+    gf = g_fused(*ops)
+    gu = g_two(*ops)
+    err = max(float(jnp.max(jnp.abs(u.astype(jnp.float32)
+                                    - v.astype(jnp.float32))))
+              for u, v in zip(jax.tree.leaves(gf), jax.tree.leaves(gu)))
+
+    out = _byte_rows()
+    out[4:4] = [
+        ("ffn/paper_block/fused_us",
+         median_us(g_fused, *ops, reps=REPS),
+         "megakernel fwd+bwd (interpret mode on CPU; upper bound)"),
+        ("ffn/paper_block/unfused_us",
+         median_us(g_two, *ops, reps=REPS),
+         "two-call fwd + per-linear fused bwd kernels"),
+        ("ffn/paper_block/match_maxerr", err,
+         "max |fused - two-call| over (core grads, gx)"),
+    ]
+    return out

@@ -15,6 +15,10 @@ Emitted rows (CSV via benchmarks.run, JSON schema documented there):
   pu/<opt>/unfused_us       median jitted unfused update, microseconds
   pu/<opt>/fused_us         median jitted fused update (interpret on CPU)
   pu/<opt>/match_maxerr     max |fused - unfused| over params after a step
+  pu/atis_<n>enc/<opt>/bytes_ratio   analytic unfused / fused HBM bytes
+                            (unfused: per-leaf tile-padded footprints;
+                            fused: dense flat packing — paper Eqs. 24/25)
+  pu/atis_<n>enc/<opt>/fewer_bytes   1.0 iff fused < unfused
   pu/ledger/<stage>_mb      ledger stage totals for the ATIS config
   pu/ledger/fits            1.0 iff peaks fit the 6 + 22.5 MB envelope
 """
@@ -26,6 +30,10 @@ import jax.numpy as jnp
 from benchmarks.timing import median_us
 from repro.configs.atis_transformer import config_n
 from repro.core.memory_ledger import ledger_rows
+from repro.kernels.fused_update import (
+    fused_pu_hbm_bytes,
+    unfused_pu_hbm_bytes,
+)
 from repro.models import init_params
 from repro.optim import adamw, sgd
 
@@ -36,6 +44,27 @@ def _max_err(a, b) -> float:
     return max(
         float(jnp.max(jnp.abs(x.astype(jnp.float32) - y.astype(jnp.float32))))
         for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def check_rows():
+    """Analytic rows for ``benchmarks.run --check`` (no wall-clock)."""
+    out = []
+    for n_enc in (2, 4, 6):
+        cfg = config_n(n_enc)
+        params = jax.eval_shape(
+            lambda c=cfg: init_params(jax.random.PRNGKey(0), c))
+        leaves = jax.tree.leaves(params)
+        for opt, mom in (("sgd", 0.9), ("adamw", 0.0)):
+            fb = fused_pu_hbm_bytes(leaves, opt, momentum=mom)
+            ub = unfused_pu_hbm_bytes(leaves, opt, momentum=mom)
+            out.append((f"pu/atis_{n_enc}enc/{opt}/bytes_ratio", ub / fb,
+                        "unfused counts each TT core at its per-leaf "
+                        "(8,128)-tile-padded footprint; fused the packed "
+                        "buffers"))
+            out.append((f"pu/atis_{n_enc}enc/{opt}/fewer_bytes",
+                        1.0 if fb < ub else 0.0,
+                        "1 = fused < unfused HBM bytes for this tree"))
+    return out
 
 
 def rows():
@@ -67,6 +96,7 @@ def rows():
                     "Pallas fused kernel (interpret mode on CPU)"))
         out.append((f"pu/{name}/match_maxerr", err,
                     "max |fused - unfused| over params after one step"))
+    out.extend(check_rows())
     # momentum=0.9 so the ledger describes the SGD configuration timed above
     # (a mu moment buffer + the 3-block momentum kernel).
     out.extend(ledger_rows(cfg, "sgd", "pu/ledger", momentum=0.9))

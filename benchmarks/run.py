@@ -19,10 +19,26 @@ command ``python -m benchmarks.run`` produces a single auditable artifact.
   bench_attn         Sec. V-B2 ATTN stage      (flash fwd + single-kernel bwd
                                                 vs blockwise+autodiff: FLOPs,
                                                 HBM bytes moved, wall-clock)
+  bench_ffn          Sec. V FFN stage          (fused megakernel — both TT
+                                                linears + act, hidden state
+                                                VMEM-only — vs two-call path:
+                                                FLOPs, HBM bytes, wall-clock)
 
 Usage::
 
   python -m benchmarks.run [module ...] [--json PATH]
+  python -m benchmarks.run --check [--write-baseline]
+
+``--check`` is the benchmark-regression guard CI runs on every commit: it
+collects the ANALYTIC rows (``check_rows()``; no wall-clock, seconds not
+minutes) of every fused-vs-unfused stage — PU, BWD, ATTN, FFN — and fails
+if (a) any ``*/fewer_bytes`` flag is not 1.0 or any ``*/bytes_ratio`` is
+not > 1.0 (a fused path moving MORE analytic HBM bytes than its unfused
+counterpart on a shipped config is a regression by definition), or (b) any
+ratio fell more than 0.1% below the committed baseline
+(``benchmarks/baseline_check.json`` — the seed of the benchmark
+trajectory; regenerate deliberately with ``--check --write-baseline``
+after an intentional model change).
 
 With ``--json PATH`` the same rows are also written as a ``BENCH_*.json``
 -style trajectory snapshot.  JSON schema (stable — downstream tooling diffs
@@ -54,6 +70,7 @@ file is self-describing without the paper at hand.
 from __future__ import annotations
 
 import json
+import os
 import sys
 import time
 import traceback
@@ -69,11 +86,72 @@ MODULES = [
     "bench_pu",
     "bench_bwd",
     "bench_attn",
+    "bench_ffn",
 ]
+
+# Modules with a fused-vs-unfused analytic byte model (check_rows()).
+CHECK_MODULES = ["bench_pu", "bench_bwd", "bench_attn", "bench_ffn"]
+BASELINE_PATH = os.path.join(os.path.dirname(__file__),
+                             "baseline_check.json")
+BASELINE_SLACK = 0.999  # ratios may not fall >0.1% below the baseline
+
+
+def run_check(write_baseline: bool) -> None:
+    rows: list[tuple[str, float, str]] = []
+    for mod_name in CHECK_MODULES:
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["check_rows"])
+        rows.extend(mod.check_rows())
+    print("name,value,note")
+    for name, value, note in rows:
+        print(f"{name},{value:.6g},{note}")
+
+    failures = []
+    for name, value, _ in rows:
+        if name.endswith("/fewer_bytes") and value != 1.0:
+            failures.append(f"{name} = {value} (fused path moves >= the "
+                            "unfused HBM bytes)")
+        if name.endswith("/bytes_ratio") and value <= 1.0:
+            failures.append(f"{name} = {value:.4f} (must be > 1.0)")
+
+    current = {name: value for name, value, _ in rows}
+    if write_baseline:
+        with open(BASELINE_PATH, "w") as f:
+            json.dump({"schema": 1, "rows": current}, f, indent=1,
+                      sort_keys=True)
+        print(f"# wrote baseline {BASELINE_PATH}", file=sys.stderr)
+    elif os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH) as f:
+            baseline = json.load(f)["rows"]
+        for name, base in baseline.items():
+            if not name.endswith("/bytes_ratio"):
+                continue
+            got = current.get(name)
+            if got is None:
+                failures.append(f"{name} missing (baseline has it)")
+            elif got < base * BASELINE_SLACK:
+                failures.append(f"{name} = {got:.4f} regressed below "
+                                f"baseline {base:.4f}")
+    else:
+        print(f"# no baseline at {BASELINE_PATH}; run --check "
+              "--write-baseline to seed it", file=sys.stderr)
+    if failures:
+        raise SystemExit("benchmark-regression check FAILED:\n  "
+                         + "\n  ".join(failures))
+    print(f"# check OK: {len(rows)} analytic rows, "
+          f"{len(CHECK_MODULES)} stages", file=sys.stderr)
 
 
 def main() -> None:
     argv = sys.argv[1:]
+    if "--check" in argv:
+        argv.remove("--check")
+        write_baseline = "--write-baseline" in argv
+        if write_baseline:
+            argv.remove("--write-baseline")
+        if argv:
+            raise SystemExit(f"--check takes no modules, got {argv}")
+        run_check(write_baseline)
+        return
     json_path = None
     if "--json" in argv:
         i = argv.index("--json")

@@ -54,6 +54,13 @@ def main(argv=None):
                          "(only (O, m, l) saved per encoder — no S×S "
                          "probabilities; --no-fused-attn = pure-JAX "
                          "blockwise path; unset keeps the config)")
+    ap.add_argument("--fused-ffn", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="with --kernel-flow: fused FFN megakernel — both "
+                         "TT linears + GELU in one Pallas kernel per "
+                         "direction, (K, d_ff) hidden state VMEM-resident, "
+                         "backward recomputes it from x (--no-fused-ffn = "
+                         "two-call path; unset keeps the config)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-every", type=int, default=50)
     args = ap.parse_args(argv)
@@ -65,6 +72,8 @@ def main(argv=None):
         cfg = cfg.with_tt(fused_bwd=args.fused_bwd)
     if args.fused_attn is not None:
         cfg = cfg.with_fused_attn(args.fused_attn)
+    if args.fused_ffn is not None:
+        cfg = cfg.with_fused_ffn(args.fused_ffn)
     if args.scale_down:
         cfg = cfg.scaled_down(d_model=256, n_heads=4, d_ff=256,
                               vocab_size=1000, num_layers=args.encoders,

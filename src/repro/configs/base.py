@@ -109,6 +109,15 @@ class ModelConfig:
     # probability tensor).  Falls back to blockwise_attention per shape
     # when the backward working set exceeds the kernel VMEM budget.
     fused_attn: bool = False
+    # FFN blocks (TT-compressed, tt.flow="kernel" only — like
+    # tt.fused_bwd, this refines the kernel flow) as the fused megakernel:
+    # both TT linears + activation in ONE pallas_call per direction, the
+    # (K, d_ff) hidden state resident in VMEM scratch, backward
+    # recomputing it from x (FFN residuals shrink to the layer input).
+    # Falls back to the two-call path per shape when the working set
+    # exceeds the kernel VMEM budget (kernels.btt_ffn.ffn_vmem_fits) or a
+    # model-parallel mesh is in scope.
+    fused_ffn: bool = False
     # block structure
     hybrid_pattern: tuple[str, ...] = ("attn",)   # cycle of "attn"|"rec"|"ssm"
     moe: MoEConfig | None = None
@@ -149,6 +158,9 @@ class ModelConfig:
 
     def with_fused_attn(self, on: bool = True) -> "ModelConfig":
         return dataclasses.replace(self, fused_attn=on)
+
+    def with_fused_ffn(self, on: bool = True) -> "ModelConfig":
+        return dataclasses.replace(self, fused_ffn=on)
 
     def scaled_down(self, **overrides) -> "ModelConfig":
         """Reduced config of the same family for CPU smoke tests."""

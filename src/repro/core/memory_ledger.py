@@ -35,10 +35,21 @@ source for both numbers, and the ledger gates on the same
 ``attn_bwd_vmem_fits`` the op dispatches on).  Shared inputs (Q/K/V
 projections read the same ``x``) are counted once per projection — a
 deliberate over-count, i.e. the "fits" verdict is conservative.
+
+FFN blocks follow the same contract: with ``cfg.fused_ffn`` on the kernel
+flow and the block passing ``models.layers.ffn_fused_eligible`` — the
+EXACT predicate function ``mlp_apply``/``moe._expert_ffn_apply`` dispatch
+on (all-TT, bias-free, no model-parallel mesh, VMEM fit at the launch's
+own K) — the ledger drops the
+down projection's ``(K, d_ff)`` saved input and the activation pre-images
+(``ffn_hidden`` row) and instead reports the megakernel's tile-derived
+working set (``ffn_kernel_vmem`` row) — FFN residuals are O(K·d_model),
+never O(K·d_ff), exactly what the op actually saves.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any
 
 import jax
@@ -178,6 +189,56 @@ def _attn_kernel_vmem_bytes(cfg, seq: int, itemsize: int, stage: str) -> int:
 
 
 # ---------------------------------------------------------------------------
+# FFN blocks (structural walk: up/down[/gate] triples in mlp and MoE dicts).
+# ---------------------------------------------------------------------------
+
+
+def _collect_ffn_blocks(params) -> list[dict]:
+    """Every FFN block in a parameter pytree: dicts holding an
+    ``up``/``down`` (and optionally ``gate``) projection triple — plain
+    MLPs, per-expert MoE stacks, and MoE shared experts alike."""
+    blocks: list[dict] = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "up" in node and "down" in node:
+                blocks.append(node)
+                if isinstance(node.get("shared"), dict):
+                    walk(node["shared"])
+                return
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                walk(v)
+
+    walk(params)
+    return blocks
+
+
+def _ffn_block_mult(m: TTLinearParams) -> int:
+    """Stack multiplier of one FFN projection: the product of all leading
+    dims beyond the spec's own core rank (cycle-stacked layers contribute
+    one axis, vmapped MoE experts another)."""
+    core = m.cores[0]
+    base = len(m.spec.core_shapes()[0])
+    return int(np.prod(core.shape[: len(core.shape) - base])) or 1
+
+
+def _ffn_block_dims(blk: dict):
+    """(M, N, F, R1, R2, Rg, gated, mult) for an all-TT block, else None."""
+    up, down = blk["up"], blk["down"]
+    gate = blk.get("gate")
+    mods = (up, down) if gate is None else (up, down, gate)
+    if not all(isinstance(m, TTLinearParams) for m in mods):
+        return None
+    return (down.spec.out_dim, up.spec.in_dim, up.spec.out_dim,
+            up.spec.mid_rank, down.spec.mid_rank,
+            gate.spec.mid_rank if gate is not None else 0,
+            gate is not None, _ffn_block_mult(down))
+
+
+# ---------------------------------------------------------------------------
 # The ledger.
 # ---------------------------------------------------------------------------
 
@@ -213,11 +274,73 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     tt_inter_peak = max(
         (mem_btt(s, K) * act_itemsize for s in specs), default=0)
 
+    # FFN blocks: with cfg.fused_ffn on the kernel flow and the block
+    # passing THE dispatch predicate itself — models.layers.
+    # ffn_fused_eligible, the exact function mlp_apply/_expert_ffn_apply
+    # gate on (all-TT, bias-free, no model-parallel mesh, megakernel
+    # working set inside the VMEM budget) — the hidden state is recomputed
+    # in VMEM, so the down projection's (K, d_ff) input and the activation
+    # pre-images are never saved.  Otherwise the two-call path saves both.
+    from repro.kernels.btt_ffn import (
+        ffn_residual_bytes,
+        ffn_stage_vmem_bytes,
+    )
+    from repro.models.layers import ffn_fused_eligible
+
+    ffn_hidden_bytes = 0
+    ffn_fwd_vmem = 0
+    ffn_bwd_vmem = 0
+    ffn_fused_any = False
+    excluded_down_ids: set[int] = set()
+    for blk in _collect_ffn_blocks(params):
+        dims = _ffn_block_dims(blk)
+        if dims is None:
+            continue
+        M_, N_, F_, R1, R2, Rg, gated, mult = dims
+        # The row count the model actually dispatches with: MoE expert
+        # blocks (the dict also carries the router) run per expert on the
+        # capacity-dispatched (G*cap) tokens, not on batch*seq — the
+        # predicate and tile chooser must see the launch's own K or the
+        # ledger drifts from moe._expert_ffn_apply.
+        if "router" in blk and cfg.moe is not None:
+            cap = int(math.ceil(seq * cfg.moe.top_k / cfg.moe.num_experts
+                                * cfg.moe.capacity_factor))
+            k_blk = batch * cap
+        else:
+            k_blk = K
+        # Same gate the model applies: fused_ffn refines the kernel flow
+        # only, and the block must pass the dispatch predicate.
+        fused_eff = (cfg.fused_ffn and cfg.tt.flow == "kernel"
+                     and ffn_fused_eligible(blk["up"], blk["down"],
+                                            blk.get("gate"), K=k_blk))
+        if fused_eff:
+            ffn_fused_any = True
+            excluded_down_ids.add(id(blk["down"]))
+            ffn_fwd_vmem = max(ffn_fwd_vmem, ffn_stage_vmem_bytes(
+                M_, N_, F_, R1, R2, Rg, act_itemsize, K=k_blk,
+                stage="FWD"))
+            ffn_bwd_vmem = max(ffn_bwd_vmem, ffn_stage_vmem_bytes(
+                M_, N_, F_, R1, R2, Rg, act_itemsize, K=k_blk,
+                stage="BWD"))
+        else:
+            # Pre-activation residuals only: the down projection's saved
+            # (K, F) input is charged by the per-TT-linear loop below (at
+            # the ledger's K convention), so subtract its term from the
+            # closed form to avoid counting it twice.
+            ffn_hidden_bytes += mult * (
+                ffn_residual_bytes(K, F_, act_itemsize, gated=gated,
+                                   fused=False)
+                - K * F_ * act_itemsize)
+
     # Residuals the fused VJP saves for BWD: one (K, N) input per TT-linear
-    # application (stacked modules apply once per stacked layer).
+    # application (stacked modules apply once per stacked layer).  Down
+    # projections of megakernel-dispatched FFN blocks save NOTHING — their
+    # input is the VMEM-recomputed hidden state.
     n_tt_apps = 0
     resid_bytes = 0
     for m in tts:
+        if id(m) in excluded_down_ids:
+            continue
         mult = _stacked_multiplier(m)
         n_tt_apps += mult
         resid_bytes += mult * K * m.spec.in_dim * act_itemsize
@@ -259,6 +382,10 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     n_pu_bufs = {"sgd": 3 if momentum else 2, "adamw": 4}[optimizer]
     pu_kernel_vmem = _pu_kernel_vmem_bytes(n_params, n_pu_bufs)
 
+    ffn_hidden_note = (
+        "megakernel recomputes the hidden tile in VMEM — no pre-activation "
+        "or hidden residual" if ffn_fused_any and ffn_hidden_bytes == 0 else
+        "activation pre-images saved between the two-call FFN launches")
     fwd = StageLedger("FWD", (
         LedgerEntry("params", params_bytes, "bram",
                     "TT/TTM cores + biases + norms (eval_shape-exact)"),
@@ -266,6 +393,8 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                     f"fused-VJP saved inputs ({n_tt_apps} TT apps) "
                     "+ embed"),
         LedgerEntry("attn_residuals", attn_resid, "uram", attn_note),
+        LedgerEntry("ffn_hidden", ffn_hidden_bytes, "uram",
+                    ffn_hidden_note),
         LedgerEntry("tt_intermediates", tt_inter_peak, "uram",
                     "paper Eq. (21) mem_btt, max over layers"),
         LedgerEntry("kernel_vmem", fwd_kernel_vmem, "uram",
@@ -274,6 +403,10 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                     "flash_attention_pallas working set (fused_attn)"
                     if attn_fused_eff else
                     "no flash launch (blockwise path)"),
+        LedgerEntry("ffn_kernel_vmem", ffn_fwd_vmem, "uram",
+                    "btt_ffn_pallas working set (choose_ffn_tiles-derived), "
+                    "largest block" if ffn_fused_any else
+                    "no megakernel launch (two-call path)"),
     ))
     bwd = StageLedger("BWD", (
         LedgerEntry("params", params_bytes, "bram",
@@ -281,6 +414,8 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         LedgerEntry("residuals", resid_total, "uram",
                     "consumed as BWD walks the graph"),
         LedgerEntry("attn_residuals", attn_resid, "uram", attn_note),
+        LedgerEntry("ffn_hidden", ffn_hidden_bytes, "uram",
+                    ffn_hidden_note),
         LedgerEntry("grads", grads_bytes, "uram", "f32 accumulators"),
         LedgerEntry("tt_intermediates", tt_inter_peak, "uram",
                     "t = x @ B^T recomputed per layer (never stored)"),
@@ -294,6 +429,11 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                     "(choose_attn_tiles-derived: dQ/dK/dV one pass)"
                     if attn_fused_eff else
                     "no flash launch (blockwise path)"),
+        LedgerEntry("ffn_kernel_vmem", ffn_bwd_vmem, "uram",
+                    "btt_ffn_bwd_pallas working set (hidden recomputed in "
+                    "VMEM; gx + all half-factor grads one pass)"
+                    if ffn_fused_any else
+                    "no megakernel launch (two-call path)"),
     ))
     pu = StageLedger("PU", (
         LedgerEntry("params", params_bytes, "bram", "updated in place"),

@@ -4,6 +4,11 @@
 ``btt_backward``    — fused BWD stage: gx/ga/gb in one pass, t/gt recomputed
                       into VMEM scratch, ga/gb accumulated on chip
                       (paper Eqs. (10)/(11)/(16); zero HBM intermediates).
+``btt_ffn``         — fused tensorized-FFN megakernel: both (three when
+                      gated) TT linears + activation in ONE pallas_call per
+                      direction; the (K, d_ff) hidden state lives only in
+                      VMEM scratch, and the backward recomputes it from x
+                      (FFN residuals shrink to the layer input).
 ``ttm_embed``       — gather-free d=3 TTM embedding lookup (one-hot MXU GEMMs).
 ``flash_attention`` — causal/windowed GQA flash attention (online-softmax
                       state in VMEM scratch; closes the 86%-of-traffic gap
@@ -25,6 +30,15 @@ from .btt_backward import (
     fused_bwd_hbm_bytes,
     unfused_bwd_hbm_bytes,
 )
+from .btt_ffn import (
+    btt_ffn_bwd_pallas,
+    btt_ffn_pallas,
+    choose_ffn_tiles,
+    ffn_residual_bytes,
+    ffn_vmem_fits,
+    fused_ffn_hbm_bytes,
+    unfused_ffn_hbm_bytes,
+)
 from .btt_linear import btt_linear_pallas
 from .flash_attention import flash_attention_pallas
 from .flash_backward import (
@@ -37,6 +51,7 @@ from .flash_backward import (
 )
 from .fused_update import fused_adamw_update, fused_sgd_update
 from .ops import (
+    btt_ffn_op,
     btt_linear_op,
     flash_mha_op,
     kernel_interpret_default,
@@ -44,6 +59,8 @@ from .ops import (
 )
 from .ref import (
     btt_backward_ref,
+    btt_ffn_backward_ref,
+    btt_ffn_ref,
     btt_linear_ref,
     btt_t_ref,
     flash_attention_bwd_ref,
@@ -53,14 +70,18 @@ from .ttm_embed import ttm_embed_pallas
 
 __all__ = [
     "btt_linear_pallas", "btt_backward_pallas", "ttm_embed_pallas",
+    "btt_ffn_pallas", "btt_ffn_bwd_pallas",
     "flash_attention_pallas", "flash_attention_bwd_pallas",
-    "btt_linear_op", "ttm_embed_op", "flash_mha_op",
+    "btt_linear_op", "btt_ffn_op", "ttm_embed_op", "flash_mha_op",
     "kernel_interpret_default",
-    "btt_linear_ref", "btt_t_ref", "btt_backward_ref", "ttm_embed_ref",
+    "btt_linear_ref", "btt_t_ref", "btt_backward_ref",
+    "btt_ffn_ref", "btt_ffn_backward_ref", "ttm_embed_ref",
     "flash_attention_bwd_ref",
     "fused_sgd_update", "fused_adamw_update",
     "choose_bwd_tiles", "bwd_vmem_fits",
     "fused_bwd_hbm_bytes", "unfused_bwd_hbm_bytes",
+    "choose_ffn_tiles", "ffn_vmem_fits", "ffn_residual_bytes",
+    "fused_ffn_hbm_bytes", "unfused_ffn_hbm_bytes",
     "choose_attn_tiles", "attn_bwd_vmem_fits", "attn_residual_bytes",
     "fused_attn_hbm_bytes", "unfused_attn_hbm_bytes",
 ]

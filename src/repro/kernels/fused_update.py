@@ -51,6 +51,8 @@ __all__ = [
     "pack_leaves",
     "unpack_leaves",
     "pu_block_shape",
+    "fused_pu_hbm_bytes",
+    "unfused_pu_hbm_bytes",
 ]
 
 LANES = 1024          # minor dim of the flattened tile grid (8 x 128 lanes)
@@ -269,3 +271,75 @@ def fused_adamw_update(params, grads, m, v, lr_t, t, *, b1: float,
     return (jax.tree.unflatten(treedef, new_p),
             jax.tree.unflatten(treedef, new_m),
             jax.tree.unflatten(treedef, new_v))
+
+
+# ---------------------------------------------------------------------------
+# Analytic HBM-traffic models (shared by benchmarks and the run.py --check
+# regression guard).
+# ---------------------------------------------------------------------------
+
+
+def _moment_buffers(optimizer: str, momentum: float = 0.0) -> int:
+    if optimizer == "adamw":
+        return 2
+    return 1 if momentum else 0
+
+
+def _tile_padded_elems(shape: tuple, itemsize: int) -> int:
+    """HBM footprint of one leaf stored alone: XLA pads a TPU array's
+    minor two dims to the dtype's (sublane, 128) tile.  1-D leaves are
+    modeled lane-padded only — generous to the unfused side."""
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return _round_up(int(shape[0]), 128)
+    sub = max(8, 32 // max(itemsize, 1))  # f32 8, bf16 16, int8 32
+    lead = 1
+    for d in shape[:-2]:
+        lead *= int(d)
+    return lead * _round_up(int(shape[-2]), sub) * _round_up(int(shape[-1]),
+                                                             128)
+
+
+def fused_pu_hbm_bytes(leaves, optimizer: str, *,
+                       momentum: float = 0.0) -> int:
+    """HBM bytes of one fused PU step over ``leaves`` (arrays or
+    ShapeDtypeStructs): per dtype group, every packed buffer (params,
+    grads f32, moments f32) is read once and the param/moment buffers
+    written once through ``input_output_aliases`` — the dense flat packing
+    is the paper's grouped BRAM storage (Eqs. (24)/(25)): <1 block of
+    padding per group instead of per-leaf tile waste."""
+    n_m = _moment_buffers(optimizer, momentum)
+    groups: dict = {}
+    for x in leaves:
+        dt = jnp.dtype(x.dtype)
+        groups.setdefault(dt, 0)
+        groups[dt] += int(np.prod(x.shape))
+    total = 0
+    for dt, n in groups.items():
+        _, rows_p, lanes = pu_block_shape(n)
+        n_pad = rows_p * lanes
+        reads = n_pad * (dt.itemsize + 4 + 4 * n_m)
+        writes = n_pad * (dt.itemsize + 4 * n_m)
+        total += reads + writes
+    return total
+
+
+def unfused_pu_hbm_bytes(leaves, optimizer: str, *,
+                         momentum: float = 0.0) -> int:
+    """HBM bytes of the per-leaf XLA update: the same read/write counts as
+    the fused model (generous — perfect elementwise fusion, each buffer
+    touched once), but every leaf at its OWN tile-padded footprint: TT
+    cores are tiny, so storing them alone wastes most of each (8, 128)
+    tile (the waste ``core.cost_model.tpu_packing_efficiency`` measures
+    and the packed layout exists to eliminate)."""
+    n_m = _moment_buffers(optimizer, momentum)
+    total = 0
+    for x in leaves:
+        its = jnp.dtype(x.dtype).itemsize
+        n_pad = _tile_padded_elems(tuple(x.shape), its)
+        n_pad_f32 = _tile_padded_elems(tuple(x.shape), 4)
+        reads = n_pad * its + n_pad_f32 * (4 + 4 * n_m)
+        writes = n_pad * its + n_pad_f32 * 4 * n_m
+        total += reads + writes
+    return total

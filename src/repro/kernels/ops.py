@@ -3,13 +3,27 @@
 * ``btt_linear_op(cores, x, spec)`` — the paper's BTT linear executed by the
   fused Pallas forward (``btt_linear.py``) under a custom VJP that implements
   the paper's fused backward (Sec. V-B2): no K-sized intermediate is saved.
-  With ``fused_bwd=True`` (default) the whole BWD stage — data gradient AND
-  half-factor gradients — runs as ONE Pallas kernel
-  (``btt_backward.py``) with the recomputed ``t``/``gt`` intermediates
-  resident in VMEM scratch; shapes whose working set exceeds the VMEM
-  budget, or ``fused_bwd=False``, take the reference path: ``gx`` through
-  the forward kernel by operand swap (``gx = btt(gy, A^T, B^T)``) plus four
-  XLA GEMMs for the core gradients (f32 end to end).
+  The half-factors ``(A, B)`` are built from the cores ONCE per invocation
+  (``tt_half_factors``) and the custom VJP lives at the half-factor level
+  (``_hf_linear``): the bwd reuses the saved (tiny, K-independent) factors
+  and plain autodiff chains their cotangents back into per-core gradients —
+  no rebuild in either the fwd or the bwd.  With ``fused_bwd=True``
+  (default) the whole BWD stage — data gradient AND half-factor gradients —
+  runs as ONE Pallas kernel (``btt_backward.py``) with the recomputed
+  ``t``/``gt`` intermediates resident in VMEM scratch; shapes whose working
+  set exceeds the VMEM budget, or ``fused_bwd=False``, take the reference
+  path: ``gx`` through the forward kernel by operand swap
+  (``gx = btt(gy, A^T, B^T)``) plus four XLA GEMMs for the core gradients
+  (f32 end to end).
+
+* ``btt_ffn_op(up_cores, down_cores, gate_cores, x, ...)`` — the WHOLE FFN
+  block (both TT linears + activation; three linears when gated) as one
+  fused Pallas forward and one fused Pallas backward (``btt_ffn.py``): the
+  ``(K, d_ff)`` hidden state lives only in VMEM scratch, and the backward
+  recomputes it from ``x``, so the block's training residual is just the
+  layer input.  Shapes whose working set exceeds the VMEM budget
+  (``ffn_vmem_fits`` — the ledger gates on the same predicate), or
+  ``fused_ffn=False``, take the two-call path through ``_hf_linear``.
 
 * ``ttm_embed_op(cores, ids, spec)`` — gather-free TTM lookup via the d=3
   one-hot kernel; falls back to the jnp gather chain when d != 3 or the cores
@@ -42,6 +56,12 @@ from repro.core.contraction import tt_forward_btt, ttm_lookup, token_digits
 from repro.core.tt import TTMSpec, TTSpec, tt_half_factors
 
 from .btt_backward import btt_backward_pallas, bwd_vmem_fits
+from .btt_ffn import (
+    ACTS as _FFN_ACTS,
+    btt_ffn_bwd_pallas,
+    btt_ffn_pallas,
+    ffn_vmem_fits,
+)
 from .btt_linear import btt_linear_pallas
 from .flash_attention import flash_attention_pallas
 from .flash_backward import (
@@ -51,7 +71,7 @@ from .flash_backward import (
 )
 from .ttm_embed import ttm_embed_pallas
 
-__all__ = ["btt_linear_op", "ttm_embed_op", "flash_mha_op",
+__all__ = ["btt_linear_op", "btt_ffn_op", "ttm_embed_op", "flash_mha_op",
            "kernel_interpret_default"]
 
 _VMEM_CORE_BUDGET = 8 * 1024 * 1024  # resident-core budget for ttm kernel
@@ -63,34 +83,34 @@ def kernel_interpret_default() -> bool:
 
 
 # ---------------------------------------------------------------------------
-# BTT linear (kernel-backed, fused custom VJP).
+# BTT linear (kernel-backed, fused custom VJP at the half-factor level).
+#
+# The half-factor build is OUTSIDE the custom VJP: ``btt_linear_op`` (and
+# ``btt_ffn_op``) call ``tt_half_factors`` exactly once per invocation and
+# plain autodiff chains the (tiny, K-independent) build — the fwd/bwd pair
+# below never rebuilds the factors from cores.
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _btt_kernel_fused(cores: tuple, x: jax.Array, spec: TTSpec,
-                      interpret: bool, fused_bwd: bool) -> jax.Array:
-    a, b = tt_half_factors(cores, spec)
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _hf_linear(a: jax.Array, b: jax.Array, x: jax.Array,
+               interpret: bool, fused_bwd: bool) -> jax.Array:
     return btt_linear_pallas(x, b, a, interpret=interpret)
 
 
-def _btt_kernel_fwd(cores, x, spec, interpret, fused_bwd):
-    a, b = tt_half_factors(cores, spec)
+def _hf_linear_fwd(a, b, x, interpret, fused_bwd):
     y = btt_linear_pallas(x, b, a, interpret=interpret)
-    return y, (cores, x)  # paper-faithful: only inputs saved, no K-sized state
+    # Residuals: the layer input and the already-built half-factors (O(r)
+    # extra state, K-independent) — no K-sized intermediate, no rebuild.
+    return y, (a, b, x)
 
 
-def _btt_kernel_bwd(spec, interpret, fused_bwd, residuals, gy):
-    cores, x = residuals
-    d = spec.d
-
-    def build(oc, ic):
-        return tt_half_factors(list(oc) + list(ic), spec)
-
-    (a, b), build_vjp = jax.vjp(build, tuple(cores[:d]), tuple(cores[d:]))
+def _hf_linear_bwd(interpret, fused_bwd, residuals, gy):
+    a, b, x = residuals
+    M, R = a.shape
+    N = b.shape[1]
     itemsize = jnp.dtype(x.dtype).itemsize
-    if fused_bwd and bwd_vmem_fits(spec.out_dim, spec.in_dim, spec.mid_rank,
-                                   itemsize, K=x.shape[0]):
+    if fused_bwd and bwd_vmem_fits(M, N, R, itemsize, K=x.shape[0]):
         # ONE kernel launch: gx streamed, ga/gb accumulated on chip —
         # t/gt never leave VMEM (paper Eqs. (10)/(11)/(16) as one stage).
         gx, ga, gb = btt_backward_pallas(x, gy, b, a, interpret=interpret)
@@ -107,11 +127,10 @@ def _btt_kernel_bwd(spec, interpret, fused_bwd, residuals, gy):
                      preferred_element_type=jnp.float32)
         gb = jnp.dot(gt.T, x.astype(jnp.float32),
                      preferred_element_type=jnp.float32)
-    g_out, g_in = build_vjp((ga.astype(a.dtype), gb.astype(b.dtype)))
-    return (tuple(g_out) + tuple(g_in), gx)
+    return ga.astype(a.dtype), gb.astype(b.dtype), gx
 
 
-_btt_kernel_fused.defvjp(_btt_kernel_fwd, _btt_kernel_bwd)
+_hf_linear.defvjp(_hf_linear_fwd, _hf_linear_bwd)
 
 
 def btt_linear_op(cores, x: jax.Array, spec: TTSpec, *,
@@ -129,7 +148,93 @@ def btt_linear_op(cores, x: jax.Array, spec: TTSpec, *,
         return tt_forward_btt(cores, x, spec)
     if interpret is None:
         interpret = kernel_interpret_default()
-    return _btt_kernel_fused(tuple(cores), x, spec, interpret, fused_bwd)
+    a, b = tt_half_factors(list(cores), spec)  # built once; autodiff chains
+    return _hf_linear(a, b, x, interpret, fused_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused tensorized FFN (whole block: both/all TT linears + activation).
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9))
+def _ffn_fused(a1, b1, a2, b2, ag, bg, x, act: str, f_logical: int,
+               interpret: bool) -> jax.Array:
+    return btt_ffn_pallas(x, b1, a1, b2, a2, bg, ag, act=act,
+                          f_logical=f_logical, interpret=interpret)
+
+
+def _ffn_fused_fwd(a1, b1, a2, b2, ag, bg, x, act, f_logical, interpret):
+    y = btt_ffn_pallas(x, b1, a1, b2, a2, bg, ag, act=act,
+                       f_logical=f_logical, interpret=interpret)
+    # The block's whole residual set: x and the half-factors.  The hidden
+    # state and the activation pre-images are recomputed in VMEM by the
+    # backward — FFN residuals are O(K*d_model), never O(K*d_ff).
+    return y, (a1, b1, a2, b2, ag, bg, x)
+
+
+def _ffn_fused_bwd(act, f_logical, interpret, residuals, gy):
+    a1, b1, a2, b2, ag, bg, x = residuals
+    grads = btt_ffn_bwd_pallas(x, gy, b1, a1, b2, a2, bg, ag, act=act,
+                               f_logical=f_logical, interpret=interpret)
+    if bg is not None:
+        gx, ga1, gb1, ga2, gb2, gag, gbg = grads
+        return (ga1.astype(a1.dtype), gb1.astype(b1.dtype),
+                ga2.astype(a2.dtype), gb2.astype(b2.dtype),
+                gag.astype(ag.dtype), gbg.astype(bg.dtype), gx)
+    gx, ga1, gb1, ga2, gb2 = grads
+    return (ga1.astype(a1.dtype), gb1.astype(b1.dtype),
+            ga2.astype(a2.dtype), gb2.astype(b2.dtype), None, None, gx)
+
+
+_ffn_fused.defvjp(_ffn_fused_fwd, _ffn_fused_bwd)
+
+
+def btt_ffn_op(up_cores, down_cores, gate_cores, x: jax.Array,
+               up_spec: TTSpec, down_spec: TTSpec,
+               gate_spec: TTSpec | None = None, *, act: str = "gelu",
+               f_logical: int | None = None,
+               interpret: bool | None = None, fused_bwd: bool = True,
+               fused_ffn: bool = True) -> jax.Array:
+    """Whole TT FFN block: ``x (K, N) -> y (K, M)`` through
+    ``down(act(up(x)))`` (``down(act(gate(x)) * up(x))`` when
+    ``gate_cores`` is given), fused forward AND backward.
+
+    The half-factors of every projection are built exactly once here;
+    autodiff chains their cotangents back into per-core gradients.  When
+    the megakernel's working set exceeds the VMEM budget
+    (``ffn_vmem_fits``) or ``fused_ffn=False``, the op takes the two-call
+    path through ``_hf_linear`` — the exact computation
+    ``models.layers.mlp_apply`` performs, bit for bit.
+    """
+    if interpret is None:
+        interpret = kernel_interpret_default()
+    a1, b1 = tt_half_factors(list(up_cores), up_spec)
+    a2, b2 = tt_half_factors(list(down_cores), down_spec)
+    ag = bg = None
+    if gate_cores is not None:
+        ag, bg = tt_half_factors(list(gate_cores), gate_spec)
+    if f_logical is None:
+        f_logical = min(up_spec.out_dim, down_spec.in_dim)
+
+    M, N, F = down_spec.out_dim, up_spec.in_dim, up_spec.out_dim
+    R1, R2 = up_spec.mid_rank, down_spec.mid_rank
+    Rg = gate_spec.mid_rank if gate_spec is not None else 0
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if fused_ffn and ffn_vmem_fits(M, N, F, R1, R2, Rg, itemsize,
+                                   K=x.shape[0]):
+        return _ffn_fused(a1, b1, a2, b2, ag, bg, x, act, f_logical,
+                          interpret)
+    # Two-call fallback: the same slice/act/pad sequence mlp_apply runs.
+    u = _hf_linear(a1, b1, x, interpret, fused_bwd)[:, :f_logical]
+    if bg is not None:
+        g = _hf_linear(ag, bg, x, interpret, fused_bwd)[:, :f_logical]
+        h = _FFN_ACTS[act](g) * u
+    else:
+        h = _FFN_ACTS[act](u)
+    if f_logical != down_spec.in_dim:
+        h = jnp.pad(h, ((0, 0), (0, down_spec.in_dim - f_logical)))
+    return _hf_linear(a2, b2, h, interpret, fused_bwd)
 
 
 # ---------------------------------------------------------------------------

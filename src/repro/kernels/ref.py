@@ -11,7 +11,10 @@ import math
 import jax
 import jax.numpy as jnp
 
-__all__ = ["btt_linear_ref", "btt_t_ref", "btt_backward_ref", "ttm_embed_ref",
+from .btt_ffn import ACTS as _ACTS  # one activation table: oracle == kernel
+
+__all__ = ["btt_linear_ref", "btt_t_ref", "btt_backward_ref",
+           "btt_ffn_ref", "btt_ffn_backward_ref", "ttm_embed_ref",
            "flash_attention_bwd_ref"]
 
 
@@ -52,6 +55,69 @@ def btt_backward_ref(x: jnp.ndarray, gy: jnp.ndarray, b: jnp.ndarray,
     gb = jnp.dot(gt.T, x.astype(jnp.float32),
                  preferred_element_type=jnp.float32)
     return gx, ga, gb
+
+
+def btt_ffn_ref(x, b1, a1, b2, a2, bg=None, ag=None, *,
+                act: str = "gelu") -> jnp.ndarray:
+    """Fused-FFN forward oracle: the two-call (three when gated) reference
+    ``y = down(act(up(x)))`` / ``y = down(act(gate(x)) * up(x))`` issuing
+    EXACTLY the megakernel's GEMM + cast sequence, so on unpadded
+    single-tile shapes the kernel must match this bit-for-bit."""
+    u = btt_linear_ref(x, b1, a1)
+    if bg is not None:
+        g = btt_linear_ref(x, bg, ag)
+        h = _ACTS[act](g) * u
+    else:
+        h = _ACTS[act](u)
+    return btt_linear_ref(h, b2, a2)
+
+
+def btt_ffn_backward_ref(x, gy, b1, a1, b2, a2, bg=None, ag=None, *,
+                         act: str = "gelu") -> tuple:
+    """Fused-FFN backward oracle from ``x``/``gy`` only (hidden recomputed,
+    like the kernel): ``(gx, ga1, gb1, ga2, gb2[, gag, gbg])`` with the
+    half-factor gradients f32, issuing the megakernel's exact contraction
+    order — the single-tile bit-equality ground truth."""
+    dt = x.dtype
+    u = btt_linear_ref(x, b1, a1)
+    t1 = btt_t_ref(x, b1)
+    if bg is not None:
+        g = btt_linear_ref(x, bg, ag)
+        tg = btt_t_ref(x, bg)
+        h = _ACTS[act](g) * u
+    else:
+        h = _ACTS[act](u)
+    t2 = btt_t_ref(h, b2)
+    gt2 = jnp.dot(gy, a2, preferred_element_type=jnp.float32)
+    gh = jnp.dot(gt2.astype(b2.dtype), b2,
+                 preferred_element_type=jnp.float32).astype(dt)
+    ga2 = jnp.dot(gy.T.astype(jnp.float32), t2,
+                  preferred_element_type=jnp.float32)
+    gb2 = jnp.dot(gt2.T, h.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bg is not None:
+        _, act_vjp = jax.vjp(lambda gg, uu: _ACTS[act](gg) * uu, g, u)
+        gg_, gu = act_vjp(gh)
+    else:
+        _, act_vjp = jax.vjp(_ACTS[act], u)
+        (gu,) = act_vjp(gh)
+    gt1 = jnp.dot(gu, a1, preferred_element_type=jnp.float32)
+    gx = jnp.dot(gt1.astype(b1.dtype), b1,
+                 preferred_element_type=jnp.float32).astype(dt)
+    ga1 = jnp.dot(gu.T.astype(jnp.float32), t1,
+                  preferred_element_type=jnp.float32)
+    gb1 = jnp.dot(gt1.T, x.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bg is not None:
+        gtg = jnp.dot(gg_, ag, preferred_element_type=jnp.float32)
+        gx = gx + jnp.dot(gtg.astype(bg.dtype), bg,
+                          preferred_element_type=jnp.float32).astype(dt)
+        gag = jnp.dot(gg_.T.astype(jnp.float32), tg,
+                      preferred_element_type=jnp.float32)
+        gbg = jnp.dot(gtg.T, x.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+        return gx, ga1, gb1, ga2, gb2, gag, gbg
+    return gx, ga1, gb1, ga2, gb2
 
 
 def flash_attention_bwd_ref(q, k, v, o, m, l, do, *, causal: bool = True,

@@ -32,7 +32,8 @@ __all__ = [
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
                     clip_norm: float = 1.0, remat: bool = True,
                     batch_constraint=None, fused_bwd: bool | None = None,
-                    fused_attn: bool | None = None):
+                    fused_attn: bool | None = None,
+                    fused_ffn: bool | None = None):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     ``microbatches > 1`` accumulates gradients over leading batch splits in a
@@ -61,11 +62,20 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
     runs training attention as the fused flash forward + single-kernel
     flash backward (only ``(O, m, l)`` saved per layer — no S×S
     probabilities), False the pure-JAX blockwise path under autodiff.
+
+    ``fused_ffn`` (optional) likewise overrides ``cfg.fused_ffn``: with
+    ``flow="kernel"``, True runs every eligible TT FFN block (incl.
+    per-expert MoE FFNs) as the fused megakernel — both TT linears +
+    activation in one Pallas kernel per direction, hidden state
+    VMEM-resident, backward recomputing it from the layer input; False
+    the two-call (three when gated) path.
     """
     if fused_bwd is not None:
         cfg = cfg.with_tt(fused_bwd=fused_bwd)
     if fused_attn is not None:
         cfg = cfg.with_fused_attn(fused_attn)
+    if fused_ffn is not None:
+        cfg = cfg.with_fused_ffn(fused_ffn)
 
     def grads_of(params, batch):
         return jax.value_and_grad(loss_fn)(params, cfg, batch, remat=remat)

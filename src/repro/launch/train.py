@@ -50,6 +50,8 @@ def build(args):
         cfg = cfg.with_tt(flow="kernel")
     if args.fused_attn is not None:
         cfg = cfg.with_fused_attn(args.fused_attn)
+    if args.fused_ffn is not None:
+        cfg = cfg.with_fused_ffn(args.fused_ffn)
     if args.fp32:
         import dataclasses
         cfg = dataclasses.replace(cfg, dtype="float32")
@@ -87,6 +89,14 @@ def main(argv=None) -> dict:
                          "(O, m, l) saved per layer; --no-fused-attn "
                          "forces the pure-JAX blockwise path; unset keeps "
                          "the config's fused_attn)")
+    ap.add_argument("--fused-ffn", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="with --kernel-flow: run eligible TT FFN blocks "
+                         "as the fused megakernel (both TT linears + "
+                         "activation in one Pallas kernel per direction; "
+                         "hidden state never leaves VMEM; --no-fused-ffn "
+                         "forces the two-call path; unset keeps the "
+                         "config's fused_ffn)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)

@@ -24,7 +24,7 @@ from repro.core.ttm_embedding import (
 __all__ = [
     "DenseLinearParams", "make_linear", "linear_apply",
     "rms_norm", "layer_norm", "rope", "rope_slice",
-    "make_mlp", "mlp_apply",
+    "make_mlp", "mlp_apply", "tt_ffn_apply", "ffn_fused_eligible",
     "make_embedding", "embedding_apply",
 ]
 
@@ -134,8 +134,83 @@ def make_mlp(key: jax.Array, cfg: ModelConfig, d_ff: int | None = None,
     return p
 
 
+def _ffn_act(cfg: ModelConfig) -> str:
+    # Reject unknown activations rather than guessing: the unfused
+    # branches below have their own (mutually inverted) fallbacks, so a
+    # silent default here would break fused on/off parity for any future
+    # act value.
+    if cfg.act not in ("gelu", "silu"):
+        raise ValueError(f"fused_ffn supports act in ('gelu', 'silu'); "
+                         f"got {cfg.act!r}")
+    return cfg.act
+
+
+def ffn_fused_eligible(up, down, gate, K: int) -> bool:
+    """True iff this (up, down[, gate]) triple can run as the fused FFN
+    megakernel: every projection TT (no dense, no bias), no model-parallel
+    mesh axis in scope (the megakernel computes the whole d_ff per device
+    — the two-call path's hidden-dim sharding constraint is load-bearing
+    under TP, so it wins there), and the kernel's working set inside the
+    VMEM budget for this row count — the SAME ``ffn_vmem_fits`` predicate
+    ``kernels.ops.btt_ffn_op`` dispatches on and ``core.memory_ledger``
+    gates its FFN rows on."""
+    mods = (up, down) if gate is None else (up, down, gate)
+    if not all(isinstance(m, TTLinearParams) and m.bias is None
+               for m in mods):
+        return False
+    from repro.core.meshctx import current_mesh
+
+    mesh = current_mesh()
+    if mesh is not None and mesh.shape.get("model", 1) > 1:
+        return False
+    from repro.kernels.btt_ffn import ffn_vmem_fits  # lazy: pallas import
+
+    itemsize = jnp.dtype(up.cores[0].dtype).itemsize
+    return ffn_vmem_fits(
+        down.spec.out_dim, up.spec.in_dim, up.spec.out_dim,
+        up.spec.mid_rank, down.spec.mid_rank,
+        gate.spec.mid_rank if gate is not None else 0, itemsize, K=K)
+
+
+def tt_ffn_apply(up: TTLinearParams, down: TTLinearParams,
+                 gate: TTLinearParams | None, x: jax.Array, *, act: str,
+                 fused_bwd: bool = True) -> jax.Array:
+    """Whole TT FFN block through the fused megakernel
+    (``kernels.ops.btt_ffn_op``): ``x (..., N) -> (..., M)`` with the
+    hidden state VMEM-resident and only ``x`` saved for the backward.
+    Callers gate on :func:`ffn_fused_eligible`; shapes past the VMEM
+    budget fall back to the two-call path inside the op."""
+    from repro.kernels.ops import btt_ffn_op  # lazy: pallas import
+
+    lead = x.shape[:-1]
+    xk = x.reshape(-1, x.shape[-1])
+    if up.in_dim != up.spec.in_dim:
+        xk = jnp.pad(xk, ((0, 0), (0, up.spec.in_dim - up.in_dim)))
+    y = btt_ffn_op(up.cores, down.cores,
+                   gate.cores if gate is not None else None, xk,
+                   up.spec, down.spec,
+                   gate.spec if gate is not None else None, act=act,
+                   f_logical=min(up.out_dim, down.in_dim),
+                   fused_bwd=fused_bwd)
+    return y[:, : down.out_dim].reshape(lead + (down.out_dim,))
+
+
 def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
+    gate = p.get("gate") if cfg.mlp_gated else None
+    K = 1
+    for d in x.shape[:-1]:
+        K *= d
+    # fused_ffn refines the kernel flow only (like tt.fused_bwd): other
+    # flows keep their selected contraction engine untouched.
+    if cfg.fused_ffn and flow == "kernel" \
+            and ffn_fused_eligible(p["up"], p["down"], gate, K):
+        # Fused megakernel: the (K, d_ff) hidden state never leaves VMEM,
+        # so there is nothing hidden-sized to shard (eligibility already
+        # excludes model-parallel meshes, where the constraint below is
+        # load-bearing for compute placement).
+        return tt_ffn_apply(p["up"], p["down"], gate, x,
+                            act=_ffn_act(cfg), fused_bwd=fb)
     # Megatron cut point: the hidden dim shards on "model".  Dense weights
     # give GSPMD this lineage for free; TT factors are REPLICATED, so an
     # explicit constraint is required or the whole FFN replicates 16x
@@ -143,9 +218,9 @@ def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     up = constrain(linear_apply(p["up"], x, flow=flow, fused_bwd=fb),
                    ("pod", "data"), None, "model")
     if cfg.mlp_gated:
-        gate = constrain(linear_apply(p["gate"], x, flow=flow, fused_bwd=fb),
-                         ("pod", "data"), None, "model")
-        act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
+        gate_h = constrain(linear_apply(p["gate"], x, flow=flow, fused_bwd=fb),
+                           ("pod", "data"), None, "model")
+        act = jax.nn.silu(gate_h) if cfg.act == "silu" else jax.nn.gelu(gate_h)
         h = act * up
     else:
         h = jax.nn.gelu(up) if cfg.act == "gelu" else jax.nn.silu(up)

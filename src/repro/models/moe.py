@@ -18,7 +18,13 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.meshctx import constrain
 from repro.core.tt_linear import TTLinearParams, tt_linear_apply, tt_linear_init
-from repro.models.layers import make_linear, make_mlp, mlp_apply
+from repro.models.layers import (
+    ffn_fused_eligible,
+    make_linear,
+    make_mlp,
+    mlp_apply,
+    tt_ffn_apply,
+)
 
 __all__ = ["moe_init", "moe_apply"]
 
@@ -43,6 +49,30 @@ def _expert_linear_apply(params, x: jax.Array, flow: str,
             p, xe, flow=flow, fused_bwd=fb))(params, x)
     return jnp.einsum("ecd,efd->ecf", x, params["w"],
                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _expert_ffn_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Per-expert SwiGLU FFN, ``x (E, C, D) -> (E, C, D)``.
+
+    With ``cfg.fused_ffn`` and TT experts whose working set fits the VMEM
+    budget (the eligibility predicate is checked once on the per-expert
+    spec — it is expert-independent), each expert runs as ONE fused FFN
+    megakernel under vmap: its (C, d_expert) hidden state never leaves
+    VMEM and the backward recomputes it from the dispatched tokens.
+    Otherwise the established three-call path.
+    """
+    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
+    if cfg.fused_ffn and flow == "kernel" \
+            and isinstance(p["up"], TTLinearParams) \
+            and ffn_fused_eligible(p["up"], p["down"], p["gate"],
+                                   K=x.shape[1]):
+        return jax.vmap(lambda up, gate, down, xe: tt_ffn_apply(
+            up, down, gate, xe, act="silu", fused_bwd=fb))(
+                p["up"], p["gate"], p["down"], x)
+    up = _expert_linear_apply(p["up"], x, flow, fb)
+    gate = _expert_linear_apply(p["gate"], x, flow, fb)
+    h = jax.nn.silu(gate) * up
+    return _expert_linear_apply(p["down"], h, flow, fb)
 
 
 def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
@@ -132,10 +162,7 @@ def _moe_grouped(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     else:
         xg = xg.reshape(E, G * cap, D)
 
-    up = _expert_linear_apply(p["up"], xg, flow, fb)
-    gate = _expert_linear_apply(p["gate"], xg, flow, fb)
-    h = jax.nn.silu(gate) * up
-    yg = _expert_linear_apply(p["down"], h, flow, fb)                # (E, G*cap, D)
+    yg = _expert_ffn_apply(p, xg, cfg)                           # (E, G*cap, D)
 
     yg = yg.reshape(E, G, cap, D).transpose(1, 0, 2, 3)          # all-to-all back
     if pin:

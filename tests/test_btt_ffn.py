@@ -1,0 +1,404 @@
+"""Fused tensorized-FFN megakernel (kernels.btt_ffn) — gradient-oracle
+harness, mirroring tests/test_btt_backward.py:
+
+1. ``btt_ffn_ref`` / ``btt_ffn_backward_ref`` — the two-call (three when
+   gated) reference issuing the megakernel's exact GEMM + cast sequence.
+   The kernel must match it bit-for-bit on unpadded single-tile shapes
+   (both refs jitted — same compilation regime as the jitted kernel
+   wrapper; XLA's gelu lowering differs bitwise between eager and jit).
+2. The dense-reconstruction autodiff oracle — ``jax.vjp`` through
+   ``down(act(up(x)))`` with dense ``W = A @ B`` per projection.
+   Property-tested over sampled ``(d, rank, K, N, F)`` x gated/ungated x
+   silu/gelu via hypothesis.
+3. Op/model level — ``btt_ffn_op`` gradients vs the two-call composition,
+   VMEM-budget fallback parity, ``mlp_apply`` + MoE expert parity with
+   ``fused_ffn`` on/off, and the fused<unfused HBM-bytes acceptance
+   criterion over every shipped ATIS config.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.tt import tt_half_factors, tt_init, tt_reconstruct
+from repro.core.tt_linear import make_tt_spec
+from repro.kernels import (
+    btt_ffn_backward_ref,
+    btt_ffn_bwd_pallas,
+    btt_ffn_op,
+    btt_ffn_pallas,
+    btt_ffn_ref,
+    btt_linear_op,
+    ffn_vmem_fits,
+    fused_ffn_hbm_bytes,
+    unfused_ffn_hbm_bytes,
+)
+
+# (K, N, F, M, R1, R2, Rg) — Rg=0 means ungated.  The paper's FFN
+# (768x768, rank 12), degenerate batch, ragged everything, rank == lanes.
+SHAPES = [
+    (32, 768, 768, 768, 12, 12, 0),      # the paper's FFN block
+    (1, 256, 512, 256, 4, 4, 4),         # degenerate batch, gated
+    (300, 300, 515, 290, 12, 24, 8),     # ragged everything, gated
+    (96, 512, 1024, 512, 128, 128, 0),   # rank == lane width
+]
+
+# Every dim a hardware-tile multiple AND K == one row block: the kernel
+# issues the reference's exact GEMM calls — results must be bit-identical.
+SINGLE_TILE = [
+    (32, 768, 768, 768, 128, 128, 0),
+    (32, 512, 1024, 512, 128, 128, 128),
+    (32, 128, 256, 128, 128, 128, 0),
+]
+
+
+def _operands(K, N, F, M, R1, R2, Rg, dtype=jnp.float32, seed=None):
+    ks = jax.random.split(
+        jax.random.PRNGKey(seed if seed is not None else K + N + F + M), 8)
+    x = jax.random.normal(ks[0], (K, N), dtype)
+    gy = jax.random.normal(ks[1], (K, M), dtype)
+    b1 = (jax.random.normal(ks[2], (R1, N), dtype) * 0.05).astype(dtype)
+    a1 = (jax.random.normal(ks[3], (F, R1), dtype) * 0.05).astype(dtype)
+    b2 = (jax.random.normal(ks[4], (R2, F), dtype) * 0.05).astype(dtype)
+    a2 = (jax.random.normal(ks[5], (M, R2), dtype) * 0.05).astype(dtype)
+    bg = (jax.random.normal(ks[6], (Rg, N), dtype) * 0.05).astype(dtype) \
+        if Rg else None
+    ag = (jax.random.normal(ks[7], (F, Rg), dtype) * 0.05).astype(dtype) \
+        if Rg else None
+    return x, gy, b1, a1, b2, a2, bg, ag
+
+
+def _assert_close(got, want, tol, names):
+    """Scale-relative comparison (see test_btt_backward)."""
+    for name, u, v in zip(names, got, want):
+        u = np.asarray(u, np.float32)
+        v = np.asarray(v, np.float32)
+        scale = max(float(np.max(np.abs(v))), 1e-6)
+        np.testing.assert_allclose(u / scale, v / scale, rtol=0, atol=tol,
+                                   err_msg=name)
+
+
+_GNAMES = ("gx", "ga1", "gb1", "ga2", "gb2", "gag", "gbg")
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs the pure-jnp two-call reference.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["gelu", "silu"])
+def test_ffn_kernel_vs_ref(shape, dtype, act):
+    K, N, F, M, R1, R2, Rg = shape
+    x, gy, b1, a1, b2, a2, bg, ag = _operands(K, N, F, M, R1, R2, Rg, dtype)
+    y = btt_ffn_pallas(x, b1, a1, b2, a2, bg, ag, act=act, interpret=True)
+    want = jax.jit(lambda *o: btt_ffn_ref(*o, act=act))(
+        x, b1, a1, b2, a2, bg, ag)
+    assert y.shape == (K, M) and y.dtype == dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    _assert_close([y], [want], tol, ["y"])
+
+    got = btt_ffn_bwd_pallas(x, gy, b1, a1, b2, a2, bg, ag, act=act,
+                             interpret=True)
+    wantg = jax.jit(lambda *o: btt_ffn_backward_ref(*o, act=act))(
+        x, gy, b1, a1, b2, a2, bg, ag)
+    assert got[0].shape == (K, N) and got[0].dtype == dtype
+    assert all(g.dtype == jnp.float32 for g in got[1:])
+    _assert_close(got, wantg, tol, _GNAMES)
+
+
+@pytest.mark.parametrize("shape", SINGLE_TILE)
+@pytest.mark.parametrize("act", ["gelu", "silu"])
+def test_ffn_kernel_bitmatches_ref_single_tile(shape, act):
+    """One grid step => the megakernel issues the reference's exact GEMM
+    and activation calls; forward AND all gradients must be bit-identical
+    (zero padding is exact)."""
+    K, N, F, M, R1, R2, Rg = shape
+    x, gy, b1, a1, b2, a2, bg, ag = _operands(K, N, F, M, R1, R2, Rg)
+    y = btt_ffn_pallas(x, b1, a1, b2, a2, bg, ag, act=act, interpret=True)
+    want = jax.jit(lambda *o: btt_ffn_ref(*o, act=act))(
+        x, b1, a1, b2, a2, bg, ag)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want),
+                                  err_msg="y")
+    got = btt_ffn_bwd_pallas(x, gy, b1, a1, b2, a2, bg, ag, act=act,
+                             interpret=True)
+    wantg = jax.jit(lambda *o: btt_ffn_backward_ref(*o, act=act))(
+        x, gy, b1, a1, b2, a2, bg, ag)
+    for name, u, v in zip(_GNAMES, got, wantg):
+        np.testing.assert_array_equal(np.asarray(u), np.asarray(v),
+                                      err_msg=name)
+
+
+def test_ffn_kernel_tile_sweep():
+    """Result invariant to the K-row tiling (incl. the accumulator
+    revisiting pattern across the sequential grid)."""
+    K, N, F, M, R1, R2, Rg = 96, 640, 384, 640, 24, 24, 12
+    x, gy, b1, a1, b2, a2, bg, ag = _operands(K, N, F, M, R1, R2, Rg, seed=7)
+    want = btt_ffn_bwd_pallas(x, gy, b1, a1, b2, a2, bg, ag, act="silu",
+                              interpret=True)
+    for tk in (32, 64):
+        got = btt_ffn_bwd_pallas(x, gy, b1, a1, b2, a2, bg, ag, act="silu",
+                                 tk=tk, interpret=True)
+        _assert_close(got, want, 1e-5, _GNAMES)
+
+
+def test_ffn_kernel_masks_logical_hidden_columns():
+    """With f_logical < F the kernel must reproduce the two-call path's
+    slice-then-repad semantics: hidden columns past the logical d_ff (REAL
+    half-factor rows, not tile padding) contribute nothing, and their
+    up-projection rows receive zero gradient."""
+    K, N, F, M, R1, R2 = 32, 256, 512, 256, 12, 12
+    f_logical = 500
+    x, gy, b1, a1, b2, a2, _, _ = _operands(K, N, F, M, R1, R2, 0, seed=9)
+    y = btt_ffn_pallas(x, b1, a1, b2, a2, act="gelu",
+                       f_logical=f_logical, interpret=True)
+    u = jnp.dot(jnp.dot(x, b1.T), a1.T)[:, :f_logical]
+    h = jnp.pad(jax.nn.gelu(u), ((0, 0), (0, F - f_logical)))
+    want = jnp.dot(jnp.dot(h, b2.T), a2.T)
+    _assert_close([y], [want], 1e-5, ["y"])
+    grads = btt_ffn_bwd_pallas(x, gy, b1, a1, b2, a2, act="gelu",
+                               f_logical=f_logical, interpret=True)
+    ga1, gb2 = grads[1], grads[4]
+    np.testing.assert_array_equal(np.asarray(ga1[f_logical:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(gb2[:, f_logical:]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs jax.grad of the dense-composition oracle (hypothesis).
+# ---------------------------------------------------------------------------
+
+
+def _dense_oracle(x, gy, b1, a1, b2, a2, bg, ag, act):
+    actf = jax.nn.gelu if act == "gelu" else jax.nn.silu
+
+    if bg is None:
+        def f(xx, aa1, bb1, aa2, bb2):
+            return actf(xx @ (aa1 @ bb1).T) @ (aa2 @ bb2).T
+
+        _, vjp = jax.vjp(f, x, a1, b1, a2, b2)
+        gx, ga1, gb1, ga2, gb2 = vjp(gy)
+        return gx, ga1, gb1, ga2, gb2
+
+    def f(xx, aa1, bb1, aa2, bb2, aag, bbg):
+        return ((actf(xx @ (aag @ bbg).T) * (xx @ (aa1 @ bb1).T))
+                @ (aa2 @ bb2).T)
+
+    _, vjp = jax.vjp(f, x, a1, b1, a2, b2, ag, bg)
+    gx, ga1, gb1, ga2, gb2, gag, gbg = vjp(gy)
+    return gx, ga1, gb1, ga2, gb2, gag, gbg
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.integers(2, 3),
+    rank=st.integers(2, 12),
+    k=st.integers(1, 48),
+    n=st.integers(8, 200),
+    f=st.integers(8, 260),
+    gated=st.booleans(),
+    act=st.sampled_from(["gelu", "silu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_kernel_matches_dense_autodiff_oracle(d, rank, k, n, f, gated,
+                                                  act, seed):
+    """Property: over sampled (d, rank, K, N, F) x gated/ungated x
+    silu/gelu, the megakernel's gradients track jax.grad of the dense
+    composition to <= 2e-5 relative error in f32."""
+    up_spec = make_tt_spec(f, n, d, rank)
+    down_spec = make_tt_spec(n, f, d, rank)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    a1, b1 = tt_half_factors(tt_init(ks[0], up_spec), up_spec)
+    a2, b2 = tt_half_factors(tt_init(ks[1], down_spec), down_spec)
+    if gated:
+        ag, bg = tt_half_factors(tt_init(ks[2], up_spec), up_spec)
+    else:
+        ag = bg = None
+    N, F, M = up_spec.in_dim, up_spec.out_dim, down_spec.out_dim
+    kx, kg = jax.random.split(ks[3])
+    x = jax.random.normal(kx, (k, N))
+    gy = jax.random.normal(kg, (k, M))
+    got = btt_ffn_bwd_pallas(x, gy, b1, a1, b2, a2, bg, ag, act=act,
+                             interpret=True)
+    want = _dense_oracle(x, gy, b1, a1, b2, a2, bg, ag, act)
+    _assert_close(got, want, 2e-5, _GNAMES)
+
+
+# ---------------------------------------------------------------------------
+# Op level: fused == two-call composition == dense oracle through cores;
+# VMEM fallback.
+# ---------------------------------------------------------------------------
+
+UP_SPEC = make_tt_spec(768, 768, 3, 12)
+DOWN_SPEC = make_tt_spec(768, 768, 3, 12)
+
+
+def _op_grads(up, down, x, fused_ffn):
+    return jax.grad(
+        lambda cu, cd, xx: (btt_ffn_op(
+            list(cu), list(cd), None, xx, UP_SPEC, DOWN_SPEC, act="gelu",
+            interpret=True, fused_ffn=fused_ffn) ** 2).sum(),
+        argnums=(0, 1, 2))(tuple(up), tuple(down), x)
+
+
+def test_op_fused_matches_twocall_and_dense():
+    up = tt_init(jax.random.PRNGKey(0), UP_SPEC)
+    down = tt_init(jax.random.PRNGKey(1), DOWN_SPEC)
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, UP_SPEC.in_dim))
+    g_fused = _op_grads(up, down, x, True)
+    g_two = _op_grads(up, down, x, False)
+
+    def dense_loss(cu, cd, xx):
+        h = jax.nn.gelu(xx @ tt_reconstruct(list(cu), UP_SPEC).T)
+        return ((h @ tt_reconstruct(list(cd), DOWN_SPEC).T) ** 2).sum()
+
+    g_dense = jax.grad(dense_loss, argnums=(0, 1, 2))(
+        tuple(up), tuple(down), x)
+    fu, tu, du = (jax.tree.leaves(g) for g in (g_fused, g_two, g_dense))
+    names = [f"leaf{i}" for i in range(len(fu))]
+    _assert_close(fu, tu, 1e-5, names)
+    _assert_close(fu, du, 2e-4, names)
+
+
+def test_op_fallback_when_working_set_exceeds_budget():
+    """qwen3-class FFN dims bust the megakernel VMEM budget: the op must
+    silently take the two-call path (fused_ffn=True notwithstanding) and
+    produce BITWISE the same result/gradients as fused_ffn=False — they
+    are the same launches."""
+    up_spec = make_tt_spec(12288, 4096, 3, 64)
+    down_spec = make_tt_spec(4096, 12288, 3, 64)
+    assert not ffn_vmem_fits(down_spec.out_dim, up_spec.in_dim,
+                             up_spec.out_dim, up_spec.mid_rank,
+                             down_spec.mid_rank, 0, 4, K=8)
+    up = tt_init(jax.random.PRNGKey(3), up_spec)
+    down = tt_init(jax.random.PRNGKey(4), down_spec)
+    x = jax.random.normal(jax.random.PRNGKey(5), (8, up_spec.in_dim))
+
+    def run(fused_ffn):
+        y, vjp = jax.vjp(
+            lambda xx: btt_ffn_op(up, down, None, xx, up_spec, down_spec,
+                                  act="gelu", interpret=True,
+                                  fused_ffn=fused_ffn), x)
+        (gx,) = vjp(jnp.ones_like(y))
+        return y, gx
+
+    y_t, gx_t = run(True)
+    y_f, gx_f = run(False)
+    np.testing.assert_array_equal(np.asarray(y_t), np.asarray(y_f))
+    np.testing.assert_array_equal(np.asarray(gx_t), np.asarray(gx_f))
+
+
+def test_op_twocall_path_bitmatches_manual_composition():
+    """The op's fallback IS the two-call path: composing btt_linear_op +
+    act by hand must give bitwise the same forward."""
+    up = tt_init(jax.random.PRNGKey(0), UP_SPEC)
+    down = tt_init(jax.random.PRNGKey(1), DOWN_SPEC)
+    x = jax.random.normal(jax.random.PRNGKey(2), (32, UP_SPEC.in_dim))
+    y_op = btt_ffn_op(up, down, None, x, UP_SPEC, DOWN_SPEC, act="gelu",
+                      interpret=True, fused_ffn=False)
+    h = jax.nn.gelu(btt_linear_op(up, x, UP_SPEC, interpret=True))
+    y_manual = btt_linear_op(down, h, DOWN_SPEC, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_op), np.asarray(y_manual))
+
+
+# ---------------------------------------------------------------------------
+# Model level: mlp_apply / MoE experts with fused_ffn on/off.
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_apply_fused_ffn_grad_parity():
+    """ATIS FFN through mlp_apply: fused_ffn on/off gradient parity (two
+    independent backward implementations of the same function)."""
+    from repro.configs.atis_transformer import config_n
+    from repro.models.layers import make_mlp, mlp_apply
+
+    cfg = config_n(2).with_tt(flow="kernel")
+    p = make_mlp(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+
+    def grads(c):
+        return jax.grad(lambda pp, xx: (mlp_apply(pp, xx, c) ** 2).sum(),
+                        argnums=(0, 1))(p, x)
+
+    g_on = grads(cfg.with_fused_ffn(True))
+    g_off = grads(cfg)
+    leaves_on, leaves_off = jax.tree.leaves(g_on), jax.tree.leaves(g_off)
+    _assert_close(leaves_on, leaves_off, 1e-5,
+                  [f"leaf{i}" for i in range(len(leaves_on))])
+
+
+def test_moe_expert_fused_ffn_parity():
+    """Per-expert FFN through the megakernel under vmap: fused_ffn on/off
+    loss and gradient parity on a TT MoE config."""
+    from repro.configs import get_config
+    from repro.models import init_params, loss_fn
+
+    cfg = (get_config("qwen2-moe-a2.7b").scaled_down()
+           .with_tt(mode="tt", rank=8, embed_rank=8, flow="kernel"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+
+    def lg(c):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, c, batch, remat=False))(params)
+
+    l_on, g_on = lg(cfg.with_fused_ffn(True))
+    l_off, g_off = lg(cfg)
+    np.testing.assert_allclose(float(l_on), float(l_off), rtol=1e-6)
+    for u, v in zip(jax.tree.leaves(g_on), jax.tree.leaves(g_off)):
+        scale = max(float(jnp.max(jnp.abs(v))), 1e-5)
+        np.testing.assert_allclose(np.asarray(u) / scale,
+                                   np.asarray(v) / scale,
+                                   rtol=0, atol=1e-4)
+
+
+def test_mlp_apply_fused_ffn_dense_params_fall_back():
+    """Dense (tt.mode='off') FFNs are ineligible: fused_ffn must be a
+    no-op, bit for bit."""
+    from repro.configs.atis_transformer import config_n
+    from repro.models.layers import make_mlp, mlp_apply
+
+    cfg = config_n(2, tt_mode="off")
+    p = make_mlp(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y_on = mlp_apply(p, x, cfg.with_fused_ffn(True))
+    y_off = mlp_apply(p, x, cfg)
+    np.testing.assert_array_equal(np.asarray(y_on), np.asarray(y_off))
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic: fused must move strictly fewer bytes (acceptance criterion).
+# ---------------------------------------------------------------------------
+
+
+def test_fused_moves_fewer_hbm_bytes_for_swept_shapes():
+    for K, N, F, M, R1, R2, Rg in SHAPES + SINGLE_TILE:
+        fused = fused_ffn_hbm_bytes(K, M, N, F, R1, R2, Rg, 4)
+        unfused = unfused_ffn_hbm_bytes(K, M, N, F, R1, R2, Rg, 4)
+        assert fused < unfused, (K, N, F, M, R1, R2, Rg, fused, unfused)
+
+
+def test_fused_moves_fewer_hbm_bytes_on_every_shipped_atis_config():
+    """Acceptance: for every FFN block of every shipped ATIS config, the
+    megakernel's analytic fwd+bwd HBM traffic is strictly below the
+    two-call path's."""
+    from repro.configs.atis_transformer import config_n
+    from repro.core.memory_ledger import _collect_ffn_blocks, _ffn_block_dims
+    from repro.models import init_params
+
+    for n_enc in (2, 4, 6):
+        cfg = config_n(n_enc)
+        params = jax.eval_shape(
+            lambda c=cfg: init_params(jax.random.PRNGKey(0), c))
+        dims = [_ffn_block_dims(b) for b in _collect_ffn_blocks(params)]
+        dims = [d for d in dims if d is not None]
+        assert dims, f"{n_enc}-enc config has no TT FFN blocks"
+        for M, N, F, R1, R2, Rg, _, _ in dims:
+            fused = fused_ffn_hbm_bytes(32, M, N, F, R1, R2, Rg, 4)
+            unfused = unfused_ffn_hbm_bytes(32, M, N, F, R1, R2, Rg, 4)
+            assert fused < unfused, (n_enc, M, N, F, fused, unfused)

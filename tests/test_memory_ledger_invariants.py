@@ -176,3 +176,148 @@ def test_fused_attn_reports_no_sxs_probability_residual(n_enc):
 
     led_off = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
     assert led_off["FWD"].entry("attn_residuals").nbytes == probs
+
+
+# ---------------------------------------------------------------------------
+# FFN rows: chooser-derived, residual shrink, gated on the dispatch predicate.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_enc", [2, 4, 6])
+def test_ffn_kernel_rows_are_chooser_derived(n_enc):
+    """With fused_ffn the FWD/BWD ffn_kernel_vmem rows must equal the
+    megakernel's own tile-chooser numbers (recomputed here independently
+    of the ledger); without it, 0 — no megakernel launch on the two-call
+    path."""
+    from repro.core.memory_ledger import _collect_ffn_blocks, _ffn_block_dims
+    from repro.kernels.btt_ffn import ffn_stage_vmem_bytes
+
+    cfg = config_n(n_enc).with_tt(flow="kernel")
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    params = _abstract_params(cfg)
+    dims = [d for d in (_ffn_block_dims(b)
+                        for b in _collect_ffn_blocks(params))
+            if d is not None]
+    assert dims
+
+    led_on = training_step_ledger(cfg.with_fused_ffn(True), "sgd",
+                                  batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD"):
+        expect = max(ffn_stage_vmem_bytes(M, N, F, R1, R2, Rg, itemsize,
+                                          K=K, stage=stage)
+                     for M, N, F, R1, R2, Rg, _, _ in dims)
+        assert led_on[stage].entry("ffn_kernel_vmem").nbytes == expect
+        assert expect <= URAM_BUDGET_BYTES
+
+    led_off = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD"):
+        assert led_off[stage].entry("ffn_kernel_vmem").nbytes == 0
+
+
+@pytest.mark.parametrize("n_enc", [2, 4, 6])
+def test_fused_ffn_residuals_shrink_to_layer_input(n_enc):
+    """Acceptance: with fused_ffn the ledger drops exactly the FFN hidden
+    state — the down projection's (K, d_ff) saved input leaves the
+    residuals row and the activation pre-images (ffn_hidden) go to zero,
+    so FFN residuals are O(K*d_model), not O(K*d_ff)."""
+    cfg = config_n(n_enc).with_tt(flow="kernel")
+    its = jnp.dtype(cfg.dtype).itemsize
+    led_off = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    led_on = training_step_ledger(cfg.with_fused_ffn(True), "sgd",
+                                  batch=BATCH, seq=SEQ)
+    hidden = cfg.num_layers * K * cfg.d_ff * its  # one (K, d_ff) per block
+    for stage in ("FWD", "BWD"):
+        drop = (led_off[stage].entry("residuals").nbytes
+                - led_on[stage].entry("residuals").nbytes)
+        assert drop == hidden
+        # ungated GELU FFN: one pre-activation per block on the two-call
+        # path, none with the megakernel.
+        assert led_off[stage].entry("ffn_hidden").nbytes == hidden
+        assert led_on[stage].entry("ffn_hidden").nbytes == 0
+
+
+@pytest.mark.parametrize("n_enc", [2, 4, 6])
+def test_paper_atis_models_fit_envelope_with_fused_ffn(n_enc):
+    """The paper's envelope claim survives the megakernel: every stage of
+    the ATIS models still fits 6 MB BRAM + 22.5 MB URAM with fused_ffn on
+    (alone and together with fused_attn)."""
+    base = config_n(n_enc).with_tt(flow="kernel")
+    for cfg in (base.with_fused_ffn(True),
+                base.with_fused_ffn(True).with_fused_attn(True)):
+        led = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+        rep = budget_report(led)
+        assert rep["fits_bram"] and rep["fits_uram"] and rep["fits"]
+
+
+def test_ffn_rows_gate_on_vmem_fits_predicate():
+    """A config whose FFN busts the megakernel budget must ledger exactly
+    like fused_ffn=False even when the flag is on — the SAME predicate the
+    op dispatches on (no drift between ledger and dispatch)."""
+    from repro.core.memory_ledger import _collect_ffn_blocks, _ffn_block_dims
+    from repro.kernels.btt_ffn import ffn_vmem_fits
+
+    cfg = (get_config("qwen3-8b")
+           .with_tt(mode="tt", rank=64, embed_rank=64,
+                    flow="kernel"))  # full-size d_ff
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    params = _abstract_params(cfg)
+    dims = [d for d in (_ffn_block_dims(b)
+                        for b in _collect_ffn_blocks(params))
+            if d is not None]
+    assert dims
+    assert all(not ffn_vmem_fits(M, N, F, R1, R2, Rg, itemsize, K=K)
+               for M, N, F, R1, R2, Rg, _, _ in dims)
+    led_on = training_step_ledger(cfg.with_fused_ffn(True), "sgd",
+                                  batch=BATCH, seq=SEQ)
+    led_off = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD"):
+        for row in ("residuals", "ffn_hidden", "ffn_kernel_vmem"):
+            assert (led_on[stage].entry(row).nbytes
+                    == led_off[stage].entry(row).nbytes)
+        assert led_on[stage].entry("ffn_kernel_vmem").nbytes == 0
+
+
+def test_ffn_rows_require_kernel_flow():
+    """fused_ffn refines the kernel flow only (like tt.fused_bwd): on a
+    pure-JAX flow the model never dispatches the megakernel, and the
+    ledger must agree — no ffn_kernel_vmem, no residual shrink."""
+    cfg = config_n(2).with_fused_ffn(True)  # default flow: btt_fused
+    assert cfg.tt.flow != "kernel"
+    led = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    led_ref = training_step_ledger(config_n(2), "sgd", batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD"):
+        assert led[stage].entry("ffn_kernel_vmem").nbytes == 0
+        assert (led[stage].entry("residuals").nbytes
+                == led_ref[stage].entry("residuals").nbytes)
+        assert (led[stage].entry("ffn_hidden").nbytes
+                == led_ref[stage].entry("ffn_hidden").nbytes)
+
+
+def test_ffn_rows_use_moe_expert_dispatch_k():
+    """MoE expert blocks dispatch the megakernel per expert on the
+    capacity-dispatched (G*cap) rows, not on batch*seq — the ledger's
+    ffn_kernel_vmem rows must be the chooser's numbers at THAT K."""
+    import math
+
+    from repro.core.memory_ledger import _collect_ffn_blocks, _ffn_block_dims
+    from repro.kernels.btt_ffn import ffn_stage_vmem_bytes
+
+    cfg = (get_config("qwen2-moe-a2.7b").scaled_down()
+           .with_tt(mode="tt", rank=8, embed_rank=8, flow="kernel")
+           .with_fused_ffn(True))
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    m = cfg.moe
+    cap = int(math.ceil(SEQ * m.top_k / m.num_experts * m.capacity_factor))
+    params = _abstract_params(cfg)
+    led = training_step_ledger(cfg, "sgd", batch=BATCH, seq=SEQ)
+    for stage in ("FWD", "BWD"):
+        expect = 0
+        for blk in _collect_ffn_blocks(params):
+            dims = _ffn_block_dims(blk)
+            if dims is None:
+                continue
+            M_, N_, F_, R1, R2, Rg, _, _ = dims
+            k_blk = BATCH * cap if "router" in blk else K
+            expect = max(expect, ffn_stage_vmem_bytes(
+                M_, N_, F_, R1, R2, Rg, itemsize, K=k_blk, stage=stage))
+        assert led[stage].entry("ffn_kernel_vmem").nbytes == expect
