@@ -19,8 +19,17 @@ Emitted rows (CSV via benchmarks.run, JSON schema documented there):
                             (unfused: per-leaf tile-padded footprints;
                             fused: dense flat packing — paper Eqs. 24/25)
   pu/atis_<n>enc/<opt>/fewer_bytes   1.0 iff fused < unfused
+  pu/atis_<n>enc/adamw_sketched/bytes_ratio   dense-fused / sketched HBM
+                            bytes (the sketched kernel drops the dense
+                            moment traffic entirely)
+  pu/atis_<n>enc/adamw_sketched/fewer_bytes   1.0 iff sketched < dense
+  pu/atis_<n>enc/adamw_sketched/moment_shrink  dense moment bytes /
+                            sketch state bytes (ledger-derived; the paper
+                            envelope's BRAM win)
+  pu/adamw_sketched/fused_us  median jitted sketched update
   pu/ledger/<stage>_mb      ledger stage totals for the ATIS config
   pu/ledger/fits            1.0 iff peaks fit the 6 + 22.5 MB envelope
+  pu/ledger_sketched/*      same ledger rows with sketched AdamW moments
 """
 from __future__ import annotations
 
@@ -29,9 +38,10 @@ import jax.numpy as jnp
 
 from benchmarks.timing import median_us
 from repro.configs.atis_transformer import config_n
-from repro.core.memory_ledger import ledger_rows
+from repro.core.memory_ledger import ledger_rows, training_step_ledger
 from repro.kernels.fused_update import (
     fused_pu_hbm_bytes,
+    sketched_pu_hbm_bytes,
     unfused_pu_hbm_bytes,
 )
 from repro.models import init_params
@@ -64,6 +74,26 @@ def check_rows():
             out.append((f"pu/atis_{n_enc}enc/{opt}/fewer_bytes",
                         1.0 if fb < ub else 0.0,
                         "1 = fused < unfused HBM bytes for this tree"))
+        # Sketched AdamW vs the dense fused kernel: the dense moment
+        # traffic (16 bytes/elem) is replaced by O(depth*width) per launch,
+        # and the persistent moment state shrinks by moment_shrink.
+        fb_dense = fused_pu_hbm_bytes(leaves, "adamw")
+        sb = sketched_pu_hbm_bytes(leaves)
+        out.append((f"pu/atis_{n_enc}enc/adamw_sketched/bytes_ratio",
+                    fb_dense / sb,
+                    "dense-fused / sketched HBM bytes: no dense m/v "
+                    "streams"))
+        out.append((f"pu/atis_{n_enc}enc/adamw_sketched/fewer_bytes",
+                    1.0 if sb < fb_dense else 0.0,
+                    "1 = sketched < dense-fused HBM bytes"))
+        dense_mom = training_step_ledger(cfg, "adamw")["PU"].entry(
+            "moments").nbytes
+        sk_mom = training_step_ledger(cfg, "adamw", sketched=True)[
+            "PU"].entry("moments").nbytes
+        out.append((f"pu/atis_{n_enc}enc/adamw_sketched/moment_shrink",
+                    dense_mom / sk_mom,
+                    "dense AdamW moment bytes / sketch state bytes "
+                    "(ledger-derived; acceptance floor 4x)"))
     return out
 
 
@@ -96,8 +126,20 @@ def rows():
                     "Pallas fused kernel (interpret mode on CPU)"))
         out.append((f"pu/{name}/match_maxerr", err,
                     "max |fused - unfused| over params after one step"))
+    # Sketched AdamW: timing only (numerics vs the dense path are bounded by
+    # the optimizer-oracle suite in tests/test_sketched_update.py, not by a
+    # maxerr row — the sketch is lossy by design).
+    opt_s = adamw(1e-3, weight_decay=0.01, sketched=True)
+    state_s = opt_s.init(params)
+    if "vs" in state_s:
+        upd_s = jax.jit(lambda g, p, s: opt_s.update(g, p, s, s["step"]))
+        t_s = median_us(upd_s, grads, params, state_s, reps=REPS)
+        out.append(("pu/adamw_sketched/fused_us", t_s,
+                    "Pallas sketched-update kernel (interpret mode on CPU)"))
     out.extend(check_rows())
     # momentum=0.9 so the ledger describes the SGD configuration timed above
     # (a mu moment buffer + the 3-block momentum kernel).
     out.extend(ledger_rows(cfg, "sgd", "pu/ledger", momentum=0.9))
+    out.extend(ledger_rows(cfg, "adamw", "pu/ledger_sketched",
+                           sketched=True))
     return out

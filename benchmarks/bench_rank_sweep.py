@@ -6,17 +6,58 @@ choose rank per layer family.  For each assigned dense arch this sweep
 reports, per rank: parameter compression of the full model, BTT training
 FLOPs relative to dense, and the HBM-traffic crossover token count for the
 TTM embedding (above which the reconstruct strategy wins — see
-core/ttm_embedding.py)."""
+core/ttm_embedding.py).
+
+The ATIS envelope sweep asks the converse question against the paper's own
+budget (6 MB BRAM + 22.5 MB URAM): sweeping TT rank upward on the 6-encoder
+ATIS model, what is the largest rank whose full training step still fits —
+once with dense AdamW moments, once with the sketched (count-min /
+count-sketch) moments the fused PU kernel can hold instead?  The gap is the
+headroom the sketch buys."""
 from __future__ import annotations
 
 from repro.configs import get_config
+from repro.configs.atis_transformer import config_n
 from repro.core.cost_model import mul_btt, mul_dense
+from repro.core.memory_ledger import budget_report, training_step_ledger
 from repro.core.tt import tt_params_count
 from repro.core.tt_linear import make_tt_spec
 from repro.core.ttm_embedding import make_ttm_spec, ttm_strategy_crossover
 
 ARCHS = ("qwen3-8b", "llama3-8b", "musicgen-medium")
 RANKS = (16, 32, 64, 128)
+ATIS_RANKS = (12, 16, 24, 32, 48, 64)
+
+
+def _atis_fits(rank: int, sketched: bool) -> bool:
+    cfg = config_n(6).with_tt(rank=rank)
+    led = training_step_ledger(cfg, "adamw", sketched=sketched)
+    return budget_report(led)["fits"]
+
+
+def atis_envelope_rows():
+    out = []
+    max_dense = 0
+    max_sketched = 0
+    for rank in ATIS_RANKS:
+        fits_d = _atis_fits(rank, sketched=False)
+        fits_s = _atis_fits(rank, sketched=True)
+        if fits_d:
+            max_dense = rank
+        if fits_s:
+            max_sketched = rank
+        out.append((f"rank_sweep/atis_6enc/r{rank}/fits_dense_adamw",
+                    1.0 if fits_d else 0.0,
+                    "full training step vs 6+22.5 MB, dense m/v"))
+        out.append((f"rank_sweep/atis_6enc/r{rank}/fits_sketched_adamw",
+                    1.0 if fits_s else 0.0,
+                    "same step, moments as count-min/count-sketch"))
+    out.append(("rank_sweep/atis_6enc/max_rank_dense_adamw",
+                float(max_dense), "largest swept rank inside the envelope"))
+    out.append(("rank_sweep/atis_6enc/max_rank_sketched_adamw",
+                float(max_sketched),
+                "sketched moments buy this much rank headroom"))
+    return out
 
 
 def _arch_layer_dims(cfg):
@@ -49,4 +90,5 @@ def rows():
             out.append((f"rank_sweep/{arch}/r{rank}/ttm_crossover_tokens",
                         float(ttm_strategy_crossover(espec)),
                         "gather->reconstruct switch point"))
+    out.extend(atis_envelope_rows())
     return out

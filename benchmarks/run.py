@@ -31,7 +31,8 @@ Usage::
 
 ``--check`` is the benchmark-regression guard CI runs on every commit: it
 collects the ANALYTIC rows (``check_rows()``; no wall-clock, seconds not
-minutes) of every fused-vs-unfused stage — PU, BWD, ATTN, FFN — and fails
+minutes) of every fused-vs-unfused stage — PU (incl. the sketched-vs-dense
+AdamW rows, ``pu/*/adamw_sketched/*``), BWD, ATTN, FFN — and fails
 if (a) any ``*/fewer_bytes`` flag is not 1.0 or any ``*/bytes_ratio`` is
 not > 1.0 (a fused path moving MORE analytic HBM bytes than its unfused
 counterpart on a shipped config is a regression by definition), or (b) any

@@ -24,7 +24,7 @@ from repro.configs.atis_transformer import config_n
 from repro.data import AtisGrammar, atis_batch
 from repro.models import init_params, num_params, param_bytes
 from repro.models.classifier import atis_heads_init, atis_loss, atis_metrics
-from repro.optim import sgd, warmup_cosine
+from repro.optim import adamw, sgd, warmup_cosine
 from repro.runtime import StragglerMonitor
 
 
@@ -38,8 +38,19 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scale-down", action="store_true")
+    ap.add_argument("--optimizer", choices=("sgd", "adamw"), default="sgd",
+                    help="sgd is the paper's setting; adamw enables "
+                         "--sketched-opt")
     ap.add_argument("--fused", action="store_true",
-                    help="Pallas fused PU-stage kernel for the SGD update")
+                    help="Pallas fused PU-stage kernel for the update")
+    ap.add_argument("--sketched-opt", action="store_true",
+                    help="AdamW with count-min/count-sketch moments "
+                         "refreshed inside the fused PU kernel (implies "
+                         "--optimizer adamw; dense m/v never exist in HBM; "
+                         "falls back to dense fused AdamW when "
+                         "sketch_pu_fits fails)")
+    ap.add_argument("--sketch-width", type=int, default=None)
+    ap.add_argument("--sketch-depth", type=int, default=None)
     ap.add_argument("--kernel-flow", action="store_true",
                     help="run TT linears through the fused Pallas kernels "
                          "(flow='kernel'; interpret mode off-TPU)")
@@ -87,9 +98,19 @@ def main(argv=None):
     print(f"[atis] {args.encoders}-ENC {'matrix' if args.matrix else 'tensor'}: "
           f"{num_params(params):,} params ({param_bytes(params) / 1e6:.2f} MB)")
 
-    opt = sgd(warmup_cosine(lr, max(args.steps // 20, 1), args.steps),
-              fused=args.fused)
+    lr_fn = warmup_cosine(lr, max(args.steps // 20, 1), args.steps)
+    if args.sketched_opt or args.optimizer == "adamw":
+        opt = adamw(lr_fn, fused=args.fused, sketched=args.sketched_opt,
+                    sketch_width=args.sketch_width,
+                    sketch_depth=args.sketch_depth)
+    else:
+        opt = sgd(lr_fn, fused=args.fused)
     state = opt.init(params)
+    if "vs" in state:
+        d, w = state["vs"].shape
+        print(f"[atis] sketched AdamW: moments as 2x ({d}, {w}) sketches "
+              f"({2 * d * w * 4 / 1e3:.1f} kB vs "
+              f"{2 * num_params(params) * 4 / 1e6:.2f} MB dense)")
 
     # Donation lets XLA reuse the param/state memory across the step
     # (no-op on CPU, which cannot donate).

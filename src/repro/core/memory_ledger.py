@@ -244,11 +244,19 @@ def _ffn_block_dims(blk: dict):
 
 
 def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
-                         batch: int = 1, seq: int = 32) -> dict[str, StageLedger]:
+                         batch: int = 1, seq: int = 32,
+                         sketched: bool = False,
+                         sketch_width: int | None = None,
+                         sketch_depth: int | None = None) -> dict[str, StageLedger]:
     """Per-stage (FWD/BWD/PU) peak-residency ledgers for one training step.
 
     ``optimizer`` sizes the moment buffers: "sgd" (none, or one with
-    ``momentum``) or "adamw" (two).  ``batch=1, seq=32`` is the paper's
+    ``momentum``) or "adamw" (two).  ``sketched=True`` (adamw only) charges
+    the count-min/count-sketch moment state instead of the dense buffers —
+    by CONSTRUCTION of the same ``optim.adamw(sketched=True)`` init the
+    training step runs (the state layout from ``jax.eval_shape`` IS the
+    dispatch decision, including the ``sketch_pu_fits`` fallback), so the
+    ledger cannot drift from the op.  ``batch=1, seq=32`` is the paper's
     regime (Sec. VI).  Everything is derived from ``jax.eval_shape`` — no
     device memory is allocated.
     """
@@ -257,7 +265,11 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
 
     K = batch * seq
     params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
-    opt = _adamw(1e-3) if optimizer == "adamw" else _sgd(1e-3, momentum)
+    if optimizer == "adamw":
+        opt = _adamw(1e-3, sketched=sketched, sketch_width=sketch_width,
+                     sketch_depth=sketch_depth)
+    else:
+        opt = _sgd(1e-3, momentum)
     opt_state = jax.eval_shape(opt.init, params)
 
     act_itemsize = jnp.dtype(cfg.dtype).itemsize
@@ -379,8 +391,26 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     attn_bwd_vmem = _attn_kernel_vmem_bytes(cfg, seq, act_itemsize, "BWD")
     # Live VMEM blocks per fused_update grid step = the input buffer list
     # (outputs are aliased onto inputs): (p, g) / (p, mu, g) / (p, m, v, g).
-    n_pu_bufs = {"sgd": 3 if momentum else 2, "adamw": 4}[optimizer]
-    pu_kernel_vmem = _pu_kernel_vmem_bytes(n_params, n_pu_bufs)
+    # On the sketched path the working set comes from the sketched kernel's
+    # own residency helper instead (param + grad blocks + all six resident
+    # (depth, width) sketch blocks) — gated on the state layout eval_shape
+    # produced, i.e. the exact sketch_pu_fits verdict the op dispatches on.
+    sketched_eff = isinstance(opt_state, dict) and "vs" in opt_state
+    if sketched_eff:
+        from repro.kernels.fused_update import sketch_pu_vmem_bytes
+
+        s_depth, s_width = opt_state["vs"].shape
+        pu_kernel_vmem = sketch_pu_vmem_bytes(
+            n_params, s_width, s_depth, itemsize=act_itemsize)
+        pu_vmem_note = (f"sketched_adamw_update: p+g blocks + 6 resident "
+                        f"({s_depth}, {s_width}) sketch blocks")
+        moments_note = (f"count-min/count-sketch moments "
+                        f"({s_depth}x{s_width} x2, sketch_pu_fits-gated)")
+    else:
+        n_pu_bufs = {"sgd": 3 if momentum else 2, "adamw": 4}[optimizer]
+        pu_kernel_vmem = _pu_kernel_vmem_bytes(n_params, n_pu_bufs)
+        pu_vmem_note = f"fused_update: {n_pu_bufs} live blocks per grid step"
+        moments_note = f"{optimizer} optimizer state (eval_shape-exact)"
 
     ffn_hidden_note = (
         "megakernel recomputes the hidden tile in VMEM — no pre-activation "
@@ -437,11 +467,9 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     ))
     pu = StageLedger("PU", (
         LedgerEntry("params", params_bytes, "bram", "updated in place"),
-        LedgerEntry("moments", moments_bytes, "bram",
-                    f"{optimizer} optimizer state (eval_shape-exact)"),
+        LedgerEntry("moments", moments_bytes, "bram", moments_note),
         LedgerEntry("grads", grads_bytes, "uram", "consumed by the update"),
-        LedgerEntry("kernel_vmem", pu_kernel_vmem, "uram",
-                    f"fused_update: {n_pu_bufs} live blocks per grid step"),
+        LedgerEntry("kernel_vmem", pu_kernel_vmem, "uram", pu_vmem_note),
     ))
     return {"FWD": fwd, "BWD": bwd, "PU": pu}
 
@@ -464,6 +492,7 @@ def budget_report(ledgers: dict[str, StageLedger]) -> dict[str, Any]:
 
 
 def ledger_rows(cfg, optimizer: str, prefix: str, *, momentum: float = 0.0,
+                sketched: bool = False,
                 fits_note: str = "") -> list[tuple[str, float, str]]:
     """Benchmark rows for one config: per-stage MB + a fits flag.
 
@@ -471,7 +500,8 @@ def ledger_rows(cfg, optimizer: str, prefix: str, *, momentum: float = 0.0,
     diverge.  Notes are CSV-safe ("; "-separated — benchmarks.run emits
     bare 3-column ``name,value,note`` lines).
     """
-    led = training_step_ledger(cfg, optimizer, momentum=momentum)
+    led = training_step_ledger(cfg, optimizer, momentum=momentum,
+                               sketched=sketched)
     rep = budget_report(led)
     mb = 1 / 2**20
     out: list[tuple[str, float, str]] = []

@@ -37,6 +37,7 @@ other kernel here); TPU is the target.  Pure-JAX fallbacks live in
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Sequence
 
 import jax
@@ -48,11 +49,20 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = [
     "fused_sgd_update",
     "fused_adamw_update",
+    "sketched_adamw_update",
     "pack_leaves",
     "unpack_leaves",
     "pu_block_shape",
     "fused_pu_hbm_bytes",
     "unfused_pu_hbm_bytes",
+    "sketched_pu_hbm_bytes",
+    "sketch_bucket_ids",
+    "sketch_signs",
+    "sketch_state_bytes",
+    "sketch_pu_vmem_bytes",
+    "sketch_pu_fits",
+    "default_sketch_width",
+    "SKETCH_DEPTH_DEFAULT",
 ]
 
 LANES = 1024          # minor dim of the flattened tile grid (8 x 128 lanes)
@@ -274,6 +284,276 @@ def fused_adamw_update(params, grads, m, v, lr_t, t, *, b1: float,
 
 
 # ---------------------------------------------------------------------------
+# Sketch-compressed AdamW (Count-Sketch Optimizers' fused-kernel idea).
+#
+# Dense AdamW's two f32 moment buffers are 2x the parameter footprint — the
+# dominant PU-stage cost against the paper's on-chip budget.  Following
+# "Memory-Constrained Optimization via Count-Sketches", the moments are held
+# as d x w hash sketches (w << n_params) and BOTH the sketch refresh and the
+# parameter update happen inside one Pallas kernel, so the dense ``m``/``v``
+# buffers never exist in HBM:
+#
+# * second moment ``v`` (nonnegative): a count-MIN sketch with a
+#   *conservative* refresh — per step every cell is overwritten with the
+#   MAX over its colliding parameters of the decayed estimate
+#   ``b2 * est_v + (1 - b2) * g^2``; queries take the MIN over the d rows.
+#   By induction the estimate never under-shoots the dense ``v``
+#   (the CMS overestimate invariant, asserted elementwise in
+#   tests/test_sketched_update.py), so sketching can only *shrink* step
+#   sizes — the safe direction for Adam.
+# * first moment ``m`` (signed): a count-sketch updated in the LINEAR
+#   form — the EMA is linear, so the sketch itself can be the EMA: cells
+#   decay by ``b1`` once per step and accumulate only
+#   ``sign_r(i) * (1 - b1) * g_i``.  Each cell then holds exactly the
+#   signed sum of its colliders' true dense ``m``; queries take the MEDIAN
+#   over rows of the sign-corrected cells (the classical unbiased
+#   estimator) and collision noise is zero-mean.  Crucially the sketch
+#   state never depends on its own queries — rewriting full estimates
+#   ``b1 * est_m + (1-b1) g`` into cells instead would feed ~sqrt(#colliders)
+#   query noise back through ``b1`` and amplify it exponentially.
+#
+# Per grid step the kernel hashes the block's flat parameter indices
+# (multiplicative hashing, compile-time odd constants — the identical
+# functions are exported below so the NumPy oracle in the tests computes
+# the very same buckets), queries the previous step's sketches, applies the
+# bias-corrected update to the parameter block, and scatters the refreshed
+# estimates into the new sketches, which live in VMEM-resident output
+# blocks (constant index map) flushed to HBM once per launch.  The gather/
+# scatter run as jnp take/segment ops in the kernel body — exact in
+# interpret mode (the validation path, as everywhere in this package); the
+# native TPU lowering is the one-hot/MXU idiom ``ttm_embed.py`` already
+# uses for its gather-free lookup.
+# ---------------------------------------------------------------------------
+
+SKETCH_DEPTH_DEFAULT = 3
+
+# Odd multiplicative-hash constants per sketch row (Knuth/Murmur-style).
+# Deterministic module-level tables: the kernel, the pure-JAX oracle, and a
+# restored checkpoint all hash identically by construction.
+_HASH_MULT = 2654435761        # 2^32 / golden ratio, odd
+_HASH_ADD = 0x85EBCA77
+_SIGN_MULT = 0xC2B2AE3D
+_SIGN_ADD = 0x27D4EB2F
+
+
+def _hash_consts(depth: int, mult: int, add: int):
+    ms = [(mult * (2 * r + 3)) & 0xFFFFFFFF | 1 for r in range(depth)]
+    bs = [(add * (r + 1)) & 0xFFFFFFFF for r in range(depth)]
+    return ms, bs
+
+
+def sketch_bucket_ids(idx, depth: int, width: int):
+    """(depth, *idx.shape) int32 bucket ids in [0, width) for flat parameter
+    indices ``idx`` — multiplicative hashing on uint32 with the top
+    log2(width) bits.  ``width`` must be a power of two.  This is THE hash
+    the kernel uses; the tests' dense NumPy oracle calls it too."""
+    if width & (width - 1) or width <= 0:
+        raise ValueError(f"sketch width must be a power of two, got {width}")
+    shift = 32 - int(math.log2(width))
+    u = jnp.asarray(idx).astype(jnp.uint32) + jnp.uint32(1)
+    ms, bs = _hash_consts(depth, _HASH_MULT, _HASH_ADD)
+    return jnp.stack([
+        ((u * jnp.uint32(ms[r]) + jnp.uint32(bs[r]))
+         >> jnp.uint32(shift)).astype(jnp.int32)
+        for r in range(depth)])
+
+
+def sketch_signs(idx, depth: int):
+    """(depth, *idx.shape) f32 in {-1, +1}: the count-sketch sign hashes for
+    the first-moment rows (top bit of an independent multiplicative hash)."""
+    u = jnp.asarray(idx).astype(jnp.uint32) + jnp.uint32(1)
+    ms, bs = _hash_consts(depth, _SIGN_MULT, _SIGN_ADD)
+    return jnp.stack([
+        1.0 - 2.0 * ((u * jnp.uint32(ms[r]) + jnp.uint32(bs[r]))
+                     >> jnp.uint32(31)).astype(jnp.float32)
+        for r in range(depth)])
+
+
+def default_sketch_width(n_params: int, depth: int = SKETCH_DEPTH_DEFAULT) -> int:
+    """Largest power-of-two width with ``depth * width <= n_params / 8``
+    (floor 128): both sketches together are then <= 1/8 of ONE dense moment
+    buffer, i.e. >= 16x under dense AdamW's two.  Capped so the kernel's six
+    resident (depth, width) sketch blocks stay within half the VMEM budget —
+    the default width never fails ``sketch_pu_fits`` on VMEM grounds."""
+    from .btt_linear import VMEM_BUDGET
+
+    target = max(n_params // (8 * max(depth, 1)), 1)
+    cap = max(VMEM_BUDGET // (2 * 6 * max(depth, 1) * 4), 128)
+    target = min(target, cap)
+    return max(1 << (target.bit_length() - 1), 128)
+
+
+def sketch_state_bytes(depth: int, width: int) -> int:
+    """HBM-persistent optimizer state of the sketched path: two f32
+    (depth, width) sketches (vs + ms) — vs dense AdamW's 2 * n_params f32."""
+    return 2 * depth * width * 4
+
+
+def sketch_pu_vmem_bytes(n_params: int, width: int,
+                         depth: int = SKETCH_DEPTH_DEFAULT, *,
+                         itemsize: int = 4) -> int:
+    """VMEM working set of one sketched-update grid step: the param block
+    (storage dtype) + grad block (f32) + two f32 index/estimate temporaries,
+    plus all six sketch blocks live across the launch (old vs/ms in, seed
+    vs/ms in, new vs/ms resident output).  The single residency source for
+    the ledger's sketched PU rows (like ``pu_block_shape`` for the dense
+    kernel)."""
+    br, _, lanes = pu_block_shape(n_params)
+    return br * lanes * (itemsize + 4 + 8) + 6 * depth * width * 4
+
+
+def sketch_pu_fits(n_params: int, width: int,
+                   depth: int = SKETCH_DEPTH_DEFAULT, *,
+                   itemsize: int = 4) -> bool:
+    """The dispatch predicate ``optim.adamw(sketched=True)`` gates on (and
+    the memory ledger with it — same function, no drift): the kernel's
+    working set must fit the VMEM budget AND the sketch state must be at
+    least 4x smaller than the dense moments it replaces (tiny trees fall
+    back to dense fused AdamW — a 128-wide sketch saves nothing there)."""
+    from .btt_linear import VMEM_BUDGET
+
+    return (sketch_pu_vmem_bytes(n_params, width, depth,
+                                 itemsize=itemsize) <= VMEM_BUDGET
+            and 4 * sketch_state_bytes(depth, width) <= 2 * n_params * 4)
+
+
+def _sketched_adamw_kernel(scal_ref, p_ref, vso_ref, mso_ref, vsd_ref,
+                           msd_ref, g_ref, o_ref, ovs_ref, oms_ref, *,
+                           b1: float, b2: float, eps: float,
+                           weight_decay: float, depth: int, width: int,
+                           n_valid: int, base: int):
+    """One (br, lanes) block of the sketched PU stage.
+
+    ``base`` is the global flat offset of this launch's dtype group and
+    ``n_valid`` its true element count; padded lanes hash to masked
+    (identity) contributions so they never pollute a bucket.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        # Seed the new sketches: zeros for the step's first dtype group,
+        # the previous group's partial sketches otherwise.
+        ovs_ref[...] = vsd_ref[...]
+        oms_ref[...] = msd_ref[...]
+
+    lr = scal_ref[0, 0]
+    t = scal_ref[0, 1]
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    br, lanes = p_ref.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (br, lanes), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (br, lanes), 1)
+    local = (rows * lanes + cols + i * br * lanes).reshape(-1)
+    valid = local < n_valid
+    idx = local + base
+    h = sketch_bucket_ids(idx, depth, width)         # (depth, n_blk)
+    s = sketch_signs(idx, depth)
+    vs_old = vso_ref[...]
+    ms_old = mso_ref[...]
+    # Query last step's estimates: min over rows (count-min, v) and median
+    # over sign-corrected rows (count-sketch, m).
+    est_v = jnp.min(jnp.stack(
+        [jnp.take(vs_old[r], h[r]) for r in range(depth)]), axis=0)
+    est_m = jnp.sort(jnp.stack(
+        [jnp.take(ms_old[r], h[r]) * s[r] for r in range(depth)]),
+        axis=0)[(depth - 1) // 2]
+    g = g_ref[...].reshape(-1)
+    m_new = b1 * est_m + (1.0 - b1) * g
+    v_new = b2 * est_v + (1.0 - b2) * jnp.square(g)
+    # Refresh the sketches: conservative overwrite (max of decayed
+    # estimates) for v, signed accumulation for m; masked elements
+    # contribute the scatter identity (0 — v_new >= 0 always).
+    v_c = jnp.where(valid, v_new, 0.0)
+    zero_w = jnp.zeros((width,), jnp.float32)
+    for r in range(depth):
+        ovs_ref[r, :] = jnp.maximum(ovs_ref[r, :], zero_w.at[h[r]].max(v_c))
+        # linear count-sketch refresh: only the gradient increment — the b1
+        # decay of the cells happens once per step in the host-side seed.
+        oms_ref[r, :] = oms_ref[r, :] + zero_w.at[h[r]].add(
+            jnp.where(valid, s[r] * (1.0 - b1) * g, 0.0))
+    p = p_ref[...].astype(jnp.float32).reshape(-1)
+    step = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    if weight_decay:
+        step = step + lr * weight_decay * p
+    o_ref[...] = (p - step).reshape(br, lanes).astype(o_ref.dtype)
+
+
+def _sketched_call(kern, scal, pb, gb, vs_old, ms_old, vs_seed, ms_seed,
+                   br: int, interpret: bool):
+    """Launch the sketched kernel over one packed dtype group.  The param
+    buffer is aliased in place; the (depth, width) sketch blocks have a
+    constant index map — VMEM-resident across the (sequential) grid,
+    flushed to HBM once, exactly like btt_backward's gA/gB accumulators."""
+    rows_p, lanes = pb.shape
+    grid = (rows_p // br,)
+    blk = pl.BlockSpec((br, lanes), lambda i: (i, 0))
+    skb = pl.BlockSpec(vs_old.shape, lambda i: (0, 0))
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM),
+                  blk, skb, skb, skb, skb, blk],
+        out_specs=[blk, skb, skb],
+        out_shape=[jax.ShapeDtypeStruct(pb.shape, pb.dtype),
+                   jax.ShapeDtypeStruct(vs_old.shape, vs_old.dtype),
+                   jax.ShapeDtypeStruct(ms_old.shape, ms_old.dtype)],
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(scal, pb, vs_old, ms_old, vs_seed, ms_seed, gb)
+    return tuple(out)
+
+
+def sketched_adamw_update(params, grads, vs, ms, lr_t, t, *, b1: float,
+                          b2: float, eps: float, weight_decay: float,
+                          interpret: bool | None = None):
+    """One sketched-AdamW PU stage: ``(new_params, new_vs, new_ms)``.
+
+    ``vs``/``ms`` are the (depth, width) f32 count-min / count-sketch
+    moment sketches from the previous step (zeros at step 0 — matching
+    dense AdamW's zero-initialized moments).  Per dtype group one kernel
+    launch queries the old sketches, updates the parameters, and scatters
+    the refreshed estimates into the new ones; groups chain through the
+    seed operands so the final sketches cover the whole tree.  Flat
+    parameter indices are global across the concatenated group layout, so
+    the hash assignment is stable across steps and checkpoints.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    depth, width = vs.shape
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    new_p: list = [None] * len(p_leaves)
+    scal = _scal(lr_t, t)
+    kern = functools.partial(
+        _sketched_adamw_kernel, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, depth=depth, width=width)
+    vs_seed = jnp.zeros_like(vs)
+    # m-sketch EMA decay is applied ONCE per step here; kernels then only
+    # scatter-add the (1 - b1)-scaled signed gradient increments.
+    ms_seed = b1 * ms
+    base = 0
+    for idx in _dtype_groups(p_leaves):
+        group = [p_leaves[i] for i in idx]
+        n = sum(int(np.prod(x.shape)) for x in group)
+        br, rows_p, lanes = pu_block_shape(n)
+        pdt = group[0].dtype
+        pb = pack_leaves(group, pdt, rows_p, lanes)
+        gb = pack_leaves([g_leaves[i] for i in idx], jnp.float32, rows_p,
+                         lanes)
+        ob, vs_seed, ms_seed = _sketched_call(
+            functools.partial(kern, n_valid=n, base=base),
+            scal, pb, gb, vs, ms, vs_seed, ms_seed, br, interpret)
+        outs = unpack_leaves(ob, [x.shape for x in group],
+                             [pdt] * len(group))
+        for j, i in enumerate(idx):
+            new_p[i] = outs[j]
+        base += n
+    return jax.tree.unflatten(treedef, new_p), vs_seed, ms_seed
+
+
+# ---------------------------------------------------------------------------
 # Analytic HBM-traffic models (shared by benchmarks and the run.py --check
 # regression guard).
 # ---------------------------------------------------------------------------
@@ -342,4 +622,28 @@ def unfused_pu_hbm_bytes(leaves, optimizer: str, *,
         reads = n_pad * its + n_pad_f32 * (4 + 4 * n_m)
         writes = n_pad * its + n_pad_f32 * 4 * n_m
         total += reads + writes
+    return total
+
+def sketched_pu_hbm_bytes(leaves, *, depth: int = SKETCH_DEPTH_DEFAULT,
+                          width: int | None = None) -> int:
+    """HBM bytes of one *sketched* AdamW PU step: per dtype group the packed
+    params (read + aliased write) and f32 grads (read) stream once, and per
+    launch the four (depth, width) sketch operands (old vs/ms + seed vs/ms)
+    are read and the two new ones written — the dense moment traffic
+    (8 bytes/elem read + 8 written in ``fused_pu_hbm_bytes``) is gone
+    entirely, replaced by O(depth * width) per launch."""
+    groups: dict = {}
+    for x in leaves:
+        dt = jnp.dtype(x.dtype)
+        groups.setdefault(dt, 0)
+        groups[dt] += int(np.prod(x.shape))
+    if width is None:
+        width = default_sketch_width(sum(groups.values()), depth)
+    total = 0
+    for dt, n in groups.items():
+        _, rows_p, lanes = pu_block_shape(n)
+        n_pad = rows_p * lanes
+        total += n_pad * (dt.itemsize + 4)      # read params + grads
+        total += n_pad * dt.itemsize            # write params
+        total += 6 * depth * width * 4          # 4 sketch reads + 2 writes
     return total

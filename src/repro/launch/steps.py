@@ -48,7 +48,11 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
 
     The PU stage is whatever ``opt.update`` lowers to: construct the
     optimizer with ``fused=True`` (optim.optimizers) to run it as the
-    Pallas fused-update kernel.  Callers should jit the returned step with
+    Pallas fused-update kernel, or ``adamw(sketched=True)`` to hold the
+    Adam moments as hash sketches refreshed inside that kernel (dense m/v
+    never exist in HBM; the init-time ``sketch_pu_fits`` fallback means the
+    state layout, not this builder, decides the path).  Callers should jit
+    the returned step with
     ``donate_argnums=(0, 1)`` (as launch.train does) so XLA can reuse the
     donated param/state memory across the step (the kernel's own aliasing
     is at the packed-buffer level — see kernels.fused_update).

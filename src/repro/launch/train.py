@@ -97,6 +97,17 @@ def main(argv=None) -> dict:
                          "hidden state never leaves VMEM; --no-fused-ffn "
                          "forces the two-call path; unset keeps the "
                          "config's fused_ffn)")
+    ap.add_argument("--sketched-opt", action="store_true",
+                    help="with --optimizer adamw: hold the Adam moments as "
+                         "count-min/count-sketch hash sketches refreshed "
+                         "inside the fused PU kernel — dense m/v never "
+                         "exist in HBM (falls back to dense fused AdamW "
+                         "when the sketch fails sketch_pu_fits)")
+    ap.add_argument("--sketch-width", type=int, default=None,
+                    help="sketch buckets per row (power of two; default "
+                         "default_sketch_width: ~n_params/(8*depth))")
+    ap.add_argument("--sketch-depth", type=int, default=None,
+                    help="sketch hash rows (default 3)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -113,7 +124,9 @@ def main(argv=None) -> dict:
 
     lr = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
     opt = (sgd(lr, fused=args.fused) if args.optimizer == "sgd"
-           else adamw(lr, fused=args.fused))
+           else adamw(lr, fused=args.fused, sketched=args.sketched_opt,
+                      sketch_width=args.sketch_width,
+                      sketch_depth=args.sketch_depth))
     train_step = make_train_step(cfg, opt, microbatches=args.microbatches,
                                  fused_bwd=args.fused_bwd)
 

@@ -84,14 +84,45 @@ def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0,
 def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
           b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0, *, fused: bool = False,
+          sketched: bool = False, sketch_width: int | None = None,
+          sketch_depth: int | None = None,
           interpret: bool | None = None) -> Optimizer:
     """AdamW.  ``fused=True`` performs moment EMAs, bias correction, weight
     decay, and the parameter delta in one Pallas kernel pass per step
     (``kernels.fused_update``) — each optimizer buffer is read and written
-    exactly once."""
+    exactly once.
+
+    ``sketched=True`` (implies fused) replaces the two dense moment
+    buffers with (sketch_depth, sketch_width) hash sketches — a count-min
+    sketch for ``v`` and a count-sketch for ``m`` — refreshed and queried
+    inside the same kernel, so the dense moments never exist in HBM
+    (Count-Sketch Optimizers).  The decision is taken at ``init`` via
+    ``sketch_pu_fits`` — the identical predicate ``core.memory_ledger``
+    charges from — and is visible in the state layout: sketched state is
+    ``{"step", "vs", "ms"}``; when the sketch does not fit (or saves <4x)
+    init falls back to dense fused AdamW state ``{"step", "m", "v"}`` and
+    ``update`` dispatches on the layout, so checkpoints stay
+    self-describing."""
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
     def init(params):
+        if sketched:
+            from repro.kernels.fused_update import (
+                SKETCH_DEPTH_DEFAULT, default_sketch_width, sketch_pu_fits)
+            n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+            depth = SKETCH_DEPTH_DEFAULT if sketch_depth is None else sketch_depth
+            width = (default_sketch_width(n, depth) if sketch_width is None
+                     else sketch_width)
+            itemsize = max(jnp.dtype(p.dtype).itemsize
+                           for p in jax.tree.leaves(params))
+            if sketch_pu_fits(n, width, depth, itemsize=itemsize):
+                return {
+                    "step": jnp.zeros((), jnp.int32),
+                    "vs": jnp.zeros((depth, width), jnp.float32),
+                    "ms": jnp.zeros((depth, width), jnp.float32),
+                }
+            # fallback: dense fused AdamW state (sketch would not fit VMEM
+            # or would not shrink the footprint enough to pay for itself)
         zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
         return {
             "step": jnp.zeros((), jnp.int32),
@@ -102,7 +133,15 @@ def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
     def update(grads, params, state, step):
         lr_t = lr_fn(step)
         t = (state["step"] + 1).astype(jnp.float32)
-        if fused:
+        if "vs" in state:
+            from repro.kernels.fused_update import sketched_adamw_update
+            new_params, vs, ms = sketched_adamw_update(
+                params, grads, state["vs"], state["ms"], lr_t, t,
+                b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+                interpret=interpret)
+            return new_params, {"step": state["step"] + 1, "vs": vs,
+                                "ms": ms}
+        if fused or sketched:
             from repro.kernels.fused_update import fused_adamw_update
             new_params, m, v = fused_adamw_update(
                 params, grads, state["m"], state["v"], lr_t, t,

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.atis_transformer import config_n
 from repro.core.cost_model import mem_btt
@@ -120,6 +121,87 @@ def test_pack_unpack_roundtrip():
     buf = pack_leaves(leaves, jnp.float32, rows_p, lanes)
     back = unpack_leaves(buf, shapes, [jnp.float32] * len(shapes))
     for x, y in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@given(seed=st.integers(0, 10_000),
+       sizes=st.lists(st.integers(1, 400), min_size=1, max_size=8),
+       nd=st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip_ragged_property(seed, sizes, nd):
+    """Any ragged list of leaf sizes survives pack -> unpack exactly, and
+    the padding tail of the packed buffer is zero (the scatter-identity the
+    sketched kernel's mask relies on)."""
+    rng = np.random.default_rng(seed)
+    shapes = []
+    for n in sizes:
+        if nd == 1 or n < 4:
+            shapes.append((n,))
+        else:
+            d0 = max(int(rng.integers(1, n)), 1)
+            shapes.append((d0, -(-n // d0)))  # >= n elems, 2-D
+    leaves = [jnp.asarray(rng.normal(size=s), jnp.float32) for s in shapes]
+    total = sum(int(np.prod(s)) for s in shapes)
+    br, rows_p, lanes = pu_block_shape(total)
+    assert rows_p % br == 0 and rows_p * lanes >= total
+    buf = pack_leaves(leaves, jnp.float32, rows_p, lanes)
+    assert buf.shape == (rows_p, lanes)
+    back = unpack_leaves(buf, shapes, [jnp.float32] * len(shapes))
+    for x, y in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    flat = np.asarray(buf).reshape(-1)
+    np.testing.assert_array_equal(flat[total:], 0.0)
+
+
+@given(seed=st.integers(0, 10_000), n16=st.integers(1, 300),
+       n32=st.integers(1, 300), n8=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_pack_unpack_mixed_dtype_groups_property(seed, n16, n32, n8):
+    """_dtype_groups partitions leaves by dtype preserving order; packing
+    each group at its own dtype and unpacking restores every leaf exactly
+    (bf16/f32 exact since values are stored at their own precision)."""
+    from repro.kernels.fused_update import _dtype_groups
+
+    rng = np.random.default_rng(seed)
+    leaves = [
+        jnp.asarray(rng.normal(size=n32), jnp.float32),
+        jnp.asarray(rng.normal(size=n16), jnp.float32).astype(jnp.bfloat16),
+        jnp.asarray(rng.normal(size=max(n32 // 2, 1)), jnp.float32),
+    ]
+    if n8:
+        leaves.append(jnp.asarray(rng.integers(-100, 100, size=n8),
+                                  jnp.int8))
+    groups = _dtype_groups(leaves)
+    # every leaf appears in exactly one group, order preserved within
+    flat_idx = [i for g in groups for i in g]
+    assert sorted(flat_idx) == list(range(len(leaves)))
+    for idx in groups:
+        dts = {leaves[i].dtype for i in idx}
+        assert len(dts) == 1
+        assert list(idx) == sorted(idx)
+        group = [leaves[i] for i in idx]
+        dt = group[0].dtype
+        total = sum(int(np.prod(x.shape)) for x in group)
+        _, rows_p, lanes = pu_block_shape(total)
+        buf = pack_leaves(group, dt, rows_p, lanes)
+        back = unpack_leaves(buf, [x.shape for x in group],
+                             [dt] * len(group))
+        for x, y in zip(group, back):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_pack_unpack_empty_leaf_edge():
+    """Zero-size leaves pack to nothing and unpack to their own (empty)
+    shape without disturbing their neighbours."""
+    shapes = [(7,), (0,), (3, 5), (2, 0, 4)]
+    leaves = [jnp.asarray(np.arange(int(np.prod(s))).reshape(s),
+                          jnp.float32) for s in shapes]
+    total = sum(int(np.prod(s)) for s in shapes)
+    _, rows_p, lanes = pu_block_shape(max(total, 1))
+    buf = pack_leaves(leaves, jnp.float32, rows_p, lanes)
+    back = unpack_leaves(buf, shapes, [jnp.float32] * len(shapes))
+    for x, y in zip(leaves, back):
+        assert y.shape == x.shape
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 

@@ -321,3 +321,89 @@ def test_ffn_rows_use_moe_expert_dispatch_k():
             expect = max(expect, ffn_stage_vmem_bytes(
                 M_, N_, F_, R1, R2, Rg, itemsize, K=k_blk, stage=stage))
         assert led[stage].entry("ffn_kernel_vmem").nbytes == expect
+
+
+# ---------------------------------------------------------------------------
+# Sketched-AdamW PU rows: kernel-helper-derived, envelope, moment shrink.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_enc", [2, 4, 6])
+def test_sketched_pu_rows_are_kernel_helper_derived(n_enc):
+    """With sketched AdamW, the PU rows must equal the sketched kernel's
+    OWN size helpers — moments == sketch_state_bytes at the state's actual
+    (depth, width), kernel_vmem == sketch_pu_vmem_bytes — recomputed here
+    independently of the ledger."""
+    from repro.kernels.fused_update import (
+        SKETCH_DEPTH_DEFAULT,
+        default_sketch_width,
+        sketch_pu_vmem_bytes,
+        sketch_state_bytes,
+    )
+
+    cfg = config_n(n_enc)
+    its = jnp.dtype(cfg.dtype).itemsize
+    params = _abstract_params(cfg)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    depth = SKETCH_DEPTH_DEFAULT
+    width = default_sketch_width(n, depth)
+
+    led = training_step_ledger(cfg, "adamw", batch=BATCH, seq=SEQ,
+                               sketched=True)
+    pu = led["PU"]
+    assert pu.entry("moments").nbytes == sketch_state_bytes(depth, width)
+    assert pu.entry("kernel_vmem").nbytes == sketch_pu_vmem_bytes(
+        n, width, depth, itemsize=its)
+    assert "sketch" in pu.entry("moments").note
+
+
+@pytest.mark.parametrize("n_enc", [2, 4, 6])
+def test_sketched_pu_moments_at_least_4x_smaller(n_enc):
+    """Acceptance: on every shipped ATIS config, the sketched PU moment
+    row is >= 4x smaller than dense AdamW's moment footprint, and the
+    full step stays inside the 6 + 22.5 MB envelope with strictly smaller
+    persistent (bram) PU residency."""
+    cfg = config_n(n_enc)
+    led_d = training_step_ledger(cfg, "adamw", batch=BATCH, seq=SEQ)
+    led_s = training_step_ledger(cfg, "adamw", batch=BATCH, seq=SEQ,
+                                 sketched=True)
+    dense = led_d["PU"].entry("moments").nbytes
+    sketch = led_s["PU"].entry("moments").nbytes
+    assert sketch * 4 <= dense, (n_enc, dense, sketch)
+    assert (led_s["PU"].pool_bytes("bram")
+            < led_d["PU"].pool_bytes("bram"))
+    rep = budget_report(led_s)
+    assert rep["fits_bram"] and rep["fits_uram"] and rep["fits"]
+
+
+def test_sketched_ledger_follows_fallback_predicate():
+    """When sketch_pu_fits rejects the requested sketch (absurd width),
+    eval_shape-init falls back to dense state and the ledger must charge
+    EXACTLY like sketched=False — the ledger and the op share the decision
+    by construction."""
+    cfg = config_n(2)
+    led_fb = training_step_ledger(cfg, "adamw", batch=BATCH, seq=SEQ,
+                                  sketched=True, sketch_width=2 ** 22)
+    led_d = training_step_ledger(cfg, "adamw", batch=BATCH, seq=SEQ)
+    for row in ("moments", "kernel_vmem", "grads", "params"):
+        assert (led_fb["PU"].entry(row).nbytes
+                == led_d["PU"].entry(row).nbytes)
+    assert "sketch" not in led_fb["PU"].entry("moments").note
+
+
+def test_sketched_state_matches_optimizer_init():
+    """The ledger's moment bytes equal the bytes of the REAL optimizer
+    state the training step would carry (minus the step scalar) — the
+    eval_shape contract, now including sketch buffers."""
+    from repro.optim import adamw
+
+    cfg = config_n(2)
+    params = _abstract_params(cfg)
+    opt = adamw(1e-3, sketched=True)
+    state = jax.eval_shape(opt.init, params)
+    assert "vs" in state
+    state_bytes = sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                      for x in jax.tree.leaves(state)) - 4
+    led = training_step_ledger(cfg, "adamw", batch=BATCH, seq=SEQ,
+                               sketched=True)
+    assert led["PU"].entry("moments").nbytes == state_bytes

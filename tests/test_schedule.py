@@ -1,0 +1,138 @@
+"""optim/schedule.py: boundary steps and lr_t plumbing.
+
+`warmup_cosine` was previously exercised only at a few spot values; this
+module pins the boundary behaviour (step 0, the warmup->cosine handoff,
+the decay tail) and asserts that a SCHEDULE (callable lr) threads through
+`Optimizer.update` identically to the equivalent per-step float — on the
+pure-JAX path, the fused Pallas path, and the sketched path (lr enters all
+kernels through the same SMEM scalar block)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, sgd, warmup_cosine
+from repro.optim.schedule import constant
+
+PEAK, WARM, TOTAL = 0.8, 10, 100
+
+
+def _lr(step):
+    return float(warmup_cosine(PEAK, WARM, TOTAL)(step))
+
+
+# ---------------------------------------------------------------------------
+# Boundary steps.
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_starts_at_zero_and_is_linear():
+    assert _lr(0) == 0.0
+    for s in range(1, WARM):
+        np.testing.assert_allclose(_lr(s), PEAK * s / WARM, rtol=1e-6)
+
+
+def test_warmup_boundary_hits_peak_exactly():
+    # step WARM is the first cosine step with progress 0 -> exactly peak
+    np.testing.assert_allclose(_lr(WARM), PEAK, rtol=1e-6)
+    # no overshoot on either side of the handoff
+    assert _lr(WARM - 1) < _lr(WARM)
+    assert _lr(WARM + 1) < _lr(WARM)
+
+
+def test_cosine_tail_and_clip_beyond_total():
+    final = PEAK * 0.1  # default final_frac
+    np.testing.assert_allclose(_lr(TOTAL), final, rtol=1e-5)
+    # progress clips at 1.0: lr holds at the floor past total_steps
+    np.testing.assert_allclose(_lr(TOTAL + 50), final, rtol=1e-5)
+
+
+def test_cosine_monotone_decay_and_midpoint():
+    vals = [_lr(s) for s in range(WARM, TOTAL + 1)]
+    assert all(a >= b - 1e-7 for a, b in zip(vals, vals[1:]))
+    # cosine midpoint: halfway between peak and floor
+    mid = (WARM + TOTAL) // 2
+    np.testing.assert_allclose(_lr(mid), PEAK * (0.1 + 0.9 * 0.5),
+                               rtol=1e-2)
+
+
+def test_final_frac_parameter():
+    fn = warmup_cosine(1.0, 0, 10, final_frac=0.25)
+    np.testing.assert_allclose(float(fn(10)), 0.25, rtol=1e-5)
+
+
+def test_constant_schedule():
+    fn = constant(0.3)
+    assert float(fn(0)) == float(fn(10_000)) == pytest.approx(0.3)
+    assert fn(0).dtype == jnp.float32
+
+
+def test_degenerate_warmup_zero_steps():
+    fn = warmup_cosine(1.0, 0, 100)
+    # no warmup: step 0 is already on the cosine at progress 0
+    np.testing.assert_allclose(float(fn(0)), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# lr_t callable vs float through Optimizer.update (all PU paths).
+# ---------------------------------------------------------------------------
+
+
+def _step_once(opt, params, grads, state=None):
+    state = opt.init(params) if state is None else state
+    new_p, new_s = opt.update(grads, params, state, state["step"])
+    return new_p, new_s
+
+
+def _params(n=30_000):
+    rng = np.random.default_rng(0)
+    return ({"w": jnp.asarray(rng.normal(size=n), jnp.float32)},
+            {"w": jnp.asarray(rng.normal(size=n), jnp.float32)})
+
+
+@pytest.mark.parametrize("mk", [
+    lambda lr: sgd(lr),
+    lambda lr: sgd(lr, momentum=0.9),
+    lambda lr: sgd(lr, fused=True),
+    lambda lr: adamw(lr),
+    lambda lr: adamw(lr, fused=True),
+    lambda lr: adamw(lr, sketched=True),
+], ids=["sgd", "sgd_momentum", "sgd_fused", "adamw", "adamw_fused",
+        "adamw_sketched"])
+def test_schedule_matches_equivalent_float_lr(mk):
+    """At any fixed step t, an optimizer built with a callable schedule
+    must produce the same update as one built with the float lr(t) —
+    bitwise, since both reach the kernel through the same scalar."""
+    params, grads = _params()
+    sched = warmup_cosine(PEAK, WARM, TOTAL)
+    opt_c = mk(sched)
+    opt_f = mk(_lr(0 + 1 - 1))  # lr at step 0, the step update() sees first
+
+    p_c, s_c = _step_once(opt_c, params, grads)
+    p_f, s_f = _step_once(opt_f, params, grads)
+    # schedules are evaluated at state["step"]; both saw step=0 here
+    for a, b in zip(jax.tree.leaves(p_c), jax.tree.leaves(p_f)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # and at a later step: advance the callable one, rebuild the float one
+    p_c2, s_c2 = _step_once(opt_c, p_c, grads, s_c)
+    opt_f2 = mk(_lr(1))
+    p_f2, _ = _step_once(opt_f2, p_f, grads, s_f)
+    for a, b in zip(jax.tree.leaves(p_c2), jax.tree.leaves(p_f2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_schedule_advances_with_step_counter():
+    """The schedule is a function of state["step"]: two steps under warmup
+    use two different lrs (pure sgd: delta = -lr_t * g exactly)."""
+    params = {"w": jnp.zeros(8)}
+    grads = {"w": jnp.ones(8)}
+    sched = warmup_cosine(1.0, 4, 20)
+    opt = sgd(sched)
+    state = opt.init(params)
+    p1, state = opt.update(grads, params, state, state["step"])
+    p2, state = opt.update(grads, p1, state, state["step"])
+    d1 = float((params["w"] - p1["w"])[0])
+    d2 = float((p1["w"] - p2["w"])[0])
+    np.testing.assert_allclose(d1, float(sched(0)), rtol=1e-6)
+    np.testing.assert_allclose(d2, float(sched(1)), rtol=1e-6)
