@@ -1,0 +1,207 @@
+"""DECODE stage: paged flash-decode serving vs the unfused decode path.
+
+Training's fused stages (bench_bwd/attn/ffn) have a serving mirror: at
+decode the per-step tensors are single token ROWS, so the HBM-traffic war
+is fought over (a) the KV cache — streamed page-table-indirectly exactly
+once by ``flash_decode_pallas`` vs gathered into a contiguous copy and
+re-read by the unfused path — and (b) the TT half-factors, which the
+decode-shape BTT kernels pin in VMEM across a decode burst while the
+unfused path re-fetches them every step.  This module compares the two
+paths with the same methodology as the training stages:
+
+* **FLOPs** — identical by construction; emitted once for context.
+* **HBM bytes moved** — the analytic per-decode-step models in
+  ``kernels.flash_decode`` / ``btt_linear`` / ``btt_ffn``: the fused side
+  tile-derived from the decode choosers (sublane-granule row tiles,
+  half-factor fetches amortized over ``STEPS`` pinned steps); the unfused
+  side generous to XLA (every tensor moves once per use, no copy loops
+  beyond the unavoidable cache gather).
+* **wall-clock** — steady-state continuous-batched tokens/s of the real
+  ``PagedDecodeEngine`` vs concurrency (pure-JAX paged path: interpret-mode
+  Pallas is Python emulation on CPU and would measure the emulator).
+
+Emitted rows (CSV via benchmarks.run; ``check_rows`` = analytic subset):
+  decode/attn/flops              one GQA decode-attention step, S=256
+  decode/attn/{fused,unfused}_bytes, bytes_ratio
+  decode/linear/bytes_ratio      paper 768x768 r12 TT linear, B=8 streams
+  decode/ffn/bytes_ratio         paper FFN block, decode row tiles
+  decode/atis_<n>enc/bytes_ratio whole-model per-step bytes (attn + every
+                                 TT projection + FFN), min over nothing —
+                                 one total, fused/unfused summed
+  decode/atis_<n>enc/fewer_bytes 1.0 iff fused < unfused
+  decode/atis_<n>enc/DECODE_mb   DECODE-stage ledger (weights bram + paged
+                                 KV pools and transients uram)
+  decode/atis_<n>enc/fits        1.0 iff inside the 6 MB BRAM + 22.5 MB
+                                 URAM envelope
+  decode/throughput/c<k>_tok_s   steady-state tokens/s at concurrency k
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.atis_transformer import config_n
+from repro.core.memory_ledger import (
+    _collect_ffn_blocks,
+    _collect_modules,
+    _ffn_block_dims,
+    _stacked_multiplier,
+    decode_ledger_rows,
+)
+from repro.kernels.btt_ffn import (
+    fused_decode_ffn_hbm_bytes,
+    unfused_decode_ffn_hbm_bytes,
+)
+from repro.kernels.btt_linear import (
+    fused_decode_linear_hbm_bytes,
+    unfused_decode_linear_hbm_bytes,
+)
+from repro.kernels.flash_decode import (
+    decode_attn_flops,
+    fused_decode_attn_hbm_bytes,
+    unfused_decode_attn_hbm_bytes,
+)
+from repro.models import init_params
+from repro.runtime.decode_engine import PagedDecodeEngine
+from repro.runtime.kv_cache import pages_for
+
+B_STREAMS = 8      # concurrent decode slots in the serving regime
+SEQ = 256          # steady-state context length per stream
+PAGE = 64          # KV page size (kernels.flash_decode.DEFAULT_PAGE_SIZE)
+STEPS = 64         # decode burst the VMEM-pinned half-factors amortize over
+GQA = (32, 8, 128)  # (H, KV, d_head) — lane-aligned GQA serving shape
+PAPER_LIN = (768, 768, 12)   # ATIS (M, N, R)
+PAPER_FFN = (768, 768, 768, 12, 12, 0)  # (M, N, F, R1, R2, Rg)
+# The envelope point: the paper's on-chip regime scaled to serving —
+# 4 slots, 64-token contexts, 32-row pages (ledger fits 6 + 22.5 MB here).
+LEDGER_B, LEDGER_LEN, LEDGER_PAGE = 4, 64, 32
+
+
+def _config_step_bytes(cfg, *, batch: int, seq: int, page: int,
+                       steps: int) -> tuple[int, int]:
+    """(fused, unfused) analytic HBM bytes of ONE whole-model decode step:
+    per-layer paged attention + every TT projection + every FFN block, at
+    the shapes the config actually ships (eval_shape walk, the same one
+    the memory ledger does)."""
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    it = np.dtype(cfg.dtype).itemsize
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    fused = cfg.num_layers * fused_decode_attn_hbm_bytes(
+        batch, H, KV, dh, page, pages_for(seq, page), it)
+    unfused = cfg.num_layers * unfused_decode_attn_hbm_bytes(
+        batch, H, KV, dh, seq, it)
+
+    ffn_mods: set[int] = set()
+    for blk in _collect_ffn_blocks(params):
+        dims = _ffn_block_dims(blk)
+        if dims is None:
+            continue
+        M, N, F, R1, R2, Rg, _, mult = dims
+        for key in ("up", "down", "gate"):
+            if key in blk:
+                ffn_mods.add(id(blk[key]))
+        fused += mult * fused_decode_ffn_hbm_bytes(
+            batch, M, N, F, R1, R2, Rg, it, steps=steps)
+        unfused += mult * unfused_decode_ffn_hbm_bytes(
+            batch, M, N, F, R1, R2, Rg, it)
+
+    tts, _ = _collect_modules(params)
+    for m in tts:
+        if id(m) in ffn_mods:
+            continue
+        mult = _stacked_multiplier(m)
+        M, N, R = m.spec.out_dim, m.spec.in_dim, m.spec.mid_rank
+        fused += mult * fused_decode_linear_hbm_bytes(batch, M, N, R, it,
+                                                      steps=steps)
+        unfused += mult * unfused_decode_linear_hbm_bytes(batch, M, N, R,
+                                                          it)
+    return fused, unfused
+
+
+def check_rows():
+    """Analytic rows for ``benchmarks.run --check`` (no wall-clock)."""
+    it = 4
+    H, KV, dh = GQA
+    fa = fused_decode_attn_hbm_bytes(B_STREAMS, H, KV, dh, PAGE,
+                                     pages_for(SEQ, PAGE), it)
+    ua = unfused_decode_attn_hbm_bytes(B_STREAMS, H, KV, dh, SEQ, it)
+    M, N, R = PAPER_LIN
+    fl = fused_decode_linear_hbm_bytes(B_STREAMS, M, N, R, it, steps=STEPS)
+    ul = unfused_decode_linear_hbm_bytes(B_STREAMS, M, N, R, it)
+    ff = fused_decode_ffn_hbm_bytes(B_STREAMS, *PAPER_FFN, it, steps=STEPS)
+    uf = unfused_decode_ffn_hbm_bytes(B_STREAMS, *PAPER_FFN, it)
+    out = [
+        ("decode/attn/flops",
+         float(decode_attn_flops(B_STREAMS, H, dh, SEQ)),
+         f"qK^T + pV over S={SEQ} live rows, {B_STREAMS} GQA streams"),
+        ("decode/attn/fused_bytes", float(fa),
+         "flash-decode launch: pages streamed once, softmax state in VMEM"),
+        ("decode/attn/unfused_bytes", float(ua),
+         "contiguous gather + score/prob rows round-tripping HBM"),
+        ("decode/attn/bytes_ratio", ua / fa,
+         ">1 = paged kernel moves fewer HBM bytes"),
+        ("decode/linear/bytes_ratio", ul / fl,
+         f"768x768 r12 row tiles, half-factors pinned {STEPS} steps"),
+        ("decode/ffn/bytes_ratio", uf / ff,
+         "megakernel row tiles vs two-call with hidden round-trip"),
+    ]
+    for n_enc in (2, 4, 6):
+        cfg = config_n(n_enc).with_tt(flow="kernel")
+        fb, ub = _config_step_bytes(cfg, batch=B_STREAMS, seq=SEQ,
+                                    page=PAGE, steps=STEPS)
+        out.append((f"decode/atis_{n_enc}enc/bytes_ratio", ub / fb,
+                    "whole-model per-decode-step HBM bytes, "
+                    "attn + projections + FFN"))
+        out.append((f"decode/atis_{n_enc}enc/fewer_bytes",
+                    1.0 if ub > fb else 0.0,
+                    "1 = fused < unfused HBM bytes per decode step"))
+        out.extend(decode_ledger_rows(cfg, f"decode/atis_{n_enc}enc",
+                                      batch=LEDGER_B, max_len=LEDGER_LEN,
+                                      page_size=LEDGER_PAGE, fused=True))
+    return out
+
+
+def _tokens_per_sec(concurrency: int) -> float:
+    """Steady-state continuous-batched decode throughput of the real
+    engine (pure-JAX paged path; interpret-mode Pallas would measure the
+    Python emulator, not the dataflow)."""
+    cfg = get_config("llama3-8b").scaled_down().with_tt(
+        mode="tt", rank=8, embed_rank=8)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    P, steps = 16, 8
+    rng = np.random.RandomState(0)
+    eng = PagedDecodeEngine(cfg, params, page_size=16,
+                            max_concurrency=concurrency,
+                            max_len=P + steps + 2, fused_decode=False)
+    for slot in range(concurrency):
+        eng.prefill(slot, rng.randint(1, cfg.vocab_size, size=(P,)))
+    toks = rng.randint(1, cfg.vocab_size,
+                       size=(concurrency,)).astype(np.int32)
+    poss = np.full((concurrency,), P, np.int32)
+    jax.block_until_ready(eng.decode_step(toks, poss))  # compile
+    poss += 1
+    t0 = time.time()
+    for _ in range(steps):
+        lg = eng.decode_step(toks, poss)
+        poss += 1
+    jax.block_until_ready(lg)
+    return concurrency * steps / (time.time() - t0)
+
+
+def rows():
+    out = check_rows()
+    t1 = _tokens_per_sec(1)
+    t4 = _tokens_per_sec(4)
+    out += [
+        ("decode/throughput/c1_tok_s", t1,
+         "scaled-down llama3 TT r8; paged pure-JAX path; CPU"),
+        ("decode/throughput/c4_tok_s", t4,
+         "same engine, 4 continuously-batched slots"),
+        ("decode/throughput/batch_speedup", t4 / t1,
+         "continuous batching amortizes the per-step launch"),
+    ]
+    return out

@@ -23,6 +23,11 @@ command ``python -m benchmarks.run`` produces a single auditable artifact.
                                                 linears + act, hidden state
                                                 VMEM-only — vs two-call path:
                                                 FLOPs, HBM bytes, wall-clock)
+  bench_decode       serving DECODE stage      (paged flash-decode + decode-
+                                                shape BTT kernels vs unfused
+                                                path: HBM bytes, DECODE
+                                                ledger, tokens/s vs
+                                                concurrency)
 
 Usage::
 
@@ -88,10 +93,12 @@ MODULES = [
     "bench_bwd",
     "bench_attn",
     "bench_ffn",
+    "bench_decode",
 ]
 
 # Modules with a fused-vs-unfused analytic byte model (check_rows()).
-CHECK_MODULES = ["bench_pu", "bench_bwd", "bench_attn", "bench_ffn"]
+CHECK_MODULES = ["bench_pu", "bench_bwd", "bench_attn", "bench_ffn",
+                 "bench_decode"]
 BASELINE_PATH = os.path.join(os.path.dirname(__file__),
                              "baseline_check.json")
 BASELINE_SLACK = 0.999  # ratios may not fall >0.1% below the baseline

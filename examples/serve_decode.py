@@ -1,9 +1,12 @@
-"""Batched serving example: prefill + KV/state-cache decode across model
-families (attention KV cache, Mamba-2 SSD state, RG-LRU window+state).
+"""Batched serving example: prefill + decode across cache families.
 
-Shows the serving path the ``decode_32k`` / ``long_500k`` dry-run cells
-lower, at CPU-friendly scale: reduced configs, batch of concurrent
-requests, greedy + temperature sampling, tokens/s report.
+Attention-family archs run the PAGED path (flash-decode Pallas kernel
+against a paged KV cache, FIFO continuous batching, per-slot positions);
+recurrent-state families (Mamba-2 SSD, RG-LRU hybrid) run the lockstep
+dense-cache path.  Shows the serving path the ``decode_32k`` /
+``long_500k`` dry-run cells lower, at CPU-friendly scale: reduced configs,
+oversubscribed request queue, greedy + temperature sampling, tokens/s +
+DECODE-ledger report.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
       PYTHONPATH=src python examples/serve_decode.py --arch mamba2-130m --tt
@@ -22,16 +25,19 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     archs = [args.arch] if args.arch else [
-        "llama3-8b",           # GQA KV cache
-        "mamba2-130m",         # SSD recurrent state (O(1) cache)
-        "recurrentgemma-2b",   # hybrid: RG-LRU state + local-attn ring buffer
+        "llama3-8b",           # GQA KV cache -> paged continuous batching
+        "mamba2-130m",         # SSD recurrent state (O(1) cache, dense path)
+        "recurrentgemma-2b",   # hybrid: RG-LRU state + local-attn ring
     ]
     for arch in archs:
         print(f"=== {arch} ===")
         argv2 = ["--arch", arch, "--scale-down", "--batch", "4",
-                 "--prompt-len", "48", "--gen", str(args.gen)]
+                 "--prompt-len", "48", "--gen", str(args.gen),
+                 # oversubscribe the paged path: 4 requests, 2 slots
+                 "--max-concurrency", "2", "--ledger"]
         if args.tt:
-            argv2.append("--tt")
+            # serve the flags the model trains with (PR 1-6 kernel stack)
+            argv2 += ["--tt", "--kernel-flow"]
         serve_main(argv2)
 
 

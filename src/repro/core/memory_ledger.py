@@ -67,9 +67,11 @@ __all__ = [
     "LedgerEntry",
     "StageLedger",
     "training_step_ledger",
+    "decode_step_ledger",
     "budget_report",
     "format_report",
     "ledger_rows",
+    "decode_ledger_rows",
 ]
 
 BRAM_BUDGET_BYTES = 6 * 2**20            # paper: <6 MB BRAM
@@ -472,6 +474,126 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         LedgerEntry("kernel_vmem", pu_kernel_vmem, "uram", pu_vmem_note),
     ))
     return {"FWD": fwd, "BWD": bwd, "PU": pu}
+
+
+def decode_step_ledger(cfg, *, batch: int = 1, max_len: int = 128,
+                       page_size: int = 64,
+                       fused: bool = True) -> StageLedger:
+    """DECODE-stage peak residency for one continuous-batched serving step.
+
+    Serving inverts the training split: weights stay the persistent (bram)
+    pool exactly as in training, but the GROWING state is now the paged KV
+    pool, sized by the same ``runtime.kv_cache`` layout the
+    ``PagedDecodeEngine`` allocates (groups from the engine's own
+    ``_layout``, page count from ``max_pages_per_request``) — ledger and
+    allocator cannot drift.  Kernel-VMEM rows are gated on the SAME
+    ``decode_*_vmem_fits`` predicates ``kernels.ops`` dispatches the decode
+    specializations on.  Only attention-family configs page
+    (``paged_supported``); others raise.
+    """
+    from repro.kernels.btt_ffn import decode_ffn_stage_vmem_bytes
+    from repro.kernels.btt_linear import decode_linear_stage_vmem_bytes
+    from repro.kernels.flash_decode import decode_attn_stage_vmem_bytes
+    from repro.models.transformer import init_params
+    from repro.runtime.decode_engine import _layout, paged_supported
+    from repro.runtime.kv_cache import kv_pool_bytes, max_pages_per_request
+
+    if not paged_supported(cfg):
+        raise ValueError(f"decode ledger needs attention-family blocks, "
+                         f"got {cfg.hybrid_pattern}")
+    params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    act_itemsize = jnp.dtype(cfg.dtype).itemsize
+    params_bytes = _tree_bytes(params)
+    B = batch
+
+    # Paged KV pools, one per window group — the engine's own layout.
+    n_cycles, _, _, n_pat, n_tail, windows = _layout(cfg)
+    kv_bytes = 0
+    for gid, window in windows.items():
+        n_layers = n_cycles * n_pat.get(gid, 0) + n_tail.get(gid, 0)
+        np_max = max_pages_per_request(max_len, page_size, window)
+        kv_bytes += kv_pool_bytes(n_layers, 1 + B * np_max, cfg.n_kv_heads,
+                                  page_size, cfg.d_head, act_itemsize)
+
+    # Transient per-step activations: residual stream + norm temp + the
+    # q/k/v/attn-out columns of the live layer (layers run sequentially).
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    act_bytes = B * (3 * cfg.d_model + (2 * H + 2 * KV) * dh) * act_itemsize
+    logits_bytes = B * cfg.vocab_padded * act_itemsize
+
+    tts, _ = _collect_modules(params)
+    lin_vmem = max(
+        (decode_linear_stage_vmem_bytes(m.spec.out_dim, m.spec.mid_rank,
+                                        act_itemsize, B=B, fused=fused)
+         for m in tts), default=0)
+    G = H // KV
+    attn_vmem = decode_attn_stage_vmem_bytes(G, dh, page_size, act_itemsize,
+                                             fused=fused)
+    ffn_vmem = 0
+    ffn_hidden = 0
+    for blk in _collect_ffn_blocks(params):
+        dims = _ffn_block_dims(blk)
+        if dims is None or not (fused and cfg.fused_ffn
+                                and cfg.tt.flow == "kernel"):
+            F = (dims[2] if dims is not None
+                 else getattr(cfg, "d_ff", cfg.d_model * 4))
+            ffn_hidden = max(ffn_hidden, B * F * act_itemsize)
+            continue
+        M_, N_, F_, R1, R2, Rg, _, _ = dims
+        v = decode_ffn_stage_vmem_bytes(M_, N_, F_, R1, R2, Rg,
+                                        act_itemsize, B=B, fused=True)
+        if v:
+            ffn_vmem = max(ffn_vmem, v)
+        else:
+            ffn_hidden = max(ffn_hidden, B * F_ * act_itemsize)
+
+    return StageLedger("DECODE", (
+        LedgerEntry("params", params_bytes, "bram",
+                    "TT/TTM cores + biases + norms (eval_shape-exact)"),
+        LedgerEntry("kv_pages", kv_bytes, "uram",
+                    f"paged KV pools ({len(windows)} group(s), "
+                    f"page={page_size}, {B} slot(s), max_len={max_len})"),
+        LedgerEntry("activations", act_bytes, "uram",
+                    "residual stream + live layer's q/k/v/o columns"),
+        LedgerEntry("logits", logits_bytes, "uram",
+                    "one decode step's (B, Vp) logits"),
+        LedgerEntry("attn_kernel_vmem", attn_vmem, "uram",
+                    "flash_decode_pallas working set "
+                    "(choose_decode_attn_tiles-derived)" if attn_vmem else
+                    "no flash-decode launch (paged pure-JAX ref)"),
+        LedgerEntry("kernel_vmem", lin_vmem, "uram",
+                    "btt_linear_decode_pallas working set, largest layer"
+                    if lin_vmem else "no decode TT-linear launch"),
+        LedgerEntry("ffn_kernel_vmem", ffn_vmem, "uram",
+                    "btt_ffn_decode_pallas working set "
+                    "(choose_decode_ffn_tiles-derived)" if ffn_vmem else
+                    "no decode megakernel launch"),
+        LedgerEntry("ffn_hidden", ffn_hidden, "uram",
+                    "two-call FFN hidden column (no megakernel)"
+                    if ffn_hidden else
+                    "hidden state VMEM-resident in the megakernel"),
+    ))
+
+
+def decode_ledger_rows(cfg, prefix: str, *, batch: int = 1,
+                       max_len: int = 128, page_size: int = 64,
+                       fused: bool = True) -> list[tuple[str, float, str]]:
+    """Benchmark rows for one serving config: DECODE-stage MB + fits flag
+    against the paper's envelope (bram = weights, uram = KV pages +
+    transients) — shared by bench_decode and launch.serve."""
+    led = decode_step_ledger(cfg, batch=batch, max_len=max_len,
+                             page_size=page_size, fused=fused)
+    mb = 1 / 2**20
+    bram = led.pool_bytes("bram")
+    uram = led.pool_bytes("uram")
+    fits = bram <= BRAM_BUDGET_BYTES and uram <= URAM_BUDGET_BYTES
+    return [
+        (f"{prefix}/DECODE_mb", led.total_bytes * mb,
+         f"bram {bram * mb:.3f} MB + uram {uram * mb:.3f} MB"),
+        (f"{prefix}/fits", 1.0 if fits else 0.0,
+         f"peak bram {bram * mb:.2f}/6.0 MB; uram {uram * mb:.2f}/22.5 MB; "
+         f"batch={batch} max_len={max_len} page={page_size}"),
+    ]
 
 
 def budget_report(ledgers: dict[str, StageLedger]) -> dict[str, Any]:

@@ -20,6 +20,10 @@
 ``fused_update``    — fused parameter-update (PU) stage: SGD(+momentum) /
                       AdamW over flattened parameter buffers in one pass,
                       moments updated in place (paper Sec. III-A step 3).
+``flash_decode``    — serving-side flash attention: single-query-row tiles
+                      streamed against a PAGED KV cache (page-table-indirect
+                      index maps, GQA head-grouping, online-softmax state in
+                      VMEM) — only resident pages are ever read.
 ``ops``        — jit wrappers + fused custom VJP + pure-JAX fallbacks.
 ``ref``        — pure-jnp oracles the kernels are swept against.
 """
@@ -49,10 +53,21 @@ from .flash_backward import (
     fused_attn_hbm_bytes,
     unfused_attn_hbm_bytes,
 )
+from .flash_decode import (
+    choose_decode_attn_tiles,
+    decode_attn_vmem_fits,
+    flash_decode_pallas,
+    fused_decode_attn_hbm_bytes,
+    paged_decode_ref,
+    unfused_decode_attn_hbm_bytes,
+)
 from .fused_update import fused_adamw_update, fused_sgd_update
 from .ops import (
+    btt_ffn_decode_op,
     btt_ffn_op,
+    btt_linear_decode_op,
     btt_linear_op,
+    flash_decode_op,
     flash_mha_op,
     kernel_interpret_default,
     ttm_embed_op,
@@ -84,4 +99,8 @@ __all__ = [
     "fused_ffn_hbm_bytes", "unfused_ffn_hbm_bytes",
     "choose_attn_tiles", "attn_bwd_vmem_fits", "attn_residual_bytes",
     "fused_attn_hbm_bytes", "unfused_attn_hbm_bytes",
+    "flash_decode_pallas", "paged_decode_ref", "flash_decode_op",
+    "btt_linear_decode_op", "btt_ffn_decode_op",
+    "choose_decode_attn_tiles", "decode_attn_vmem_fits",
+    "fused_decode_attn_hbm_bytes", "unfused_decode_attn_hbm_bytes",
 ]

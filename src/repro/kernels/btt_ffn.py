@@ -68,6 +68,12 @@ __all__ = [
     "fused_ffn_hbm_bytes",
     "unfused_ffn_hbm_bytes",
     "ffn_flops",
+    "btt_ffn_decode_pallas",
+    "choose_decode_ffn_tiles",
+    "decode_ffn_vmem_fits",
+    "decode_ffn_stage_vmem_bytes",
+    "fused_decode_ffn_hbm_bytes",
+    "unfused_decode_ffn_hbm_bytes",
 ]
 
 ACTS = {"gelu": jax.nn.gelu, "silu": jax.nn.silu}
@@ -569,3 +575,109 @@ def unfused_ffn_hbm_bytes(K: int, M: int, N: int, F: int, R1: int, R2: int,
     act_fwd = (n_pre + 1) * k8 * fp * itemsize
     act_bwd = (1 + 2 * n_pre) * k8 * fp * itemsize
     return gemms_fwd + act_fwd + gemms_bwd + act_bwd
+
+
+# ---------------------------------------------------------------------------
+# Decode specialization: one token per stream, half-factors pinned.
+# ---------------------------------------------------------------------------
+#
+# Serving runs the megakernel forward-only with K = the number of live
+# decode streams.  Two things change vs training: row tiles pad to the
+# dtype's true sublane granule (f32 8) instead of the every-dtype 32, and
+# the six half-factors — identical across steps — are VMEM-pinned, so
+# their HBM fetch amortizes over the whole decode run (``steps`` in the
+# byte model).  The kernel body is btt_ffn_pallas's own, so fused-decode
+# FFN output is bit-identical to the training forward at equal shapes.
+
+
+def _decode_sublane(itemsize: int) -> int:
+    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+
+
+def choose_decode_ffn_tiles(M: int, N: int, F: int, R1: int, R2: int,
+                            Rg: int, itemsize: int, *, B: int
+                            ) -> tuple[int, int, int, int, int, int, int,
+                                       int]:
+    """(tk, mp, np, fp, r1p, r2p, rgp, vmem_bytes) for a forward-only
+    decode launch of the FFN megakernel: ``tk`` = live streams padded to
+    the dtype sublane tile; nothing shrinks (the half-factor residency is
+    the floor — callers gate on :func:`decode_ffn_vmem_fits`).
+
+    Same contract as :func:`choose_ffn_tiles`: decode kernel launch,
+    ``ops`` dispatch gate and ledger DECODE rows all read these numbers.
+    """
+    tk = _round_up(B, _decode_sublane(itemsize))
+    mp = _round_up(M, 128)
+    np_ = _round_up(N, 128)
+    fp = _round_up(F, 128)
+    r1p = _round_up(R1, 128)
+    r2p = _round_up(R2, 128)
+    rgp = _round_up(Rg, 128) if Rg else 0
+    hf = (r1p * np_ + fp * r1p + r2p * fp + mp * r2p
+          + (rgp * np_ + fp * rgp)) * itemsize
+    vmem = (tk * np_ * itemsize + tk * mp * itemsize + hf
+            + tk * fp * itemsize + tk * fp * 4
+            + tk * (r1p + r2p + rgp) * 4)
+    return tk, mp, np_, fp, r1p, r2p, rgp, vmem
+
+
+def decode_ffn_vmem_fits(M: int, N: int, F: int, R1: int, R2: int, Rg: int,
+                         itemsize: int, *, B: int,
+                         budget: int | None = None) -> bool:
+    """THE decode-FFN dispatch predicate (mirrors ``ffn_vmem_fits``)."""
+    budget = budget or VMEM_BUDGET
+    return choose_decode_ffn_tiles(M, N, F, R1, R2, Rg, itemsize,
+                                   B=B)[7] <= budget
+
+
+def decode_ffn_stage_vmem_bytes(M: int, N: int, F: int, R1: int, R2: int,
+                                Rg: int, itemsize: int, *, B: int,
+                                fused: bool = True,
+                                budget: int | None = None) -> int:
+    if not fused or not decode_ffn_vmem_fits(M, N, F, R1, R2, Rg, itemsize,
+                                             B=B, budget=budget):
+        return 0
+    return choose_decode_ffn_tiles(M, N, F, R1, R2, Rg, itemsize, B=B)[7]
+
+
+def btt_ffn_decode_pallas(x: jax.Array, b1: jax.Array, a1: jax.Array,
+                          b2: jax.Array, a2: jax.Array,
+                          bg: jax.Array | None = None,
+                          ag: jax.Array | None = None, *,
+                          act: str = "gelu", f_logical: int | None = None,
+                          interpret: bool = False) -> jax.Array:
+    """Decode-shape FFN megakernel launch (same body, sublane row tiles)."""
+    itemsize = jnp.dtype(x.dtype).itemsize
+    tk = _round_up(x.shape[0], _decode_sublane(itemsize))
+    return btt_ffn_pallas(x, b1, a1, b2, a2, bg, ag, act=act,
+                          f_logical=f_logical, tk=tk, interpret=interpret)
+
+
+def fused_decode_ffn_hbm_bytes(B: int, M: int, N: int, F: int, R1: int,
+                               R2: int, Rg: int, itemsize: int, *,
+                               steps: int = 1) -> int:
+    """HBM bytes ONE decode step of the FFN megakernel moves: the (tk, N)
+    activation row in, the (tk, M) row out, half-factor fetches amortized
+    over ``steps`` pinned steps.  The (tk, F) hidden tile moves nothing."""
+    tk, mp, np_, fp, r1p, r2p, rgp, _ = choose_decode_ffn_tiles(
+        M, N, F, R1, R2, Rg, itemsize, B=B)
+    io = (tk * np_ + tk * mp) * itemsize
+    hf = _hf_elems(np_, mp, fp, r1p, r2p, rgp) * itemsize
+    return io + -(-hf // steps)
+
+
+def unfused_decode_ffn_hbm_bytes(B: int, M: int, N: int, F: int, R1: int,
+                                 R2: int, Rg: int, itemsize: int) -> int:
+    """HBM bytes of the two-call decode forward: per-linear launches at the
+    training 32-row granule (half-factors re-fetched every step — XLA pins
+    nothing across dispatches), the ``(B, F)`` hidden state round-tripping
+    HBM between the up/act/down launches."""
+    k8 = _round_up(B, 8)
+    fp = _round_up(F, 128)
+    n_pre = 2 if Rg else 1
+    gemms = (_fwd_launch_bytes(B, F, N, R1, itemsize)
+             + _fwd_launch_bytes(B, M, F, R2, itemsize))
+    if Rg:
+        gemms += _fwd_launch_bytes(B, F, N, Rg, itemsize)
+    act_io = (n_pre + 1) * k8 * fp * itemsize
+    return gemms + act_io

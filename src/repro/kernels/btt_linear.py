@@ -37,7 +37,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 
-__all__ = ["btt_linear_pallas", "choose_tiles", "DEFAULT_TK", "DEFAULT_TN"]
+__all__ = ["btt_linear_pallas", "choose_tiles", "DEFAULT_TK", "DEFAULT_TN",
+           "btt_linear_decode_pallas", "choose_decode_tiles",
+           "decode_linear_vmem_fits", "decode_linear_stage_vmem_bytes",
+           "fused_decode_linear_hbm_bytes", "unfused_decode_linear_hbm_bytes"]
 
 DEFAULT_TK = 256
 DEFAULT_TN = 512
@@ -153,3 +156,106 @@ def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
         interpret=interpret,
     )(xp, bp, ap)
     return y[:K, :M]
+
+
+# ---------------------------------------------------------------------------
+# Decode specialization: one token per stream, half-factors pinned.
+# ---------------------------------------------------------------------------
+#
+# At decode time K is the number of concurrent streams (1-16 in the serving
+# regime), not batch x seq — the training chooser's 32-row granule would pad
+# a batch-1 stream to 32 streamed rows.  The decode chooser pads only to the
+# dtype's true sublane tile (f32 8 / bf16 16 / int8 32) and, because the
+# half-factors don't change between steps, treats them as VMEM-PINNED: the
+# analytic byte model amortizes their fetch over ``steps`` decode steps,
+# which is what the serve loop's jitted step achieves by re-passing the same
+# device-resident arrays.
+
+
+def _sublane(itemsize: int) -> int:
+    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+
+
+def choose_decode_tiles(M: int, R: int, itemsize: int, *, B: int,
+                        tn: int | None = None
+                        ) -> tuple[int, int, int, int, int]:
+    """(tk, tn, mp, rp, vmem_bytes) for a decode-shape launch: ``tk`` is the
+    stream count padded to the dtype sublane tile (TK=1-row tiles, hardware
+    granule permitting) and ``tn`` shrinks to fit instead.
+
+    Same single-source-of-truth contract as :func:`choose_tiles`: the decode
+    kernel launches with these tiles, ``ops`` gates on
+    :func:`decode_linear_vmem_fits`, and the ledger's DECODE rows report the
+    same ``vmem_bytes``.
+    """
+    tk = _round_up(B, _sublane(itemsize))
+    tn = tn or DEFAULT_TN
+    mp = _round_up(M, 128)
+    rp = _round_up(R, 128)
+
+    def vmem(tn_):
+        return (tk * mp * itemsize + mp * rp * itemsize + tk * tn_ * itemsize
+                + rp * tn_ * itemsize + tk * rp * 4)
+
+    while tn > 128 and vmem(tn) > VMEM_BUDGET:
+        tn //= 2
+    return tk, tn, mp, rp, vmem(tn)
+
+
+def decode_linear_vmem_fits(M: int, R: int, itemsize: int, *, B: int,
+                            budget: int | None = None) -> bool:
+    budget = budget or VMEM_BUDGET
+    return choose_decode_tiles(M, R, itemsize, B=B)[4] <= budget
+
+
+def decode_linear_stage_vmem_bytes(M: int, R: int, itemsize: int, *, B: int,
+                                   fused: bool = True,
+                                   budget: int | None = None) -> int:
+    """VMEM working set a decode TT-linear launch holds (0 when unfused or
+    over budget — the fallback two-call path keeps no scratch)."""
+    if not fused or not decode_linear_vmem_fits(M, R, itemsize, B=B,
+                                                budget=budget):
+        return 0
+    return choose_decode_tiles(M, R, itemsize, B=B)[4]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def btt_linear_decode_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
+                             interpret: bool = False) -> jax.Array:
+    """Decode-shape ``btt_linear_pallas``: same fused dataflow, row tiles at
+    the dtype sublane granule so a handful of streams doesn't pad to a
+    training-size 32-row block."""
+    K = x.shape[0]
+    R = b.shape[0]
+    M = a.shape[0]
+    itemsize = jnp.dtype(x.dtype).itemsize
+    tk, tn, _, _, _ = choose_decode_tiles(M, R, itemsize, B=K)
+    return btt_linear_pallas(x, b, a, tk=tk, tn=tn, interpret=interpret)
+
+
+def fused_decode_linear_hbm_bytes(B: int, M: int, N: int, R: int,
+                                  itemsize: int, *, steps: int = 1) -> int:
+    """HBM bytes ONE decode step of the fused TT linear moves, half-factor
+    fetches amortized over ``steps`` pinned decode steps.  Per step only the
+    (tk, N) activation row goes in and the (tk, M) row comes out; the
+    intermediate lives in VMEM scratch."""
+    tk, tn, mp, rp, _ = choose_decode_tiles(M, R, itemsize, B=B)
+    np_ = _round_up(N, tn)
+    io = tk * np_ * itemsize + tk * mp * itemsize
+    factors = (rp * np_ + mp * rp) * itemsize
+    return io + -(-factors // steps)
+
+
+def unfused_decode_linear_hbm_bytes(B: int, M: int, N: int, R: int,
+                                    itemsize: int) -> int:
+    """HBM bytes of the unfused two-GEMM decode path: training-granule
+    (32-row) launch padding, the ``(K, R)`` intermediate round-tripping HBM
+    between the GEMMs, half-factors re-fetched every step (XLA pins nothing
+    across dispatches)."""
+    kp = _round_up(B, 32)
+    rp = _round_up(R, 128)
+    mp = _round_up(M, 128)
+    np_ = _round_up(N, 128)
+    g1 = kp * np_ * itemsize + rp * np_ * itemsize + kp * rp * itemsize
+    g2 = kp * rp * itemsize + mp * rp * itemsize + kp * mp * itemsize
+    return g1 + g2

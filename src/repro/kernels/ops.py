@@ -59,19 +59,31 @@ from .btt_backward import btt_backward_pallas, bwd_vmem_fits
 from .btt_ffn import (
     ACTS as _FFN_ACTS,
     btt_ffn_bwd_pallas,
+    btt_ffn_decode_pallas,
     btt_ffn_pallas,
+    decode_ffn_vmem_fits,
     ffn_vmem_fits,
 )
-from .btt_linear import btt_linear_pallas
+from .btt_linear import (
+    btt_linear_decode_pallas,
+    btt_linear_pallas,
+    decode_linear_vmem_fits,
+)
 from .flash_attention import flash_attention_pallas
 from .flash_backward import (
     attn_bwd_vmem_fits,
     choose_attn_tiles,
     flash_attention_bwd_pallas,
 )
+from .flash_decode import (
+    decode_attn_vmem_fits,
+    flash_decode_pallas,
+    paged_decode_ref,
+)
 from .ttm_embed import ttm_embed_pallas
 
 __all__ = ["btt_linear_op", "btt_ffn_op", "ttm_embed_op", "flash_mha_op",
+           "flash_decode_op", "btt_linear_decode_op", "btt_ffn_decode_op",
            "kernel_interpret_default"]
 
 _VMEM_CORE_BUDGET = 8 * 1024 * 1024  # resident-core budget for ttm kernel
@@ -320,6 +332,108 @@ def flash_mha_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
     o = _flash_fused(qf, kf, vf, causal, window, group, interpret, budget)
     return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Decode serving ops (forward-only — no VJP; sampling never differentiates).
+# ---------------------------------------------------------------------------
+
+
+def flash_decode_op(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, lengths: jax.Array,
+                    pos0: jax.Array, *, window: int | None = None,
+                    use_kernel: bool = True, interpret: bool | None = None,
+                    budget: int | None = None) -> jax.Array:
+    """One decode attention step against a paged KV cache.
+
+    ``q (B, H, D)`` — one query row per live stream; ``k_pages``/``v_pages``
+    ``(NP, KV, P, D)`` — the physical page pools; ``page_table (B, NPmax)``,
+    ``lengths (B,)``, ``pos0 (B,)`` — each stream's logical view (see
+    ``flash_decode.flash_decode_pallas``).  GQA is the reshape
+    ``(B, KV, H//KV, D)``: query head ``h`` shares KV head ``h // group``,
+    matching ``models.attention.decode_attention``'s repeat layout.
+
+    When the working set exceeds ``budget`` — or ``use_kernel=False`` —
+    the op takes ``paged_decode_ref``, which executes the identical
+    primitive sequence: fallback and kernel are bitwise-comparable, and
+    ``core.memory_ledger`` gates its DECODE attention row on the same
+    ``decode_attn_vmem_fits``.
+    """
+    B, H, D = q.shape
+    KV, P = k_pages.shape[1], k_pages.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    itemsize = jnp.dtype(q.dtype).itemsize
+    if not use_kernel or not decode_attn_vmem_fits(G, D, P, itemsize,
+                                                   budget=budget):
+        o = paged_decode_ref(qg, k_pages, v_pages, page_table, lengths,
+                             pos0, window=window)
+    else:
+        if interpret is None:
+            interpret = kernel_interpret_default()
+        o = flash_decode_pallas(qg, k_pages, v_pages, page_table, lengths,
+                                pos0, window=window, interpret=interpret)
+    return o.reshape(B, H, D)
+
+
+def btt_linear_decode_op(cores, x: jax.Array, spec: TTSpec, *,
+                         use_kernel: bool = True,
+                         interpret: bool | None = None) -> jax.Array:
+    """``x (B, N) -> y (B, M)``: the BTT linear at decode shapes — row tiles
+    at the dtype sublane granule instead of the training 32-row blocks.
+    Forward-only.  Falls back to the training-tile launch when the decode
+    working set exceeds VMEM (same predicate as the ledger's DECODE rows)."""
+    if not use_kernel:
+        return tt_forward_btt(cores, x, spec)
+    if interpret is None:
+        interpret = kernel_interpret_default()
+    a, b = tt_half_factors(list(cores), spec)
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if decode_linear_vmem_fits(a.shape[0], a.shape[1], itemsize,
+                               B=x.shape[0]):
+        return btt_linear_decode_pallas(x, b, a, interpret=interpret)
+    return btt_linear_pallas(x, b, a, interpret=interpret)
+
+
+def btt_ffn_decode_op(up_cores, down_cores, gate_cores, x: jax.Array,
+                      up_spec: TTSpec, down_spec: TTSpec,
+                      gate_spec: TTSpec | None = None, *, act: str = "gelu",
+                      f_logical: int | None = None,
+                      interpret: bool | None = None) -> jax.Array:
+    """Whole TT FFN block at decode shapes, forward-only: the megakernel
+    with sublane-granule row tiles when it fits VMEM
+    (``decode_ffn_vmem_fits`` — the ledger's DECODE FFN row gates on the
+    same predicate), else the two-call decode-linear path — the exact
+    slice/act/pad sequence ``btt_ffn_op``'s fallback runs."""
+    if interpret is None:
+        interpret = kernel_interpret_default()
+    a1, b1 = tt_half_factors(list(up_cores), up_spec)
+    a2, b2 = tt_half_factors(list(down_cores), down_spec)
+    ag = bg = None
+    if gate_cores is not None:
+        ag, bg = tt_half_factors(list(gate_cores), gate_spec)
+    if f_logical is None:
+        f_logical = min(up_spec.out_dim, down_spec.in_dim)
+
+    M, N, F = down_spec.out_dim, up_spec.in_dim, up_spec.out_dim
+    R1, R2 = up_spec.mid_rank, down_spec.mid_rank
+    Rg = gate_spec.mid_rank if gate_spec is not None else 0
+    itemsize = jnp.dtype(x.dtype).itemsize
+    if decode_ffn_vmem_fits(M, N, F, R1, R2, Rg, itemsize, B=x.shape[0]):
+        return btt_ffn_decode_pallas(x, b1, a1, b2, a2, bg, ag, act=act,
+                                     f_logical=f_logical,
+                                     interpret=interpret)
+    u = btt_linear_decode_pallas(x, b1, a1,
+                                 interpret=interpret)[:, :f_logical]
+    if bg is not None:
+        g = btt_linear_decode_pallas(x, bg, ag,
+                                     interpret=interpret)[:, :f_logical]
+        h = _FFN_ACTS[act](g) * u
+    else:
+        h = _FFN_ACTS[act](u)
+    if f_logical != down_spec.in_dim:
+        h = jnp.pad(h, ((0, 0), (0, down_spec.in_dim - f_logical)))
+    return btt_linear_decode_pallas(h, b2, a2, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,6 @@
-"""Distributed runtime: sharding rules, fault tolerance, elastic scaling."""
+"""Distributed runtime: sharding rules, fault tolerance, elastic scaling —
+plus the decode-serving runtime (paged KV cache, continuous-batching
+scheduler, paged decode engine)."""
 from .compress import (
     compressed_allreduce_mean,
     dequantize_int8,
@@ -6,7 +8,15 @@ from .compress import (
     ef_init,
     quantize_int8,
 )
+from .decode_engine import PagedDecodeEngine, paged_supported
 from .elastic import replan_for_mesh, reshard_tree, validate_divisibility
+from .kv_cache import (
+    PagedKVCache,
+    kv_pool_bytes,
+    max_pages_per_request,
+    pages_for,
+)
+from .scheduler import Request, Scheduler
 from .sharding import (
     batch_specs,
     cache_specs,
@@ -25,4 +35,7 @@ __all__ = [
     "reshard_tree", "replan_for_mesh", "validate_divisibility",
     "quantize_int8", "dequantize_int8", "compressed_allreduce_mean",
     "ef_compress_tree", "ef_init",
+    "PagedKVCache", "pages_for", "max_pages_per_request", "kv_pool_bytes",
+    "Request", "Scheduler",
+    "PagedDecodeEngine", "paged_supported",
 ]

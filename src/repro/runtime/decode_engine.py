@@ -1,0 +1,355 @@
+"""Paged decode engine: the serving mirror of ``models.transformer.forward``.
+
+``forward(mode="decode")`` carries a dense per-request ``(B, Smax, KV, dh)``
+cache with one shared scalar position — fine for lockstep batch decode,
+wrong for continuous batching, where every slot sits at a different
+position and requests come and go mid-flight.  This engine runs the same
+block walk (cycle-major scan over the stacked layers, then the unrolled
+tail) against the PAGED cache of ``runtime.kv_cache``:
+
+  * attention is one :func:`repro.kernels.ops.flash_decode_op` launch per
+    layer — page-table-indirect, GQA-grouped, online-softmax in VMEM;
+  * q/k/v/o projections and the FFN run the decode-shape kernel
+    specializations (``btt_linear_decode_op`` / ``btt_ffn_decode_op``:
+    sublane-granule row tiles, half-factors pinned) when ``fused_decode``
+    and the shape fits VMEM, else the standard apply path;
+  * per-slot positions are a ``(n_slots,)`` vector — rope, learned and
+    sinusoidal position embeddings all take the slot's own position.
+
+The decode step's batch shape is ALWAYS ``(max_concurrency,)``: free slots
+ride along as masked lanes (token 0, length 0, KV writes routed to the
+trash page), so the jitted step compiles once, and — because every lane's
+math is row-independent at fixed shapes — a request decodes bit-identically
+whether it shares the batch or runs alone (the token-identity property
+``tests/test_scheduler.py`` asserts).
+
+One engine instance serves ONE config + param set; the scheduler decides
+which request occupies which slot.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.tt_linear import TTLinearParams
+from repro.models.layers import embedding_apply, linear_apply, rms_norm, rope
+from repro.models.transformer import forward
+from repro.runtime.kv_cache import PagedKVCache
+
+__all__ = ["PagedDecodeEngine", "paged_supported"]
+
+ATTN_KINDS = ("attn", "attn_moe", "attn_local")
+
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """True iff every block kind has a KV cache this engine can page
+    (ssm/rec state is O(1) per stream — nothing to page; those families
+    stay on the dense-cache serve path)."""
+    return all(k in ATTN_KINDS for k in cfg.hybrid_pattern)
+
+
+def _layout(cfg: ModelConfig):
+    """Static walk layout: per-block (kind, gid, offset) for the pattern
+    and the tail, plus per-group pat counts and window values."""
+    pat = cfg.hybrid_pattern
+    n_cycles = cfg.num_layers // len(pat)
+    tail = pat[: cfg.num_layers - n_cycles * len(pat)]
+    windows: dict[str, int | None] = {}
+    counts: dict[str, int] = {}
+
+    def classify(kinds):
+        info = []
+        for kind in kinds:
+            gid = "local" if kind == "attn_local" else "global"
+            windows[gid] = cfg.window if kind == "attn_local" else None
+            info.append((kind, gid, counts.get(gid, 0)))
+            counts[gid] = counts.get(gid, 0) + 1
+        return tuple(info)
+
+    pat_info = classify(pat)
+    n_pat = dict(counts)
+    counts = {g: 0 for g in counts}
+    tail_info = classify(tail)
+    n_tail = dict(counts)
+    return n_cycles, pat_info, tail_info, n_pat, n_tail, windows
+
+
+class PagedDecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, page_size: int,
+                 max_concurrency: int, max_len: int,
+                 fused_decode: bool = True, interpret: bool | None = None):
+        if not paged_supported(cfg):
+            raise ValueError(
+                f"paged decode needs attention-family blocks only, got "
+                f"{cfg.hybrid_pattern}")
+        self.cfg = cfg
+        self.params = params
+        self.fused = fused_decode
+        self.interpret = interpret
+        self.n_slots = max_concurrency
+        self.max_len = max_len
+        self.page_size = page_size
+        (self.n_cycles, self.pat_info, self.tail_info, self.n_pat,
+         self.n_tail, self.windows) = _layout(cfg)
+        dtype = jnp.dtype(cfg.dtype)
+        self.caches: dict[str, PagedKVCache] = {}
+        for gid, window in self.windows.items():
+            n_layers = (self.n_cycles * self.n_pat.get(gid, 0)
+                        + self.n_tail.get(gid, 0))
+            self.caches[gid] = PagedKVCache(
+                n_layers, cfg.n_kv_heads, cfg.d_head, page_size=page_size,
+                max_len=max_len, max_concurrency=max_concurrency,
+                window=window, dtype=dtype)
+        self._prefill_jit = jax.jit(partial(forward, mode="prefill",
+                                            remat=False),
+                                    static_argnames=("cfg", "mode", "remat"))
+        self._step_jit = jax.jit(self._decode_forward)
+
+    # -- projections (decode-shape kernel dispatch) ----------------------
+
+    def _lin(self, p, x: jax.Array) -> jax.Array:
+        """Decode-shape linear: ``btt_linear_decode_op`` for TT projections
+        under the kernel flow (sublane row tiles, forward-only), mirroring
+        ``tt_linear_apply``'s pad/slice/bias exactly; everything else runs
+        the standard apply."""
+        cfg = self.cfg
+        if (self.fused and cfg.tt.flow == "kernel"
+                and isinstance(p, TTLinearParams)):
+            from repro.kernels.ops import btt_linear_decode_op
+
+            lead = x.shape[:-1]
+            xk = x.reshape(-1, x.shape[-1])
+            if p.in_dim != p.spec.in_dim:
+                xk = jnp.pad(xk, ((0, 0), (0, p.spec.in_dim - p.in_dim)))
+            y = btt_linear_decode_op(p.cores, xk, p.spec,
+                                     interpret=self.interpret)
+            y = y[:, : p.out_dim].reshape(lead + (p.out_dim,))
+            if p.bias is not None:
+                y = y + p.bias
+            return y
+        return linear_apply(p, x, flow=cfg.tt.flow,
+                            fused_bwd=cfg.tt.fused_bwd)
+
+    def _mlp(self, p: dict, x: jax.Array) -> jax.Array:
+        """Decode-shape FFN: the megakernel at sublane row tiles when every
+        projection is TT (``btt_ffn_decode_op`` gates on VMEM internally),
+        else the unfused decode-linear walk — same math as
+        ``layers.mlp_apply``."""
+        cfg = self.cfg
+        gate = p.get("gate") if cfg.mlp_gated else None
+        mods = (p["up"], p["down"]) if gate is None else (p["up"], p["down"],
+                                                         gate)
+        if (self.fused and cfg.fused_ffn and cfg.tt.flow == "kernel"
+                and all(isinstance(m, TTLinearParams) and m.bias is None
+                        for m in mods)):
+            from repro.kernels.ops import btt_ffn_decode_op
+
+            up, down = p["up"], p["down"]
+            lead = x.shape[:-1]
+            xk = x.reshape(-1, x.shape[-1])
+            if up.in_dim != up.spec.in_dim:
+                xk = jnp.pad(xk, ((0, 0), (0, up.spec.in_dim - up.in_dim)))
+            y = btt_ffn_decode_op(
+                up.cores, down.cores,
+                gate.cores if gate is not None else None, xk,
+                up.spec, down.spec,
+                gate.spec if gate is not None else None, act=cfg.act,
+                f_logical=min(up.out_dim, down.in_dim),
+                interpret=self.interpret)
+            return y[:, : down.out_dim].reshape(lead + (down.out_dim,))
+        up_h = self._lin(p["up"], x)
+        if gate is not None:
+            g = self._lin(gate, x)
+            act = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+            h = act * up_h
+        else:
+            h = jax.nn.gelu(up_h) if cfg.act == "gelu" \
+                else jax.nn.silu(up_h)
+        return self._lin(p["down"], h)
+
+    # -- the jitted decode step ------------------------------------------
+
+    def _attn_block(self, p: dict, x: jax.Array, positions: jax.Array,
+                    pools: dict, views: dict, writes: dict, gid: str,
+                    li) -> tuple[jax.Array, dict]:
+        """One attention sub-block at decode: project, write this step's KV
+        column into the paged pool, flash-decode against it."""
+        from repro.kernels.ops import flash_decode_op
+
+        cfg = self.cfg
+        B = x.shape[0]
+        H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+        q = self._lin(p["q"], x).reshape(B, 1, H, dh)
+        k = self._lin(p["k"], x).reshape(B, 1, KV, dh)
+        v = self._lin(p["v"], x).reshape(B, 1, KV, dh)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if cfg.pos_embed == "rope":
+            q = rope(q, positions[:, None], cfg.rope_theta)
+            k = rope(k, positions[:, None], cfg.rope_theta)
+
+        k_pool, v_pool = pools[gid]
+        pids, rows = writes[gid]
+        # Scatter this step's KV column to each slot's (page, row) target;
+        # free slots write the trash page (see kv_cache.TRASH_PAGE).
+        k_pool = k_pool.at[li, pids, :, rows].set(
+            k[:, 0].astype(k_pool.dtype))
+        v_pool = v_pool.at[li, pids, :, rows].set(
+            v[:, 0].astype(v_pool.dtype))
+        table, lengths, pos0 = views[gid]
+        k_layer = jax.lax.dynamic_index_in_dim(k_pool, li, 0,
+                                               keepdims=False)
+        v_layer = jax.lax.dynamic_index_in_dim(v_pool, li, 0,
+                                               keepdims=False)
+        out = flash_decode_op(q[:, 0], k_layer, v_layer, table, lengths,
+                              pos0, window=self.windows[gid],
+                              use_kernel=self.fused,
+                              interpret=self.interpret)
+        out = out.reshape(B, 1, H * dh)
+        pools = dict(pools)
+        pools[gid] = (k_pool, v_pool)
+        return self._lin(p["o"], out), pools
+
+    def _block(self, kind: str, gid: str, blk: dict, h: jax.Array,
+               positions, pools, views, writes, li):
+        cfg = self.cfg
+        hn = rms_norm(h, blk["norm1"], cfg.norm_eps)
+        out, pools = self._attn_block(blk["attn"], hn, positions, pools,
+                                      views, writes, gid, li)
+        h = h + out
+        h2 = rms_norm(h, blk["norm2"], cfg.norm_eps)
+        if kind == "attn_moe":
+            from repro.models.moe import moe_apply
+
+            h = h + moe_apply(blk["moe"], h2, cfg)
+        else:
+            h = h + self._mlp(blk["mlp"], h2)
+        return h, pools
+
+    def _embed(self, params, tokens: jax.Array,
+               positions: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = embedding_apply(params["embed"], tokens)  # (B, 1, D)
+        if cfg.pos_embed == "learned":
+            h = h + jnp.take(params["pos_table"], positions,
+                             axis=0)[:, None]
+        elif cfg.pos_embed == "sinusoidal":
+            d = cfg.d_model
+            pos = positions[:, None].astype(jnp.float32)  # (B, 1)
+            div = jnp.exp(jnp.arange(0, d, 2, jnp.float32)
+                          * (-jnp.log(10000.0) / d))
+            pe = jnp.zeros((tokens.shape[0], d), jnp.float32)
+            pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+            pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+            h = h + pe.astype(h.dtype)[:, None]
+        return h
+
+    def _head(self, params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            if isinstance(params["embed"], dict):
+                table = params["embed"]["table"]
+            else:
+                from repro.core.tt import ttm_reconstruct
+
+                emb = params["embed"]
+                table = ttm_reconstruct(emb.cores, emb.spec)[
+                    : cfg.vocab_padded, : cfg.d_model].astype(h.dtype)
+            return jnp.einsum("bsd,vd->bsv", h, table,
+                              preferred_element_type=jnp.float32
+                              ).astype(h.dtype)
+        return self._lin(params["head"], h)
+
+    def _decode_forward(self, params, pools, views, writes, tokens,
+                        positions):
+        """One batched decode step: ``tokens (B, 1)``, ``positions (B,)``
+        -> (logits (B, Vp), new pools).  B is always ``n_slots``."""
+        h = self._embed(params, tokens, positions)
+
+        if self.n_cycles > 0:
+            def cycle(carry, layer_params):
+                hh, pools_c, idx = carry
+                for i, (kind, gid, off) in enumerate(self.pat_info):
+                    li = idx * self.n_pat[gid] + off
+                    hh, pools_c = self._block(kind, gid, layer_params[i],
+                                              hh, positions, pools_c,
+                                              views, writes, li)
+                return (hh, pools_c, idx + 1), None
+
+            (h, pools, _), _ = jax.lax.scan(
+                cycle, (h, pools, jnp.asarray(0, jnp.int32)),
+                params["layers"])
+
+        for i, (kind, gid, off) in enumerate(self.tail_info):
+            li = self.n_cycles * self.n_pat.get(gid, 0) + off
+            h, pools = self._block(kind, gid, params["tail"][i], h,
+                                   positions, pools, views, writes, li)
+
+        logits = self._head(params, h)
+        return logits[:, 0], pools
+
+    # -- host-side protocol ----------------------------------------------
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """Enough free pages in EVERY group for this prompt's prefill."""
+        return all(c.can_admit(min(prompt_len, self.max_len))
+                   for c in self.caches.values())
+
+    def prefill(self, slot: int, prompt) -> jax.Array:
+        """Prefill one request solo; page its KV; return last-position
+        logits ``(Vp,)``."""
+        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+        logits, cache = self._prefill_jit(self.params, self.cfg, tokens)
+        for gid, pc in self.caches.items():
+            k_rows, v_rows = self._group_rows(cache, gid)
+            pc.write_prefill(slot, k_rows, v_rows)
+        return logits[0, -1]
+
+    def _group_rows(self, cache, gid: str):
+        """Extract one group's per-layer contiguous KV from a prefill
+        cache, in the engine's walk order (cycle-major, tail last)."""
+        ks, vs = [], []
+        pat_idx = [i for i, (_, g, _) in enumerate(self.pat_info)
+                   if g == gid]
+        if self.n_cycles > 0 and pat_idx:
+            # each leaf (n_cycles, 1, S, KV, dh) -> (n_cycles, n_in_pat, ...)
+            kc = jnp.stack([cache["layers"][i]["k"] for i in pat_idx],
+                           axis=1)
+            vc = jnp.stack([cache["layers"][i]["v"] for i in pat_idx],
+                           axis=1)
+            L = self.n_cycles * len(pat_idx)
+            ks.append(kc.reshape((L,) + kc.shape[3:]))
+            vs.append(vc.reshape((L,) + vc.shape[3:]))
+        for i, (_, g, _) in enumerate(self.tail_info):
+            if g == gid:
+                ks.append(cache["tail"][i]["k"])
+                vs.append(cache["tail"][i]["v"])
+        return jnp.concatenate(ks, axis=0), jnp.concatenate(vs, axis=0)
+
+    def decode_step(self, tokens, positions) -> jax.Array:
+        """One continuous-batched decode step.  ``tokens``/``positions``
+        are ``(n_slots,)`` int (free slots: 0).  Returns logits
+        ``(n_slots, Vp)``."""
+        writes, views = {}, {}
+        for gid, c in self.caches.items():
+            writes[gid] = c.write_targets(self.n_slots)
+            views[gid] = c.device_view(self.n_slots)
+        pools = {gid: (c.k_pool, c.v_pool)
+                 for gid, c in self.caches.items()}
+        tokens = jnp.asarray(tokens, jnp.int32)[:, None]
+        positions = jnp.asarray(positions, jnp.int32)
+        logits, new_pools = self._step_jit(self.params, pools, views,
+                                           writes, tokens, positions)
+        for gid, (kp, vp) in new_pools.items():
+            self.caches[gid].k_pool = kp
+            self.caches[gid].v_pool = vp
+        return logits
+
+    def release(self, slot: int) -> None:
+        for c in self.caches.values():
+            c.free_slot(slot)

@@ -1,0 +1,234 @@
+"""Paged KV-cache manager for decode serving (vLLM-style, TT-scale).
+
+The paper's point is that a TT-compressed model's WEIGHTS live entirely in
+on-chip memory; at serving time the KV cache is the only state that grows,
+so it gets the allocator.  Physical memory is a pool of fixed-size pages
+``(n_layers, n_pages, KV, P, D)`` shared by every request; each request
+owns an ordered list of page ids (its page table) and a contiguous logical
+view ``[pos0, length)`` over them.  One :class:`PagedKVCache` instance
+covers one GROUP of layers that share a window value (global layers in one
+group, ``attn_local`` layers in another) — the layers of a group always
+have identical lengths, so one allocation covers all of them and page ids
+are shared down the layer axis.
+
+Host-side bookkeeping is plain Python (free-list stack, per-slot tables);
+device-side pools are functional JAX arrays the decode step threads
+through.  Physical page ids carry NO positional meaning: row ``i`` of
+table slot ``p`` is logical position ``pos0 + p*P + i`` — which is what
+makes decode output invariant to physical page order (property-tested in
+``tests/test_flash_decode.py``).
+
+Windowed layers get RING placement by whole pages: once every row of the
+oldest page falls outside the window (``pos0 + P <= length - window``) the
+page is freed back to the pool and ``pos0`` advances — the in-page tail
+between ``pos0`` and ``length - window`` is masked by the kernel, never
+copied.  Page 0 is reserved as the trash target: masked writes from free
+decode slots land there, so a dummy lane can never corrupt a live
+request's pages.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PagedKVCache", "pages_for", "max_pages_per_request",
+           "kv_pool_bytes"]
+
+TRASH_PAGE = 0
+
+
+def pages_for(rows: int, page_size: int) -> int:
+    """Pages needed to hold ``rows`` cache rows."""
+    return -(-rows // page_size)
+
+
+def max_pages_per_request(max_len: int, page_size: int,
+                         window: int | None) -> int:
+    """Page-table width for one request: a windowed group retains at most
+    ``window`` live rows + one partially-evicted page + one partially-
+    filled page."""
+    if window is None or window >= max_len:
+        return pages_for(max_len, page_size)
+    return min(pages_for(max_len, page_size),
+               pages_for(window, page_size) + 2)
+
+
+def kv_pool_bytes(n_layers: int, n_pages: int, kv_heads: int,
+                  page_size: int, d_head: int, itemsize: int) -> int:
+    """HBM footprint of one group's k+v pools (the ledger's DECODE kv row)."""
+    return 2 * n_layers * n_pages * kv_heads * page_size * d_head * itemsize
+
+
+class PagedKVCache:
+    """Fixed-page KV cache for one layer group.
+
+    ``slots`` are decode-slot indices (0..max_concurrency-1); the engine
+    keys everything by slot, the scheduler decides which request occupies
+    which slot.  All mutating methods are host-side bookkeeping only —
+    the device pools move exclusively through :meth:`write_prefill` /
+    :meth:`write_rows` (functional updates).
+    """
+
+    def __init__(self, n_layers: int, kv_heads: int, d_head: int, *,
+                 page_size: int, max_len: int, max_concurrency: int,
+                 window: int | None = None, dtype=jnp.float32):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.n_layers = n_layers
+        self.page_size = page_size
+        self.window = window
+        self.max_len = max_len
+        self.np_max = max_pages_per_request(max_len, page_size, window)
+        n_pages = 1 + max_concurrency * self.np_max  # +1: trash page
+        self.n_pages = n_pages
+        shape = (n_layers, n_pages, kv_heads, page_size, d_head)
+        self.k_pool = jnp.zeros(shape, dtype)
+        self.v_pool = jnp.zeros(shape, dtype)
+        # LIFO free list; page 0 (TRASH_PAGE) is never handed out.
+        self._free: list[int] = list(range(n_pages - 1, TRASH_PAGE, -1))
+        self._tables: dict[int, list[int]] = {}
+        self._lengths: dict[int, int] = {}
+        self._pos0: dict[int, int] = {}
+
+    # -- bookkeeping -----------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def pages_in_use(self) -> set[int]:
+        return {p for t in self._tables.values() for p in t}
+
+    def table(self, slot: int) -> list[int]:
+        return list(self._tables[slot])
+
+    def length(self, slot: int) -> int:
+        return self._lengths[slot]
+
+    def pos0(self, slot: int) -> int:
+        return self._pos0[slot]
+
+    def can_admit(self, prompt_len: int) -> bool:
+        """True iff a fresh request with this prompt can be allocated now
+        (admission control — the scheduler asks before admitting)."""
+        return len(self._free) >= pages_for(max(prompt_len, 1),
+                                            self.page_size)
+
+    def alloc(self, slot: int, n_rows: int) -> list[int]:
+        """Claim pages for a fresh request holding ``n_rows`` rows."""
+        if slot in self._tables:
+            raise ValueError(f"slot {slot} already allocated")
+        need = pages_for(max(n_rows, 1), self.page_size)
+        if need > len(self._free):
+            raise MemoryError(f"need {need} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._tables[slot] = pages
+        self._lengths[slot] = n_rows
+        self._pos0[slot] = 0
+        return list(pages)
+
+    def append_target(self, slot: int) -> tuple[int, int]:
+        """Grow the slot's view by one row; return the physical
+        ``(page_id, row)`` the new KV column must be written to.  Allocates
+        a fresh page on a page boundary; windowed groups then retire every
+        page that fell wholly out of the window (ring placement)."""
+        length = self._lengths[slot]
+        pos0 = self._pos0[slot]
+        held = length - pos0
+        if held == len(self._tables[slot]) * self.page_size:
+            if not self._free:
+                raise MemoryError("page pool exhausted")
+            self._tables[slot].append(self._free.pop())
+        pid = self._tables[slot][held // self.page_size]
+        row = held % self.page_size
+        self._lengths[slot] = length + 1
+        if self.window is not None:
+            self._evict_out_of_window(slot)
+        return pid, row
+
+    def _evict_out_of_window(self, slot: int) -> None:
+        while (self._pos0[slot] + self.page_size
+               <= self._lengths[slot] - self.window):
+            self._free.append(self._tables[slot].pop(0))
+            self._pos0[slot] += self.page_size
+
+    def free_slot(self, slot: int) -> None:
+        """Return every page the slot holds (request finished/evicted)."""
+        for p in self._tables.pop(slot):
+            self._free.append(p)
+        del self._lengths[slot]
+        del self._pos0[slot]
+
+    def device_view(self, n_slots: int) -> tuple[jax.Array, jax.Array,
+                                                 jax.Array]:
+        """(page_table (n_slots, np_max), lengths, pos0) int32 — the
+        scalar-prefetch operands of one flash-decode launch.  Unoccupied
+        slots read length 0 and the trash page (never touched: every page
+        is dead at length 0)."""
+        table = np.full((n_slots, self.np_max), TRASH_PAGE, np.int32)
+        lengths = np.zeros((n_slots,), np.int32)
+        pos0 = np.zeros((n_slots,), np.int32)
+        for slot, pages in self._tables.items():
+            table[slot, : len(pages)] = pages
+            lengths[slot] = self._lengths[slot]
+            pos0[slot] = self._pos0[slot]
+        return jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(pos0)
+
+    def write_targets(self, n_slots: int) -> tuple[jax.Array, jax.Array]:
+        """(page_ids (n_slots,), rows (n_slots,)) int32 for THIS step's KV
+        column, calling :meth:`append_target` on every occupied slot.
+        Free slots target the trash page."""
+        pids = np.full((n_slots,), TRASH_PAGE, np.int32)
+        rows = np.zeros((n_slots,), np.int32)
+        for slot in sorted(self._tables):
+            pids[slot], rows[slot] = self.append_target(slot)
+        return jnp.asarray(pids), jnp.asarray(rows)
+
+    # -- device pools (functional) ---------------------------------------
+
+    def write_prefill(self, slot: int, k_rows: jax.Array,
+                      v_rows: jax.Array) -> None:
+        """Load a prefill's KV into freshly allocated pages.
+
+        ``k_rows``/``v_rows (n_layers, S, KV, D)`` — the contiguous cache a
+        prefill forward produced for this group's layers, walk order.
+        Allocates, scatters whole pages, then ring-retires anything already
+        outside the window.
+        """
+        S = k_rows.shape[1]
+        pages = self.alloc(slot, S)
+        self.k_pool = _scatter_pages(self.k_pool, k_rows, pages,
+                                     self.page_size)
+        self.v_pool = _scatter_pages(self.v_pool, v_rows, pages,
+                                     self.page_size)
+        if self.window is not None:
+            self._evict_out_of_window(slot)
+
+    def gather(self, slot: int) -> tuple[jax.Array, jax.Array]:
+        """(k, v) ``(n_layers, length - pos0, KV, D)`` — the slot's logical
+        contiguous view reconstructed from its pages (test oracle for the
+        logical→physical mapping; production never materializes this)."""
+        pages = self._tables[slot]
+        length, pos0 = self._lengths[slot], self._pos0[slot]
+        ks = self.k_pool[:, pages]   # (L, n, KV, P, D)
+        vs = self.v_pool[:, pages]
+
+        def flat(x):
+            L, n, KV, P, D = x.shape
+            rows = x.transpose(0, 1, 3, 2, 4).reshape(L, n * P, KV, D)
+            return rows[:, : length - pos0]
+
+        return flat(ks), flat(vs)
+
+
+def _scatter_pages(pool: jax.Array, rows: jax.Array, pages: list[int],
+                   page_size: int) -> jax.Array:
+    """Write contiguous rows ``(L, S, KV, D)`` into ``pages`` of
+    ``pool (L, NP, KV, P, D)`` (tail of the last page zero-padded)."""
+    L, S, KV, D = rows.shape
+    n = len(pages)
+    padded = jnp.pad(rows, ((0, 0), (0, n * page_size - S), (0, 0), (0, 0)))
+    vals = padded.reshape(L, n, page_size, KV, D).transpose(0, 1, 3, 2, 4)
+    return pool.at[:, jnp.asarray(pages, jnp.int32)].set(
+        vals.astype(pool.dtype))

@@ -1,0 +1,151 @@
+"""Continuous-batching scheduler for decode serving.
+
+Pure policy, no model: the serve loop (``launch/serve.py``) owns the
+engine; this module decides WHO runs WHERE and WHEN.  The shape of the
+loop is the standard continuous-batching one:
+
+  1. ``admit()``       — FIFO-admit waiting requests into free decode
+                         slots, gated by the engine's admission check
+                         (enough free KV pages for the prompt).  Each
+                         admission is prefilled SOLO before joining the
+                         decode batch — prefill/decode disaggregation: a
+                         long prompt never stalls the running streams'
+                         steady decode cadence inside a mixed batch.
+  2. engine decode     — ONE batched step over every running slot.
+  3. ``observe()``     — per slot: record the sampled token; retire the
+                         request on EOS or its token budget (``finished``)
+                         or evict it when the engine ran out of pages
+                         (``evicted``) — each admitted request leaves
+                         exactly once (conservation, property-tested).
+
+Fairness under oversubscription is FIFO by arrival: a request is never
+overtaken by a later one at admission time, and a retired slot is refilled
+from the queue head on the next ``admit()`` — no slot starves while work
+waits (asserted over random arrival/EOS traces in
+``tests/test_scheduler.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable
+
+__all__ = ["Request", "Scheduler"]
+
+WAITING, RUNNING, FINISHED, EVICTED = ("waiting", "running", "finished",
+                                       "evicted")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    eos_id: int | None = None
+    state: str = WAITING
+    slot: int | None = None
+    out: list[int] = dataclasses.field(default_factory=list)
+    arrived_step: int = 0
+    admitted_step: int | None = None
+    done_step: int | None = None
+
+
+class Scheduler:
+    """Slot assignment + request lifecycle for one serve loop."""
+
+    def __init__(self, max_concurrency: int):
+        if max_concurrency < 1:
+            raise ValueError("max_concurrency must be >= 1")
+        self.max_concurrency = max_concurrency
+        self.slots: list[Request | None] = [None] * max_concurrency
+        self.waiting: deque[Request] = deque()
+        self.retired: list[Request] = []
+        self.step = 0
+
+    # -- intake ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.state = WAITING
+        req.arrived_step = self.step
+        self.waiting.append(req)
+
+    def submit_all(self, reqs: Iterable[Request]) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    # -- loop protocol ---------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(r is not None for r in self.slots)
+
+    def running(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def admit(self, can_admit=None) -> list[Request]:
+        """Move queue-head requests into free slots, in arrival order.
+
+        ``can_admit(req) -> bool`` is the engine's admission gate (page
+        availability).  Admission stops at the first refused request —
+        skipping it for a cheaper later one would un-FIFO the queue and
+        can starve a long prompt forever.
+        """
+        admitted = []
+        for slot in range(self.max_concurrency):
+            if self.slots[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            if can_admit is not None and not can_admit(req):
+                break
+            self.waiting.popleft()
+            req.state = RUNNING
+            req.slot = slot
+            req.admitted_step = self.step
+            self.slots[slot] = req
+            admitted.append(req)
+        return admitted
+
+    def observe(self, slot: int, token: int) -> Request | None:
+        """Record one decoded token for the request in ``slot``; retire it
+        on EOS or budget.  Returns the request iff it just retired (its
+        slot is then free for the next ``admit()``)."""
+        req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"observe on empty slot {slot}")
+        req.out.append(token)
+        done = (len(req.out) >= req.max_new
+                or (req.eos_id is not None and token == req.eos_id))
+        if done:
+            return self._retire(slot, FINISHED)
+        return None
+
+    def evict(self, slot: int) -> Request:
+        """Forcibly retire (engine out of pages, shutdown, ...)."""
+        return self._retire(slot, EVICTED)
+
+    def _retire(self, slot: int, state: str) -> Request:
+        req = self.slots[slot]
+        self.slots[slot] = None
+        req.state = state
+        req.slot = None
+        req.done_step = self.step
+        self.retired.append(req)
+        return req
+
+    def end_step(self) -> None:
+        self.step += 1
+
+    # -- reporting -------------------------------------------------------
+
+    def report(self) -> dict:
+        fin = [r for r in self.retired if r.state == FINISHED]
+        ev = [r for r in self.retired if r.state == EVICTED]
+        waits = [r.admitted_step - r.arrived_step for r in self.retired
+                 if r.admitted_step is not None]
+        return {
+            "steps": self.step,
+            "finished": len(fin),
+            "evicted": len(ev),
+            "tokens_out": sum(len(r.out) for r in self.retired),
+            "max_wait_steps": max(waits) if waits else 0,
+            "still_waiting": len(self.waiting),
+        }

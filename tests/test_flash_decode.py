@@ -1,0 +1,253 @@
+"""Flash-decode Pallas kernel vs its oracles.
+
+Three tiers of equality, matching the kernel's design contract:
+
+* BIT-equality against a dense single-query softmax on unpadded
+  single-tile shapes (G=8, D=128, one page) — at one grid step the online
+  update degenerates to exactly the dense primitive sequence;
+* BIT-equality against ``paged_decode_ref`` everywhere (the reference
+  executes the identical primitive order, so kernel, fallback, and the
+  ``flash_decode_op`` VMEM-budget fallback must agree to the last ulp);
+* tolerance against an independent plain-softmax reference on ragged,
+  windowed, multi-page, permuted-page cases (math, not just plumbing).
+
+Physical page ids carry no positional meaning, so decode output must be
+invariant to page-table permutation — asserted bitwise.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels.flash_decode import (
+    NEG_INF,
+    flash_decode_pallas,
+    paged_decode_ref,
+)
+from repro.kernels.ops import flash_decode_op
+
+
+def build_case(seed, *, B, KV, G, D, P, lengths, pos0, n_spare_pages=0,
+               perm_seed=None, dtype=jnp.float32):
+    """Random paged case.  Returns (q, k_pool, v_pool, table, lengths,
+    pos0, dense) where ``dense[b] = (k_rows, v_rows)`` is request b's
+    logical contiguous view ``[pos0, length)`` of shape (KV, held, D)."""
+    rng = np.random.RandomState(seed)
+    lengths = np.asarray(lengths, np.int32)
+    pos0 = np.asarray(pos0, np.int32)
+    held = lengths - pos0
+    n_pages = [-(-int(h) // P) for h in held]
+    np_max = max(max(n_pages), 1)
+    NP = 1 + sum(n_pages) + n_spare_pages
+    ids = list(range(1, NP))
+    if perm_seed is not None:
+        np.random.RandomState(perm_seed).shuffle(ids)
+    k_pool = rng.randn(NP, KV, P, D).astype(dtype)   # junk everywhere:
+    v_pool = rng.randn(NP, KV, P, D).astype(dtype)   # dead rows must not
+    table = np.zeros((B, np_max), np.int32)          # leak into the math
+    dense = []
+    take = 0
+    for b in range(B):
+        h = int(held[b])
+        kr = rng.randn(KV, h, D).astype(dtype)
+        vr = rng.randn(KV, h, D).astype(dtype)
+        dense.append((kr, vr))
+        pages = ids[take: take + n_pages[b]]
+        take += n_pages[b]
+        table[b, : len(pages)] = pages
+        pad = len(pages) * P - h
+        kp = np.pad(kr, ((0, 0), (0, pad), (0, 0))).reshape(
+            KV, len(pages), P, D).transpose(1, 0, 2, 3)
+        vp = np.pad(vr, ((0, 0), (0, pad), (0, 0))).reshape(
+            KV, len(pages), P, D).transpose(1, 0, 2, 3)
+        k_pool[pages] = kp
+        v_pool[pages] = vp
+    q = rng.randn(B, KV, G, D).astype(dtype)
+    return (jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+            jnp.asarray(table), jnp.asarray(lengths), jnp.asarray(pos0),
+            dense)
+
+
+def plain_softmax_ref(q, dense, lengths, pos0, window):
+    """Independent dense reference: plain f32 softmax over each request's
+    logical rows (no online update, no paging)."""
+    B, KV, G, D = q.shape
+    out = np.zeros((B, KV, G, D), np.float32)
+    for b in range(B):
+        kr, vr = dense[b]
+        held = int(lengths[b]) - int(pos0[b])
+        positions = int(pos0[b]) + np.arange(held)
+        valid = positions < int(lengths[b])
+        if window is not None:
+            valid &= positions >= int(lengths[b]) - window
+        for h in range(KV):
+            s = (np.asarray(q[b, h], np.float32) @
+                 np.asarray(kr[h, :held], np.float32).T) / math.sqrt(D)
+            s[:, ~valid] = -np.inf
+            p = np.exp(s - s.max(axis=1, keepdims=True))
+            p /= p.sum(axis=1, keepdims=True)
+            out[b, h] = p @ np.asarray(vr[h, :held], np.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: bit-equality vs the dense single-query softmax, single tile.
+# ---------------------------------------------------------------------------
+
+
+def dense_single_tile(q, k, v, length, window, scale):
+    """The kernel's exact primitive sequence at one grid step: dense
+    single-query softmax written with the same ops in the same order."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    lpos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = lpos < length
+    if window is not None:
+        mask &= lpos >= length - window
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.maximum(jnp.full_like(s[:, :1], NEG_INF),
+                    s.max(axis=1, keepdims=True))
+    pr = jnp.exp(s - m)
+    l = pr.sum(axis=1, keepdims=True)
+    acc = jax.lax.dot_general(pr.astype(v.dtype), v,
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("length", [8, 3])
+def test_bit_equal_dense_single_tile(window, length):
+    B, KV, G, D, P = 2, 2, 8, 128, 8
+    q, kp, vp, table, lengths, pos0, dense = build_case(
+        0, B=B, KV=KV, G=G, D=D, P=P, lengths=[length] * B, pos0=[0] * B)
+    out = flash_decode_pallas(q, kp, vp, table, lengths, pos0,
+                              window=window, interpret=True)
+    scale = 1.0 / math.sqrt(D)
+    for b in range(B):
+        for h in range(KV):
+            page = int(table[b, 0])
+            ref = dense_single_tile(q[b, h], kp[page, h], vp[page, h],
+                                    length, window, scale)
+            np.testing.assert_array_equal(np.asarray(out[b, h]),
+                                          np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: bitwise kernel/reference/fallback parity on hard layouts.
+# ---------------------------------------------------------------------------
+
+
+PARITY_CASES = [
+    # (B, KV, G, D, P, lengths, pos0, window)
+    (2, 2, 1, 64, 8, [17, 9], [0, 0], None),       # MHA, ragged tails
+    (2, 2, 4, 64, 8, [24, 5], [0, 0], None),       # GQA groups
+    (3, 1, 8, 128, 16, [40, 33, 16], [0, 0, 0], None),  # unpadded tile
+    (2, 2, 2, 64, 8, [30, 21], [16, 8], 12),       # windowed, ring pos0
+    (2, 1, 3, 48, 8, [19, 8], [0, 0], 7),          # ragged G and D
+]
+
+
+@pytest.mark.parametrize("case", PARITY_CASES)
+def test_kernel_vs_paged_ref_bitwise(case):
+    B, KV, G, D, P, lengths, pos0, window = case
+    q, kp, vp, table, lengths, pos0, dense = build_case(
+        1, B=B, KV=KV, G=G, D=D, P=P, lengths=lengths, pos0=pos0,
+        n_spare_pages=2)
+    out = flash_decode_pallas(q, kp, vp, table, lengths, pos0,
+                              window=window, interpret=True)
+    ref = paged_decode_ref(q, kp, vp, table, lengths, pos0, window=window)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # and the math is right, not just self-consistent:
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        plain_softmax_ref(q, dense, lengths, pos0, window),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_op_fallback_bitwise_parity():
+    """flash_decode_op: kernel path, explicit ref path, and the
+    VMEM-budget-forced fallback must agree bitwise."""
+    B, KV, G, D, P = 2, 2, 4, 64, 8
+    q, kp, vp, table, lengths, pos0, _ = build_case(
+        2, B=B, KV=KV, G=G, D=D, P=P, lengths=[20, 11], pos0=[0, 0])
+    qh = q.reshape(B, KV * G, D)
+    kern = flash_decode_op(qh, kp, vp, table, lengths, pos0,
+                           use_kernel=True, interpret=True)
+    ref = flash_decode_op(qh, kp, vp, table, lengths, pos0,
+                          use_kernel=False)
+    forced = flash_decode_op(qh, kp, vp, table, lengths, pos0,
+                             use_kernel=True, budget=1)  # nothing fits
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(forced), np.asarray(ref))
+
+
+def test_page_permutation_invariance():
+    """Same logical KV content in two different physical page layouts ->
+    bitwise-identical decode output (page ids carry no positional
+    meaning)."""
+    kwargs = dict(B=3, KV=2, G=4, D=64, P=8, lengths=[26, 13, 8],
+                  pos0=[0, 0, 0], n_spare_pages=3)
+    a = build_case(3, perm_seed=None, **kwargs)
+    b = build_case(3, perm_seed=123, **kwargs)
+    # same logical content by construction (same data seed):
+    for (ka, va), (kb, vb) in zip(a[6], b[6]):
+        np.testing.assert_array_equal(ka, kb)
+    out_a = flash_decode_pallas(*a[:6], window=None, interpret=True)
+    out_b = flash_decode_pallas(*b[:6], window=None, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_b))
+
+
+def test_dead_slot_zero_length():
+    """length-0 lanes (free decode slots pointing at the trash page) must
+    produce finite output and not disturb live lanes."""
+    B, KV, G, D, P = 2, 1, 2, 32, 8
+    q, kp, vp, table, lengths, pos0, dense = build_case(
+        4, B=B, KV=KV, G=G, D=D, P=P, lengths=[12, 9], pos0=[0, 0])
+    lengths = jnp.asarray([12, 0], jnp.int32)   # lane 1 goes dead
+    table = table.at[1].set(0)
+    out = flash_decode_pallas(q, kp, vp, table, lengths, pos0,
+                              window=None, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    solo = flash_decode_pallas(q[:1], kp, vp, table[:1], lengths[:1],
+                               pos0[:1], window=None, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(solo[0]))
+
+
+# ---------------------------------------------------------------------------
+# Tier 3: property sweep (skipped when hypothesis is not installed).
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    g=st.sampled_from([1, 2, 4, 8]),
+    b=st.integers(1, 3),
+    p=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+    window=st.none() | st.integers(2, 20),
+    data=st.data(),
+)
+def test_paged_sweep(g, b, p, seed, window, data):
+    kv = data.draw(st.sampled_from([1, 2]))
+    d = data.draw(st.sampled_from([16, 32, 64]))
+    lengths = [data.draw(st.integers(1, 4 * p)) for _ in range(b)]
+    pos0 = [0] * b
+    if window is not None:
+        # ring-evicted start: whole pages wholly outside the window
+        pos0 = [max(0, (ln - window) // p * p) for ln in lengths]
+    q, kp, vp, table, lengths, pos0, dense = build_case(
+        seed, B=b, KV=kv, G=g, D=d, P=p, lengths=lengths, pos0=pos0,
+        n_spare_pages=data.draw(st.integers(0, 3)),
+        perm_seed=data.draw(st.none() | st.integers(0, 100)))
+    out = flash_decode_pallas(q, kp, vp, table, lengths, pos0,
+                              window=window, interpret=True)
+    ref = paged_decode_ref(q, kp, vp, table, lengths, pos0, window=window)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        plain_softmax_ref(q, dense, lengths, pos0, window),
+        rtol=3e-5, atol=3e-5)

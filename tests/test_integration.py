@@ -161,6 +161,81 @@ def test_microbatch_accumulation_parity():
                                    rtol=2e-5, atol=2e-6)
 
 
+def _teacher_forced_engine_check(cfg, *, prompt_len=6, gen=5, page_size=4,
+                                 rtol=5e-4, atol=5e-5):
+    """Prefill->decode through the paged engine, teacher-forced with the
+    ground-truth next tokens, must reproduce the full-sequence training
+    forward's logits position by position (tolerance: different tile
+    accumulation orders; argmax exact)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import init_params
+    from repro.models.transformer import forward
+    from repro.runtime import PagedDecodeEngine
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    tokens = rng.randint(1, cfg.vocab_size,
+                         size=(1, prompt_len + gen)).astype(np.int32)
+    full_logits, _ = forward(params, cfg, jnp.asarray(tokens),
+                             mode="train", remat=False)
+    ref = np.asarray(full_logits[0], np.float32)
+
+    eng = PagedDecodeEngine(cfg, params, page_size=page_size,
+                            max_concurrency=2,
+                            max_len=prompt_len + gen + 1,
+                            fused_decode=False)
+    slot = 1    # off-zero slot: layout must not assume slot 0
+    got = [np.asarray(eng.prefill(slot, tokens[0, :prompt_len]))]
+    toks = np.zeros((2,), np.int32)
+    poss = np.zeros((2,), np.int32)
+    for t in range(gen):
+        toks[slot] = tokens[0, prompt_len + t]
+        poss[slot] = prompt_len + t
+        logits = eng.decode_step(toks, poss)
+        got.append(np.asarray(logits[slot], np.float32))
+    for i, g in enumerate(got):
+        pos = prompt_len - 1 + i
+        np.testing.assert_allclose(g, ref[pos], rtol=rtol, atol=atol)
+        assert (int(g[: cfg.vocab_size].argmax())
+                == int(ref[pos, : cfg.vocab_size].argmax())), pos
+    eng.release(slot)
+
+
+@pytest.mark.parametrize("family", ["global", "local", "tt-kernel"])
+def test_engine_teacher_forced_matches_training_forward(family):
+    """Paged decode engine == training forward, per KV-cache family:
+    global GQA attention, windowed attn_local (ring eviction), and the
+    TT kernel-flow projection path."""
+    import dataclasses
+    from repro.configs import get_config
+
+    cfg = get_config("llama3-8b").scaled_down()
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if family == "local":
+        cfg = dataclasses.replace(cfg,
+                                  hybrid_pattern=("attn", "attn_local"),
+                                  window=6)
+    elif family == "tt-kernel":
+        cfg = cfg.with_tt(mode="tt", rank=8, embed_rank=8, flow="kernel")
+    _teacher_forced_engine_check(cfg)
+
+
+def test_serve_driver_paged_continuous_batching():
+    """Paged serve path end to end on CPU: oversubscribed queue (3
+    requests, 2 slots) drains with every request finished."""
+    from repro.launch.serve import main
+    out = main(["--arch", "llama3-8b", "--scale-down", "--tt",
+                "--kernel-flow", "--batch", "3", "--prompt-len", "12",
+                "--gen", "4", "--max-concurrency", "2",
+                "--page-size", "4"])
+    assert out["mode"] == "paged"
+    assert out["tokens"].shape == (3, 4)
+    assert np.isfinite(out["tokens"]).all()
+    assert out["report"]["finished"] == 3
+    assert out["report"]["evicted"] == 0
+
+
 def test_atis_task_learns():
     """Short tensor-compressed ATIS run: joint loss drops substantially."""
     import jax

@@ -1,0 +1,237 @@
+"""Paged KV-cache invariants: the allocator and the logical<->physical map.
+
+Oracles:
+
+* conservation — over any alloc/append/free trace, {free} ∪ {in use} is a
+  partition of pages 1..NP-1 and ``TRASH_PAGE`` is never handed out;
+* ``gather`` is the inverse of ``write_prefill`` — bitwise;
+* appended rows land where ``gather`` says they do: a dense per-slot
+  logical stream replayed through ``append_target`` reconstructs exactly,
+  and windowed groups retain precisely the suffix ring eviction promises
+  (every page freed only when wholly outside the window);
+* ``device_view``/``write_targets`` route free slots at the trash page.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.runtime.kv_cache import (
+    TRASH_PAGE,
+    PagedKVCache,
+    max_pages_per_request,
+    pages_for,
+)
+
+L, KV, D = 2, 2, 4   # small but non-degenerate pool shape
+
+
+def make_cache(**kw):
+    kw.setdefault("page_size", 4)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("max_concurrency", 3)
+    return PagedKVCache(L, KV, D, **kw)
+
+
+def check_conservation(c):
+    """Free list and tables partition pages {1..NP-1}; trash never owned."""
+    free = set(c._free)
+    used = c.pages_in_use()
+    assert len(c._free) == len(free), "double entry in free list"
+    assert not free & used, "page both free and in use"
+    assert free | used == set(range(1, c.n_pages)), "page leaked"
+    assert TRASH_PAGE not in used
+    per_slot = [p for t in c._tables.values() for p in t]
+    assert len(per_slot) == len(set(per_slot)), "page owned by two slots"
+
+
+def rows_like(rng, s):
+    return jnp.asarray(rng.randn(L, s, KV, D).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Allocator bookkeeping.
+# ---------------------------------------------------------------------------
+
+
+def test_pages_for_and_table_width():
+    assert pages_for(1, 4) == 1 and pages_for(4, 4) == 1
+    assert pages_for(5, 4) == 2
+    assert max_pages_per_request(32, 4, None) == 8
+    # window 6 -> 2 pages of live rows + partially-evicted + partial tail
+    assert max_pages_per_request(32, 4, 6) == 4
+    # a window covering max_len degenerates to the unwindowed width
+    assert max_pages_per_request(8, 4, 100) == 2
+
+
+def test_alloc_free_roundtrip():
+    c = make_cache()
+    total = c.n_free
+    pages = c.alloc(0, 9)          # 3 pages of 4
+    assert len(pages) == 3 and TRASH_PAGE not in pages
+    assert c.n_free == total - 3
+    check_conservation(c)
+    with pytest.raises(ValueError):
+        c.alloc(0, 1)              # slot already allocated
+    c.free_slot(0)
+    assert c.n_free == total
+    check_conservation(c)
+
+
+def test_alloc_exhaustion_and_can_admit():
+    c = make_cache(max_concurrency=1, max_len=8)   # 1 + 2 pages
+    assert c.can_admit(8) and not c.can_admit(9)
+    c.alloc(0, 8)
+    assert not c.can_admit(1)
+    with pytest.raises(MemoryError):
+        c.alloc(1, 1)
+    check_conservation(c)
+
+
+def test_append_target_walks_rows_then_pages():
+    c = make_cache()
+    c.alloc(0, 1)
+    first = c.table(0)[0]
+    targets = [c.append_target(0) for _ in range(6)]
+    # rows 1..3 fill page 1, then a fresh page takes rows 0..2
+    assert [r for _, r in targets] == [1, 2, 3, 0, 1, 2]
+    assert all(p == first for p, _ in targets[:3])
+    second = targets[3][0]
+    assert second != first and all(p == second for p, _ in targets[3:])
+    assert c.length(0) == 7
+    check_conservation(c)
+
+
+def test_device_view_and_write_targets_route_free_slots_to_trash():
+    c = make_cache()
+    c.alloc(1, 5)
+    table, lengths, pos0 = c.device_view(3)
+    assert table.shape == (3, c.np_max)
+    assert int(lengths[0]) == 0 and int(lengths[2]) == 0
+    assert (np.asarray(table[0]) == TRASH_PAGE).all()
+    assert np.array_equal(np.asarray(table[1, :2]), c.table(1))
+    pids, rows = c.write_targets(3)
+    assert int(pids[0]) == TRASH_PAGE and int(pids[2]) == TRASH_PAGE
+    assert int(pids[1]) == c.table(1)[1] and int(rows[1]) == 1
+    assert c.length(1) == 6
+
+
+# ---------------------------------------------------------------------------
+# Logical <-> physical mapping.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("s", [1, 4, 7, 12])
+def test_gather_inverts_write_prefill(s):
+    rng = np.random.RandomState(s)
+    c = make_cache()
+    k, v = rows_like(rng, s), rows_like(rng, s)
+    c.write_prefill(0, k, v)
+    gk, gv = c.gather(0)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(v))
+    check_conservation(c)
+
+
+def _append_column(c, slot, kcol, vcol):
+    """One decode step's KV write, the way the engine scatters it."""
+    pid, row = c.append_target(slot)
+    c.k_pool = c.k_pool.at[:, pid, :, row].set(kcol)
+    c.v_pool = c.v_pool.at[:, pid, :, row].set(vcol)
+
+
+@pytest.mark.parametrize("window", [None, 6])
+def test_appended_stream_reconstructs(window):
+    """Dense oracle: prefill + appended rows == a plain logical stream;
+    windowed caches retain exactly the ring suffix."""
+    rng = np.random.RandomState(0)
+    c = make_cache(window=window, max_len=64)
+    stream_k = rows_like(rng, 5)
+    stream_v = rows_like(rng, 5)
+    c.write_prefill(0, stream_k, stream_v)
+    for _ in range(17):
+        kcol, vcol = rows_like(rng, 1)[:, 0], rows_like(rng, 1)[:, 0]
+        _append_column(c, 0, kcol, vcol)
+        stream_k = jnp.concatenate([stream_k, kcol[:, None]], axis=1)
+        stream_v = jnp.concatenate([stream_v, vcol[:, None]], axis=1)
+        length, pos0 = c.length(0), c.pos0(0)
+        assert length == stream_k.shape[1]
+        if window is None:
+            assert pos0 == 0
+        else:
+            # every retained page still holds >= 1 in-window row, and the
+            # whole window is retained
+            assert pos0 % c.page_size == 0
+            assert pos0 <= length - window < pos0 + c.page_size
+        gk, gv = c.gather(0)
+        np.testing.assert_array_equal(np.asarray(gk),
+                                      np.asarray(stream_k[:, pos0:]))
+        np.testing.assert_array_equal(np.asarray(gv),
+                                      np.asarray(stream_v[:, pos0:]))
+        check_conservation(c)
+
+
+def test_ring_eviction_bounds_pages_held():
+    """A windowed slot's page count never exceeds the advertised
+    max_pages_per_request, no matter how long it decodes."""
+    c = make_cache(window=6, max_len=256, max_concurrency=1)
+    c.alloc(0, 1)
+    for _ in range(200):
+        c.append_target(0)
+        assert len(c.table(0)) <= c.np_max
+    assert c.np_max == max_pages_per_request(256, 4, 6)
+    check_conservation(c)
+
+
+def test_trash_page_isolated_from_prefill():
+    """Prefill scatter touches only the pages it allocated."""
+    rng = np.random.RandomState(1)
+    c = make_cache()
+    before = np.asarray(c.k_pool[:, TRASH_PAGE])
+    c.write_prefill(0, rows_like(rng, 6), rows_like(rng, 6))
+    np.testing.assert_array_equal(np.asarray(c.k_pool[:, TRASH_PAGE]),
+                                  before)
+    untouched = sorted(set(range(c.n_pages)) - set(c.table(0)))
+    assert not np.asarray(c.k_pool[:, untouched]).any()
+
+
+# ---------------------------------------------------------------------------
+# Property sweep: random traces (skipped without hypothesis).
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), window=st.none() | st.integers(3, 12),
+       data=st.data())
+def test_random_trace_conservation(seed, window, data):
+    rng = np.random.RandomState(seed)
+    c = make_cache(window=window, max_len=48, max_concurrency=4)
+    live: dict[int, int] = {}   # slot -> logical length
+    for _ in range(data.draw(st.integers(5, 40))):
+        ops = ["append", "free"] if live else []
+        if len(live) < 4:
+            ops.append("alloc")
+        op = data.draw(st.sampled_from(ops))
+        if op == "alloc":
+            slot = min(set(range(4)) - set(live))
+            n = data.draw(st.integers(1, 10))
+            if c.can_admit(n):
+                c.alloc(slot, n)
+                live[slot] = n
+        elif op == "append":
+            slot = data.draw(st.sampled_from(sorted(live)))
+            try:
+                c.append_target(slot)
+                live[slot] += 1
+            except MemoryError:
+                pass    # pool full is legal; state must stay consistent
+        else:
+            slot = data.draw(st.sampled_from(sorted(live)))
+            c.free_slot(slot)
+            del live[slot]
+        check_conservation(c)
+        for slot, n in live.items():
+            assert c.length(slot) == n
+    for slot in sorted(live):
+        c.free_slot(slot)
+    assert c.n_free == c.n_pages - 1

@@ -407,3 +407,86 @@ def test_sketched_state_matches_optimizer_init():
     led = training_step_ledger(cfg, "adamw", batch=BATCH, seq=SEQ,
                                sketched=True)
     assert led["PU"].entry("moments").nbytes == state_bytes
+
+
+# ---------------------------------------------------------------------------
+# DECODE stage (serving): paged-KV ledger.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_enc", [2, 4, 6])
+def test_decode_ledger_fits_envelope(n_enc):
+    """Acceptance: every shipped ATIS config serves inside the 6 MB BRAM +
+    22.5 MB URAM envelope at the paper-scale serving point (4 slots,
+    64-token contexts, 32-row pages) — the row bench_decode gates on."""
+    from repro.core.memory_ledger import decode_ledger_rows
+
+    cfg = config_n(n_enc).with_tt(flow="kernel")
+    rows = dict((n, v) for n, v, _ in decode_ledger_rows(
+        cfg, "x", batch=4, max_len=64, page_size=32, fused=True))
+    assert rows["x/fits"] == 1.0
+    assert rows["x/DECODE_mb"] > 0
+
+
+def test_decode_kv_row_matches_engine_allocator():
+    """The kv_pages row is sized by the SAME layout the engine allocates:
+    sum over window groups of kv_pool_bytes at max_pages_per_request —
+    checked on a hybrid (global + attn_local) config where the two groups
+    genuinely differ."""
+    import dataclasses
+
+    from repro.core.memory_ledger import decode_step_ledger
+    from repro.runtime.decode_engine import _layout
+    from repro.runtime.kv_cache import kv_pool_bytes, max_pages_per_request
+
+    cfg = get_config("llama3-8b").scaled_down()
+    cfg = dataclasses.replace(cfg, hybrid_pattern=("attn", "attn_local"),
+                              window=8)
+    B, max_len, page = 3, 48, 4
+    led = decode_step_ledger(cfg, batch=B, max_len=max_len, page_size=page)
+    n_cycles, _, _, n_pat, n_tail, windows = _layout(cfg)
+    assert set(windows.values()) == {None, 8}
+    expect = 0
+    it = jnp.dtype(cfg.dtype).itemsize
+    for gid, window in windows.items():
+        n_layers = n_cycles * n_pat.get(gid, 0) + n_tail.get(gid, 0)
+        np_max = max_pages_per_request(max_len, page, window)
+        expect += kv_pool_bytes(n_layers, 1 + B * np_max, cfg.n_kv_heads,
+                                page, cfg.d_head, it)
+    assert led.entry("kv_pages").nbytes == expect
+    # the windowed group's table is narrower than the global one
+    assert (max_pages_per_request(max_len, page, 8)
+            < max_pages_per_request(max_len, page, None))
+
+
+def test_decode_kernel_rows_are_chooser_derived():
+    """DECODE kernel-VMEM rows come from the same sizing helpers the ops
+    dispatch gates on, and stay inside the URAM envelope."""
+    from repro.core.memory_ledger import decode_step_ledger
+    from repro.kernels.flash_decode import decode_attn_stage_vmem_bytes
+
+    cfg = config_n(2).with_tt(flow="kernel")
+    page = 32
+    led = decode_step_ledger(cfg, batch=4, max_len=64, page_size=page)
+    it = jnp.dtype(cfg.dtype).itemsize
+    G = cfg.n_heads // cfg.n_kv_heads
+    assert led.entry("attn_kernel_vmem").nbytes == \
+        decode_attn_stage_vmem_bytes(G, cfg.d_head, page, it, fused=True)
+    for row in ("attn_kernel_vmem", "kernel_vmem", "ffn_kernel_vmem"):
+        assert led.entry(row).nbytes <= URAM_BUDGET_BYTES
+    # without the megakernel the hidden column rides URAM...
+    assert led.entry("ffn_kernel_vmem").nbytes == 0
+    assert led.entry("ffn_hidden").nbytes > 0
+    # ...with it, the hidden state is VMEM-resident and the row flips
+    led_f = decode_step_ledger(cfg.with_fused_ffn(), batch=4, max_len=64,
+                               page_size=page)
+    assert led_f.entry("ffn_kernel_vmem").nbytes > 0
+    assert led_f.entry("ffn_hidden").nbytes == 0
+
+
+def test_decode_ledger_rejects_non_attention_families():
+    from repro.core.memory_ledger import decode_step_ledger
+
+    cfg = get_config("mamba2-130m").scaled_down()
+    with pytest.raises(ValueError):
+        decode_step_ledger(cfg)
