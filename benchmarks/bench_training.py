@@ -65,6 +65,130 @@ def _train(tt_mode: str, steps: int):
             "slot_acc": float(m["slot_acc"])}
 
 
+def _multi_device_rows(args) -> list[tuple[str, float, str]]:
+    """Pipeline × TP × DP training benchmark rows.  Runs in the CHILD
+    process (``--devices`` re-exec) so XLA_FLAGS took effect before the
+    jax import at the top of this module."""
+    import time
+
+    from repro.core.memory_ledger import pipeline_ledger_rows
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_pipeline_train_step, make_train_step
+    from repro.optim import sgd
+    from repro.runtime.pipeline import (
+        StagePartition, bubble_fraction, stage_utilization)
+
+    cfg = config_n(2, tt_mode="tt").scaled_down(
+        d_model=256, n_heads=4, d_ff=256, vocab_size=1000, num_layers=2,
+        max_seq_len=64).with_tt(flow="kernel").with_fused_attn(
+        True).with_fused_ffn(True)
+    mesh = make_host_mesh(args.dp, args.tp, stage=args.stages)
+    part = StagePartition.from_mesh(mesh, args.microbatches)
+
+    opt = sgd(1e-2, 0.0)
+    pipe = make_pipeline_train_step(cfg, opt, mesh,
+                                    microbatches=args.microbatches)
+    single = jax.jit(make_train_step(cfg, opt))
+
+    from repro.models.transformer import init_params as _init
+    B, S = args.batch, args.seq
+
+    def batch_at(i):
+        k = jax.random.PRNGKey(100 + i)
+        toks = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+    def timed(step_fn):
+        params = _init(jax.random.PRNGKey(0), cfg)
+        state = opt.init(params)
+        t_first = t_steady = last = None
+        for i in range(args.steps):
+            b = batch_at(i)
+            t0 = time.perf_counter()
+            params, state, m = step_fn(params, state, b)
+            jax.block_until_ready(m["loss"])
+            dt = time.perf_counter() - t0
+            if i == 0:
+                t_first = dt
+            else:
+                t_steady = dt if t_steady is None else min(t_steady, dt)
+            last = float(m["loss"])
+        return t_first, t_steady, last
+
+    tf_p, ts_p, loss_p = timed(pipe)
+    tf_s, ts_s, loss_s = timed(single)
+
+    rows_out = [
+        ("pipe/devices", float(part.devices),
+         f"stage={part.stages} data={part.dp} model={part.tp}"),
+        ("pipe/bubble_fraction", bubble_fraction(part),
+         f"(S-1)/(M+S-1), M={part.microbatches}"),
+        ("pipe/stage_utilization", stage_utilization(part),
+         "M/(M+S-1), uniform across stages"),
+        ("pipe/step_ms", ts_p * 1e3 if ts_p else tf_p * 1e3,
+         f"steady-state; compile-step {tf_p * 1e3:.0f} ms"),
+        ("pipe/single_device_step_ms", ts_s * 1e3 if ts_s else tf_s * 1e3,
+         "same config, no mesh"),
+        ("pipe/loss_vs_single", abs(loss_p - loss_s),
+         f"|pipeline - single| after {args.steps} steps "
+         f"(pipe {loss_p:.4f}, single {loss_s:.4f})"),
+    ]
+    for n_enc in (2, 4, 6):
+        rows_out.extend(pipeline_ledger_rows(
+            config_n(n_enc, tt_mode="tt"), part, "sgd",
+            f"pipe/ledger/{n_enc}enc"))
+    return rows_out
+
+
+_CHILD_MARKER = "_BENCH_TRAINING_CHILD"
+
+
+def main(argv=None) -> int:
+    """``--devices N`` multi-device mode (re-execs with forced host devices);
+    without it, emits the single-process parity rows like run.py does."""
+    import argparse
+    import json as _json
+    import subprocess
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host CPU devices and benchmark the "
+                         "shard_map pipeline (re-execs this script with "
+                         "XLA_FLAGS set before jax imports)")
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--dp", type=int, default=2)
+    ap.add_argument("--tp", type=int, default=2)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--json", default=None,
+                    help="also write rows as a JSON list to this path")
+    args = ap.parse_args(argv)
+
+    if args.devices and _CHILD_MARKER not in os.environ:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + env.get("XLA_FLAGS", "")).strip()
+        env[_CHILD_MARKER] = "1"
+        env.setdefault("PYTHONPATH", "src")
+        cmd = [sys.executable, os.path.abspath(__file__),
+               *(a for a in (sys.argv[1:] if argv is None else argv))]
+        return subprocess.run(cmd, env=env).returncode
+
+    out = _multi_device_rows(args) if args.devices else rows()
+    for name, value, note in out:
+        print(f"{name},{value},{note}")
+    if args.json:
+        with open(args.json, "w") as fh:
+            _json.dump([{"name": n, "value": v, "note": t}
+                        for n, v, t in out], fh, indent=2)
+        print(f"[bench_training] wrote {args.json}", file=sys.stderr)
+    return 0
+
+
 def rows():
     mm = _train("off", MATRIX_STEPS)
     tt = _train("tt", 3 * MATRIX_STEPS)
@@ -83,3 +207,7 @@ def rows():
          "paper: -0.1pt"),
     ]
     return out
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -67,6 +67,7 @@ __all__ = [
     "LedgerEntry",
     "StageLedger",
     "training_step_ledger",
+    "pipeline_ledger_rows",
     "decode_step_ledger",
     "budget_report",
     "format_report",
@@ -249,7 +250,8 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                          batch: int = 1, seq: int = 32,
                          sketched: bool = False,
                          sketch_width: int | None = None,
-                         sketch_depth: int | None = None) -> dict[str, StageLedger]:
+                         sketch_depth: int | None = None,
+                         partition=None) -> dict[str, StageLedger]:
     """Per-stage (FWD/BWD/PU) peak-residency ledgers for one training step.
 
     ``optimizer`` sizes the moment buffers: "sgd" (none, or one with
@@ -261,11 +263,36 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     ledger cannot drift from the op.  ``batch=1, seq=32`` is the paper's
     regime (Sec. VI).  Everything is derived from ``jax.eval_shape`` — no
     device memory is allocated.
+
+    ``partition`` (optional ``runtime.pipeline.StagePartition``) reports
+    PER-DEVICE residency for the pipeline × row-TP × DP training step:
+    params/grads/moments stay whole (the tree replicates — it is MBs under
+    TT compression), kernel-launch rows shrink to one microbatch's row
+    shard (``ceil(batch / (dp·tp·microbatches)) · seq`` — the exact K the
+    per-device dispatch predicates and tile choosers see inside shard_map),
+    stacked-layer residuals scale by this stage's cycle fraction, and the
+    GPipe handoff carries get their own uram row.  ``None`` is exactly the
+    single-device ledger.
     """
     from repro.models.transformer import init_params
     from repro.optim import adamw as _adamw, sgd as _sgd
 
-    K = batch * seq
+    if partition is not None:
+        from repro.runtime.pipeline import cycles_per_stage
+
+        n_cycles = cfg.num_layers // max(len(cfg.hybrid_pattern), 1)
+        stage_frac = cycles_per_stage(cfg, partition.stages) / n_cycles
+        b_loc = -(-batch // (partition.dp * partition.tp))
+        b_mb = -(-b_loc // partition.microbatches)
+    else:
+        stage_frac = 1.0
+        b_loc = b_mb = batch
+    # Two row counts: K is what one kernel LAUNCH sees (a single
+    # microbatch's row shard — the dispatch predicates' argument); K_res is
+    # what stays RESIDENT (at the GPipe peak every in-flight microbatch's
+    # residuals are live, so residency uses the whole local batch).
+    K = b_mb * seq
+    K_res = b_loc * seq
     params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
     if optimizer == "adamw":
         opt = _adamw(1e-3, sketched=sketched, sketch_width=sketch_width,
@@ -319,7 +346,7 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         if "router" in blk and cfg.moe is not None:
             cap = int(math.ceil(seq * cfg.moe.top_k / cfg.moe.num_experts
                                 * cfg.moe.capacity_factor))
-            k_blk = batch * cap
+            k_blk = b_mb * cap
         else:
             k_blk = K
         # Same gate the model applies: fused_ffn refines the kernel flow
@@ -340,11 +367,14 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
             # Pre-activation residuals only: the down projection's saved
             # (K, F) input is charged by the per-TT-linear loop below (at
             # the ledger's K convention), so subtract its term from the
-            # closed form to avoid counting it twice.
-            ffn_hidden_bytes += mult * (
-                ffn_residual_bytes(K, F_, act_itemsize, gated=gated,
+            # closed form to avoid counting it twice.  Residency counts the
+            # whole local batch (K_res) and only this stage's share of
+            # stacked layers.
+            eff_mult = mult if mult == 1 else max(round(mult * stage_frac), 1)
+            ffn_hidden_bytes += eff_mult * (
+                ffn_residual_bytes(K_res, F_, act_itemsize, gated=gated,
                                    fused=False)
-                - K * F_ * act_itemsize)
+                - K_res * F_ * act_itemsize)
 
     # Residuals the fused VJP saves for BWD: one (K, N) input per TT-linear
     # application (stacked modules apply once per stacked layer).  Down
@@ -356,8 +386,11 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         if id(m) in excluded_down_ids:
             continue
         mult = _stacked_multiplier(m)
-        n_tt_apps += mult
-        resid_bytes += mult * K * m.spec.in_dim * act_itemsize
+        # Stacked (layer-cycle) modules: this stage holds only its cycle
+        # slice; top-level modules (head/intent) apply once per device.
+        eff_mult = mult if mult == 1 else max(round(mult * stage_frac), 1)
+        n_tt_apps += eff_mult
+        resid_bytes += eff_mult * K_res * m.spec.in_dim * act_itemsize
     # Attention residuals, per layer: the autodiff-saved (B, h, S, S)
     # probabilities on the blockwise path, or only (O, m, l) with
     # fused_attn — gated on the SAME attn_bwd_vmem_fits the op dispatches
@@ -367,20 +400,31 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         attn_residual_bytes,
     )
 
-    n_layers = cfg.num_layers
+    n_layers = max(round(cfg.num_layers * stage_frac), 1)
     attn_fused_eff = cfg.fused_attn and attn_bwd_vmem_fits(
         seq, cfg.d_head, act_itemsize)
     attn_resid = n_layers * attn_residual_bytes(
-        batch, cfg.n_heads, seq, cfg.d_head, act_itemsize,
+        b_loc, cfg.n_heads, seq, cfg.d_head, act_itemsize,
         fused=attn_fused_eff)
     attn_note = ("(O, m, l) per layer — flash bwd recomputes probability "
                  "tiles in VMEM; no S×S residual"
                  if attn_fused_eff else
                  "autodiff-saved S×S attention probabilities per layer")
     # Embedding output + positional sum, the first saved activation
-    # (one per TTM/dense embedding module).
-    embed_act = max(len(ttms), 1) * K * cfg.d_model * act_itemsize
+    # (one per TTM/dense embedding module).  Under a pipeline partition
+    # every stage embeds (uniform SPMD program), so the row stays whole.
+    embed_act = max(len(ttms), 1) * K_res * cfg.d_model * act_itemsize
     resid_total = resid_bytes + embed_act
+    # GPipe handoff carries: the tick scan saves one (b_mb, seq, d_model)
+    # boundary activation per tick for its backward.
+    if partition is not None and partition.stages > 1:
+        carry_bytes = (partition.ticks * b_mb * seq * cfg.d_model
+                       * act_itemsize)
+        carry_note = (f"ppermute handoffs: {partition.ticks} tick(s) x "
+                      f"({b_mb}, {seq}, {cfg.d_model}) saved for BWD")
+    else:
+        carry_bytes = 0
+        carry_note = "no pipeline stages (single-stage schedule)"
 
     fwd_kernel_vmem = max(
         (_btt_kernel_vmem_bytes(s, act_itemsize, K) for s in specs),
@@ -439,6 +483,7 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                     "btt_ffn_pallas working set (choose_ffn_tiles-derived), "
                     "largest block" if ffn_fused_any else
                     "no megakernel launch (two-call path)"),
+        LedgerEntry("pipeline_carries", carry_bytes, "uram", carry_note),
     ))
     bwd = StageLedger("BWD", (
         LedgerEntry("params", params_bytes, "bram",
@@ -466,6 +511,7 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                     "VMEM; gx + all half-factor grads one pass)"
                     if ffn_fused_any else
                     "no megakernel launch (two-call path)"),
+        LedgerEntry("pipeline_carries", carry_bytes, "uram", carry_note),
     ))
     pu = StageLedger("PU", (
         LedgerEntry("params", params_bytes, "bram", "updated in place"),
@@ -614,16 +660,19 @@ def budget_report(ledgers: dict[str, StageLedger]) -> dict[str, Any]:
 
 
 def ledger_rows(cfg, optimizer: str, prefix: str, *, momentum: float = 0.0,
-                sketched: bool = False,
+                sketched: bool = False, batch: int = 1, seq: int = 32,
+                partition=None,
                 fits_note: str = "") -> list[tuple[str, float, str]]:
     """Benchmark rows for one config: per-stage MB + a fits flag.
 
     Shared by bench_memory and bench_pu so the emitted names/notes cannot
     diverge.  Notes are CSV-safe ("; "-separated — benchmarks.run emits
-    bare 3-column ``name,value,note`` lines).
+    bare 3-column ``name,value,note`` lines).  With ``partition`` the rows
+    are PER-DEVICE (see ``training_step_ledger``).
     """
     led = training_step_ledger(cfg, optimizer, momentum=momentum,
-                               sketched=sketched)
+                               sketched=sketched, batch=batch, seq=seq,
+                               partition=partition)
     rep = budget_report(led)
     mb = 1 / 2**20
     out: list[tuple[str, float, str]] = []
@@ -638,6 +687,27 @@ def ledger_rows(cfg, optimizer: str, prefix: str, *, momentum: float = 0.0,
         note += f"; {fits_note}"
     out.append((f"{prefix}/fits", 1.0 if rep["fits"] else 0.0, note))
     return out
+
+
+def pipeline_ledger_rows(cfg, partition, optimizer: str, prefix: str, *,
+                         momentum: float = 0.0, sketched: bool = False,
+                         batch: int | None = None,
+                         seq: int = 32) -> list[tuple[str, float, str]]:
+    """Per-device ledger rows for one pipeline × row-TP × DP partition.
+
+    ``batch`` defaults to one row per (dp × tp × microbatch) slot — the
+    smallest batch the partition can run — matching the paper's batch=1
+    single-device regime scaled to the mesh.  Shared by bench_training's
+    ``--devices`` mode and tests/test_pipeline.py.
+    """
+    if batch is None:
+        batch = partition.dp * partition.tp * partition.microbatches
+    return ledger_rows(
+        cfg, optimizer, prefix, momentum=momentum, sketched=sketched,
+        batch=batch, seq=seq, partition=partition,
+        fits_note=(f"per-device: stages={partition.stages} "
+                   f"dp={partition.dp} tp={partition.tp} "
+                   f"mb={partition.microbatches} batch={batch} seq={seq}"))
 
 
 def format_report(ledgers: dict[str, StageLedger]) -> str:

@@ -6,6 +6,19 @@ sharding of *transient* activations whose layout GSPMD cannot infer from
 parameters alone (e.g. the transiently-reconstructed TTM embedding table,
 which descends from replicated cores but must be vocab-sharded).  With no
 mesh installed — unit tests, single-device runs — ``constrain`` is a no-op.
+
+Two interpretations of the "model" axis coexist:
+
+* Megatron column-TP (default): "model" cuts the FFN hidden dim / head dim.
+  Fused megakernels are ineligible (the hidden state must shard).
+* Row-TP (``activation_mesh(mesh, model_rows=True)``): "model" shards the
+  leading batch×seq *row* dim of activations, like an extra DP axis for
+  activations, while the tiny TT cores stay replicated.  Fused kernels stay
+  fused — each device launches them on its row shard — and dispatch
+  predicates must evaluate *local* row counts: ``row_shards()`` is the
+  single source for that divisor (threaded through ``kernels.ops`` as
+  ``shard_dims``).  shard_map bodies see local shapes already and install
+  no mesh, so they get ``row_shards() == 1`` — correct by construction.
 """
 from __future__ import annotations
 
@@ -15,14 +28,17 @@ from typing import Iterator
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["activation_mesh", "constrain", "current_mesh"]
+__all__ = ["activation_mesh", "constrain", "current_mesh",
+           "model_axis_rowwise", "row_shards"]
 
-_ACTIVE: list[Mesh] = []
+_ACTIVE: list[tuple[Mesh, bool]] = []
+
+_ROW_AXES = ("pod", "data")
 
 
 @contextlib.contextmanager
-def activation_mesh(mesh: Mesh) -> Iterator[None]:
-    _ACTIVE.append(mesh)
+def activation_mesh(mesh: Mesh, *, model_rows: bool = False) -> Iterator[None]:
+    _ACTIVE.append((mesh, model_rows))
     try:
         yield
     finally:
@@ -30,7 +46,32 @@ def activation_mesh(mesh: Mesh) -> Iterator[None]:
 
 
 def current_mesh() -> Mesh | None:
-    return _ACTIVE[-1] if _ACTIVE else None
+    return _ACTIVE[-1][0] if _ACTIVE else None
+
+
+def model_axis_rowwise() -> bool:
+    """True when the installed mesh declares "model" a row (batch) axis."""
+    return _ACTIVE[-1][1] if _ACTIVE else False
+
+
+def row_shards() -> int:
+    """How many ways the leading batch×seq rows of activations are sharded.
+
+    The product of the DP axes ("pod", "data") of the active mesh, times
+    "model" when it is declared row-wise.  1 with no mesh — which is also
+    what shard_map bodies see (they trace on local shapes and install no
+    mesh), so per-shard dispatch predicates are correct in both regimes.
+    """
+    if not _ACTIVE:
+        return 1
+    mesh, model_rows = _ACTIVE[-1]
+    n = 1
+    for a in _ROW_AXES:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    if model_rows and "model" in mesh.axis_names:
+        n *= mesh.shape["model"]
+    return n
 
 
 def constrain(x: jax.Array, *spec) -> jax.Array:
@@ -38,11 +79,35 @@ def constrain(x: jax.Array, *spec) -> jax.Array:
 
     Each spec entry is an axis name, a tuple of axis names, or None.  Axis
     names missing from the mesh (or that do not divide the dim) degrade to
-    None; with no active mesh the array passes through unchanged.
+    None; with no active mesh the array passes through unchanged.  Under a
+    row-wise "model" declaration, "model" entries on feature dims are
+    re-routed onto the leading (row) dim — call sites keep their Megatron
+    specs and the context decides the interpretation.
     """
     mesh = current_mesh()
     if mesh is None:
         return x
+
+    spec = list(spec)
+    if model_axis_rowwise() and spec:
+        def strip(ax):
+            if ax == "model":
+                return None
+            if isinstance(ax, tuple):
+                kept = tuple(a for a in ax if a != "model")
+                return kept if len(kept) > 1 else (kept[0] if kept else None)
+            return ax
+
+        had_model = any(
+            ax == "model" or (isinstance(ax, tuple) and "model" in ax)
+            for ax in spec)
+        spec = [strip(ax) for ax in spec]
+        if had_model:
+            head = spec[0]
+            head = (head if isinstance(head, tuple)
+                    else (() if head is None else (head,)))
+            if "model" not in head:
+                spec[0] = head + ("model",)
 
     def resolve(dim, ax):
         if ax is None:

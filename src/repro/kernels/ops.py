@@ -104,25 +104,27 @@ def kernel_interpret_default() -> bool:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def _hf_linear(a: jax.Array, b: jax.Array, x: jax.Array,
-               interpret: bool, fused_bwd: bool) -> jax.Array:
+               interpret: bool, fused_bwd: bool,
+               shard_dims: int = 1) -> jax.Array:
     return btt_linear_pallas(x, b, a, interpret=interpret)
 
 
-def _hf_linear_fwd(a, b, x, interpret, fused_bwd):
+def _hf_linear_fwd(a, b, x, interpret, fused_bwd, shard_dims):
     y = btt_linear_pallas(x, b, a, interpret=interpret)
     # Residuals: the layer input and the already-built half-factors (O(r)
     # extra state, K-independent) — no K-sized intermediate, no rebuild.
     return y, (a, b, x)
 
 
-def _hf_linear_bwd(interpret, fused_bwd, residuals, gy):
+def _hf_linear_bwd(interpret, fused_bwd, shard_dims, residuals, gy):
     a, b, x = residuals
     M, R = a.shape
     N = b.shape[1]
     itemsize = jnp.dtype(x.dtype).itemsize
-    if fused_bwd and bwd_vmem_fits(M, N, R, itemsize, K=x.shape[0]):
+    k_local = -(-x.shape[0] // max(shard_dims, 1))
+    if fused_bwd and bwd_vmem_fits(M, N, R, itemsize, K=k_local):
         # ONE kernel launch: gx streamed, ga/gb accumulated on chip —
         # t/gt never leave VMEM (paper Eqs. (10)/(11)/(16) as one stage).
         gx, ga, gb = btt_backward_pallas(x, gy, b, a, interpret=interpret)
@@ -145,23 +147,42 @@ def _hf_linear_bwd(interpret, fused_bwd, residuals, gy):
 _hf_linear.defvjp(_hf_linear_fwd, _hf_linear_bwd)
 
 
+def _resolve_shard_dims(shard_dims: int | None) -> int:
+    """The row-shard divisor for VMEM dispatch predicates.
+
+    ``None`` means "ask the mesh context": ``meshctx.row_shards()`` — 1
+    with no mesh and 1 inside shard_map bodies (local shapes already), the
+    GSPMD row-shard product otherwise.  Predicates then gate on the
+    *per-device* row count, so fused dispatch survives sharding and stays
+    in lockstep with ``core.memory_ledger``'s per-shard rows.
+    """
+    if shard_dims is not None:
+        return max(int(shard_dims), 1)
+    from repro.core.meshctx import row_shards
+
+    return row_shards()
+
+
 def btt_linear_op(cores, x: jax.Array, spec: TTSpec, *,
                   use_kernel: bool = True,
                   interpret: bool | None = None,
-                  fused_bwd: bool = True) -> jax.Array:
+                  fused_bwd: bool = True,
+                  shard_dims: int | None = None) -> jax.Array:
     """``x (K, N) -> y (K, M)`` with W in TT format, BTT contraction.
 
     ``fused_bwd`` selects the single-kernel BWD stage for the gradients
     (falls back automatically when the shape's working set exceeds the
     kernel VMEM budget); ``False`` forces the operand-swap + XLA-GEMM
-    reference path.
+    reference path.  ``shard_dims`` (default: mesh-resolved) divides K for
+    that VMEM gate only — see ``_resolve_shard_dims``.
     """
     if not use_kernel:
         return tt_forward_btt(cores, x, spec)
     if interpret is None:
         interpret = kernel_interpret_default()
     a, b = tt_half_factors(list(cores), spec)  # built once; autodiff chains
-    return _hf_linear(a, b, x, interpret, fused_bwd)
+    return _hf_linear(a, b, x, interpret, fused_bwd,
+                      _resolve_shard_dims(shard_dims))
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +228,8 @@ def btt_ffn_op(up_cores, down_cores, gate_cores, x: jax.Array,
                gate_spec: TTSpec | None = None, *, act: str = "gelu",
                f_logical: int | None = None,
                interpret: bool | None = None, fused_bwd: bool = True,
-               fused_ffn: bool = True) -> jax.Array:
+               fused_ffn: bool = True,
+               shard_dims: int | None = None) -> jax.Array:
     """Whole TT FFN block: ``x (K, N) -> y (K, M)`` through
     ``down(act(up(x)))`` (``down(act(gate(x)) * up(x))`` when
     ``gate_cores`` is given), fused forward AND backward.
@@ -215,12 +237,15 @@ def btt_ffn_op(up_cores, down_cores, gate_cores, x: jax.Array,
     The half-factors of every projection are built exactly once here;
     autodiff chains their cotangents back into per-core gradients.  When
     the megakernel's working set exceeds the VMEM budget
-    (``ffn_vmem_fits``) or ``fused_ffn=False``, the op takes the two-call
-    path through ``_hf_linear`` — the exact computation
-    ``models.layers.mlp_apply`` performs, bit for bit.
+    (``ffn_vmem_fits``, evaluated at the per-device row count
+    ``ceil(K / shard_dims)`` — see ``_resolve_shard_dims``) or
+    ``fused_ffn=False``, the op takes the two-call path through
+    ``_hf_linear`` — the exact computation ``models.layers.mlp_apply``
+    performs, bit for bit.
     """
     if interpret is None:
         interpret = kernel_interpret_default()
+    sd = _resolve_shard_dims(shard_dims)
     a1, b1 = tt_half_factors(list(up_cores), up_spec)
     a2, b2 = tt_half_factors(list(down_cores), down_spec)
     ag = bg = None
@@ -234,19 +259,19 @@ def btt_ffn_op(up_cores, down_cores, gate_cores, x: jax.Array,
     Rg = gate_spec.mid_rank if gate_spec is not None else 0
     itemsize = jnp.dtype(x.dtype).itemsize
     if fused_ffn and ffn_vmem_fits(M, N, F, R1, R2, Rg, itemsize,
-                                   K=x.shape[0]):
+                                   K=-(-x.shape[0] // sd)):
         return _ffn_fused(a1, b1, a2, b2, ag, bg, x, act, f_logical,
                           interpret)
     # Two-call fallback: the same slice/act/pad sequence mlp_apply runs.
-    u = _hf_linear(a1, b1, x, interpret, fused_bwd)[:, :f_logical]
+    u = _hf_linear(a1, b1, x, interpret, fused_bwd, sd)[:, :f_logical]
     if bg is not None:
-        g = _hf_linear(ag, bg, x, interpret, fused_bwd)[:, :f_logical]
+        g = _hf_linear(ag, bg, x, interpret, fused_bwd, sd)[:, :f_logical]
         h = _FFN_ACTS[act](g) * u
     else:
         h = _FFN_ACTS[act](u)
     if f_logical != down_spec.in_dim:
         h = jnp.pad(h, ((0, 0), (0, down_spec.in_dim - f_logical)))
-    return _hf_linear(a2, b2, h, interpret, fused_bwd)
+    return _hf_linear(a2, b2, h, interpret, fused_bwd, sd)
 
 
 # ---------------------------------------------------------------------------
@@ -303,7 +328,8 @@ def flash_mha_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
                  causal: bool = True, window: int | None = None,
                  q_chunk: int = 512, kv_chunk: int = 1024,
                  use_kernel: bool = True, interpret: bool | None = None,
-                 budget: int | None = None) -> jax.Array:
+                 budget: int | None = None,
+                 shard_dims: int | None = None) -> jax.Array:
     """``q (B, S, H, D); k, v (B, S, KV, D) -> (B, S, H, D)``, trainable.
 
     The fused path runs the flash forward and the single-kernel flash
@@ -313,7 +339,13 @@ def flash_mha_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
     pure-JAX ``blockwise_attention`` path under plain autodiff, with the
     given chunk sizes.  ``core.memory_ledger`` gates on the same
     ``attn_bwd_vmem_fits``, so ledger and dispatch cannot drift.
+
+    ``shard_dims`` is accepted for API symmetry with the other ops: row
+    (batch) sharding leaves the per-grid-step (S, D) working set — the
+    only thing ``attn_bwd_vmem_fits`` depends on — unchanged, so the
+    predicate is already per-shard and the hint needs no arithmetic here.
     """
+    del shard_dims
     B, S, H, D = q.shape
     KV = k.shape[2]
     group = H // KV

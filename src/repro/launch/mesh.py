@@ -29,9 +29,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / CPU examples)."""
+def make_host_mesh(data: int = 1, model: int = 1, stage: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples).
+
+    Axis requests are clamped and validated, not trusted: zero/negative
+    requests clamp to 1 (``data=0`` used to ZeroDivisionError on the
+    ``n // data`` fit check), oversubscribed requests shrink model-first
+    then data to fit the device count, and every axis ends up >= 1.
+
+    ``stage > 1`` builds the pipeline topology ("stage", "data", "model")
+    used by ``launch.steps.make_pipeline_train_step``.  Unlike data/model,
+    a stage request that cannot be satisfied RAISES instead of clamping:
+    silently running a different pipeline depth than requested would change
+    the training program, not just its layout.
+    """
     n = len(jax.devices())
-    data = min(data, n)
-    model = min(model, n // data)
+    stage = max(int(stage), 1)
+    if stage > n or n % stage:
+        raise ValueError(
+            f"stage={stage} does not divide the {n} available device(s)")
+    avail = n // stage
+    data = min(max(int(data), 1), avail)
+    model = min(max(int(model), 1), max(avail // data, 1))
+    if stage > 1:
+        return jax.make_mesh((stage, data, model),
+                             ("stage", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))

@@ -19,7 +19,8 @@ from repro.models.transformer import cache_struct, forward, loss_fn
 from repro.optim.optimizers import Optimizer, clip_by_global_norm
 
 __all__ = [
-    "make_train_step", "make_prefill", "make_decode_step",
+    "make_train_step", "make_ddp_train_step", "make_pipeline_train_step",
+    "make_prefill", "make_decode_step",
     "make_inputs", "abstract_train_state", "prepare_decode_cache",
 ]
 
@@ -27,6 +28,16 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # Training.
 # ---------------------------------------------------------------------------
+
+
+def _global_grad_norm(grads) -> jax.Array:
+    """f32 global L2 norm — the reported metric when clipping is off.
+
+    Shared by every step builder so ``grad_norm`` means the same thing
+    with and without ``clip_norm`` (ddp used to report a hard 0.0)."""
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
 
 
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
@@ -39,6 +50,10 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
     ``microbatches > 1`` accumulates gradients over leading batch splits in a
     scan; XLA overlaps each microbatch's DP all-reduce with the next
     microbatch's backward (the grads are produced inside the scan body).
+    Per-microbatch losses AND gradients are weighted by each microbatch's
+    mask token count (token count when no mask) — ``loss_fn`` normalizes
+    per microbatch by its own mask sum, so an unweighted mean would drift
+    from the single-batch loss whenever masks are ragged across splits.
 
     ``batch_constraint`` (optional): applied to the reshaped
     ``(microbatches, B/mb, ...)`` batch — the reshape has no sharding
@@ -102,19 +117,23 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
 
             def body(acc, one):
                 l, g = grads_of(params, one)
+                m = one.get("mask")
+                w = (m.astype(jnp.float32).sum() if m is not None
+                     else jnp.asarray(float(one["labels"].size), jnp.float32))
+                # g is d(nll_i/w_i)/dp — scale back to the nll_i gradient
+                # so the accumulated sum divides by the GLOBAL token count.
                 acc = jax.tree.map(
-                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
-                return acc, l
+                    lambda a, gg: a + w * gg.astype(jnp.float32), acc, g)
+                return acc, (l, w)
 
-            grads, losses = jax.lax.scan(body, acc0, mb)
-            grads = jax.tree.map(lambda g: g / microbatches, grads)
-            loss = losses.mean()
+            grads, (losses, ws) = jax.lax.scan(body, acc0, mb)
+            wsum = jnp.maximum(ws.sum(), 1.0)
+            grads = jax.tree.map(lambda g: g / wsum, grads)
+            loss = (losses * ws).sum() / wsum
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
         else:
-            gnorm = jnp.sqrt(sum(
-                jnp.sum(jnp.square(g.astype(jnp.float32)))
-                for g in jax.tree.leaves(grads)))
+            gnorm = _global_grad_norm(grads)
         params, opt_state = opt.update(grads, params, opt_state,
                                        opt_state["step"])
         return params, opt_state, {"loss": loss, "grad_norm": gnorm}
@@ -158,7 +177,7 @@ def make_ddp_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
         else:
-            gnorm = jnp.zeros(())
+            gnorm = _global_grad_norm(grads)
         params, opt_state = opt.update(grads, params, opt_state,
                                        opt_state["step"])
         return params, opt_state, ef, {"loss": loss, "grad_norm": gnorm}
@@ -172,6 +191,78 @@ def make_ddp_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
         check_vma=False,  # ring ppermute breaks the replication checker
     )
     return jax.jit(mapped, donate_argnums=(0, 1, 2))
+
+
+def make_pipeline_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
+                             microbatches: int = 1, clip_norm: float = 1.0,
+                             remat: bool = True,
+                             fused_bwd: bool | None = None,
+                             fused_attn: bool | None = None,
+                             fused_ffn: bool | None = None):
+    """Pipeline × row-TP × DP training via shard_map, fused kernels fused.
+
+    ``mesh`` must carry the ("stage", "data", "model") axes
+    (``launch.mesh.make_host_mesh(stage=...)`` or
+    ``runtime.pipeline.make_pipeline_mesh``).  Params and optimizer state
+    replicate on every device — TT compression makes the whole tree MBs,
+    so replication is free and there is no weight-sharding story to
+    maintain; what scales out is COMPUTE: "stage" pipelines contiguous
+    layer cycles GPipe-style over ``microbatches`` (ppermute handoff,
+    fill/drain in one lax.scan — see runtime.pipeline), while "data" and
+    "model" both shard activation rows ("model" is row-wise TP: each
+    device launches the fused FFN/attention/BWD Pallas kernels on its own
+    row shard, so the VMEM dispatch predicates see local shapes and
+    fusion survives the mesh).  Gradients psum over all three axes and
+    every device runs the identical optimizer update, keeping params
+    replicated bit-for-bit.
+
+    The global batch must divide by dp × tp × microbatches.  Loss is the
+    global mask-weighted mean, so metrics match ``make_train_step`` on the
+    same batch to f32 accumulation-order tolerance (asserted per step in
+    tests/test_pipeline.py).  ``fused_*`` override the config knobs as in
+    ``make_train_step``.  Returns a jitted
+    ``(params, opt_state, batch) -> (params, opt_state, metrics)`` with
+    args 0/1 donated.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.runtime.pipeline import (
+        StagePartition,
+        cycles_per_stage,
+        pipeline_loss_and_grads,
+    )
+
+    if fused_bwd is not None:
+        cfg = cfg.with_tt(fused_bwd=fused_bwd)
+    if fused_attn is not None:
+        cfg = cfg.with_fused_attn(fused_attn)
+    if fused_ffn is not None:
+        cfg = cfg.with_fused_ffn(fused_ffn)
+
+    part = StagePartition.from_mesh(mesh, microbatches)
+    cycles_per_stage(cfg, part.stages)  # validate the layer split up front
+
+    def step(params, opt_state, batch):
+        loss, grads = pipeline_loss_and_grads(params, cfg, batch, part,
+                                              remat=remat)
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = _global_grad_norm(grads)
+        params, opt_state = opt.update(grads, params, opt_state,
+                                       opt_state["step"])
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    rep = P()
+    batch_spec = P(("data", "model"))  # rows split over DP × row-TP
+    mapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(rep, rep, batch_spec),
+        out_specs=(rep, rep, rep),
+        check_vma=False,  # stage ppermute breaks the replication checker
+    )
+    return jax.jit(mapped, donate_argnums=(0, 1))
 
 
 def abstract_train_state(cfg: ModelConfig, opt: Optimizer):

@@ -26,7 +26,7 @@ from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data import lm_batch
 from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import make_train_step
+from repro.launch.steps import make_pipeline_train_step, make_train_step
 from repro.models.transformer import init_params, num_params, param_bytes
 from repro.optim import adamw, sgd, warmup_cosine
 from repro.runtime import (
@@ -115,11 +115,26 @@ def main(argv=None) -> dict:
                     help="0 = adaptive cadence")
     ap.add_argument("--data-axis", type=int, default=1)
     ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--pipeline-stages", type=int, default=1,
+                    help="GPipe pipeline stages over the layer stack "
+                         "(shard_map on a 'stage' mesh axis; params stay "
+                         "replicated, activations hand off via ppermute). "
+                         ">1 switches to make_pipeline_train_step")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="with --pipeline-stages: row-wise tensor-parallel "
+                         "shards on the 'model' axis (activation rows "
+                         "split; TT cores replicated so fused kernels "
+                         "stay fused)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
     cfg = build(args)
-    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    pipelined = args.pipeline_stages > 1 or args.tp > 1
+    if pipelined:
+        mesh = make_host_mesh(args.data_axis, args.tp,
+                              stage=args.pipeline_stages)
+    else:
+        mesh = make_host_mesh(args.data_axis, args.model_axis)
     vocab = cfg.vocab_size
 
     lr = warmup_cosine(args.lr, max(args.steps // 20, 1), args.steps)
@@ -127,26 +142,37 @@ def main(argv=None) -> dict:
            else adamw(lr, fused=args.fused, sketched=args.sketched_opt,
                       sketch_width=args.sketch_width,
                       sketch_depth=args.sketch_depth))
-    train_step = make_train_step(cfg, opt, microbatches=args.microbatches,
-                                 fused_bwd=args.fused_bwd)
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     opt_state = opt.init(params)
     print(f"[train] arch={cfg.name} tt={cfg.tt.mode} params={num_params(params):,} "
           f"({param_bytes(params)/1e6:.1f} MB) mesh={dict(mesh.shape)}")
 
-    pspec = param_specs(cfg, params, mesh)
-    sspec = opt_state_specs(cfg, opt_state, pspec, mesh)
-    sample = lm_batch(args.seed, 0, args.batch, args.seq, vocab)
-    bspec = batch_specs(sample, mesh)
-    psh = named_sharding_tree(mesh, pspec)
-    ssh = named_sharding_tree(mesh, sspec)
-    bsh = named_sharding_tree(mesh, bspec)
-    params = jax.tree.map(jax.device_put, params, psh)
-    opt_state = jax.tree.map(jax.device_put, opt_state, ssh)
+    if pipelined:
+        # shard_map owns the partitioning: params/opt state replicated,
+        # batch rows split over ("data", "model").  No GSPMD specs or
+        # device_put — the jitted step shards its own inputs.
+        psh = ssh = bsh = None
+        step_fn = make_pipeline_train_step(
+            cfg, opt, mesh, microbatches=args.microbatches,
+            fused_bwd=args.fused_bwd)
+    else:
+        train_step = make_train_step(cfg, opt,
+                                     microbatches=args.microbatches,
+                                     fused_bwd=args.fused_bwd)
+        pspec = param_specs(cfg, params, mesh)
+        sspec = opt_state_specs(cfg, opt_state, pspec, mesh)
+        sample = lm_batch(args.seed, 0, args.batch, args.seq, vocab)
+        bspec = batch_specs(sample, mesh)
+        psh = named_sharding_tree(mesh, pspec)
+        ssh = named_sharding_tree(mesh, sspec)
+        bsh = named_sharding_tree(mesh, bspec)
+        params = jax.tree.map(jax.device_put, params, psh)
+        opt_state = jax.tree.map(jax.device_put, opt_state, ssh)
 
-    step_fn = jax.jit(train_step, in_shardings=(psh, ssh, bsh),
-                      out_shardings=(psh, ssh, None), donate_argnums=(0, 1))
+        step_fn = jax.jit(train_step, in_shardings=(psh, ssh, bsh),
+                          out_shardings=(psh, ssh, None),
+                          donate_argnums=(0, 1))
 
     start = 0
     mgr = None
@@ -157,8 +183,11 @@ def main(argv=None) -> dict:
         got = mgr.restore_latest(tmpl)
         if got is not None:
             (params_h, opt_h), start = got
-            params = jax.tree.map(jax.device_put, params_h, psh)
-            opt_state = jax.tree.map(jax.device_put, opt_h, ssh)
+            if psh is None:
+                params, opt_state = params_h, opt_h
+            else:
+                params = jax.tree.map(jax.device_put, params_h, psh)
+                opt_state = jax.tree.map(jax.device_put, opt_h, ssh)
             print(f"[train] resumed from step {start}")
 
     monitor = StragglerMonitor()
@@ -169,7 +198,8 @@ def main(argv=None) -> dict:
     for step in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in
                  lm_batch(args.seed, step, args.batch, args.seq, vocab).items()}
-        batch = jax.tree.map(jax.device_put, batch, bsh)
+        if bsh is not None:
+            batch = jax.tree.map(jax.device_put, batch, bsh)
         t0 = time.time()
         params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])

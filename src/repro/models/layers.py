@@ -145,41 +145,56 @@ def _ffn_act(cfg: ModelConfig) -> str:
     return cfg.act
 
 
-def ffn_fused_eligible(up, down, gate, K: int) -> bool:
+def ffn_fused_eligible(up, down, gate, K: int, *,
+                       shard_dims: int | None = None) -> bool:
     """True iff this (up, down[, gate]) triple can run as the fused FFN
-    megakernel: every projection TT (no dense, no bias), no model-parallel
-    mesh axis in scope (the megakernel computes the whole d_ff per device
-    — the two-call path's hidden-dim sharding constraint is load-bearing
-    under TP, so it wins there), and the kernel's working set inside the
-    VMEM budget for this row count — the SAME ``ffn_vmem_fits`` predicate
-    ``kernels.ops.btt_ffn_op`` dispatches on and ``core.memory_ledger``
-    gates its FFN rows on."""
+    megakernel: every projection TT (no dense, no bias), the "model" mesh
+    axis (if any) row-wise rather than Megatron column-TP (the megakernel
+    computes the whole d_ff per device, so a hidden-dim cut is fatal but a
+    row shard is free), and the kernel's working set inside the VMEM
+    budget for the *per-device* row count — the SAME ``ffn_vmem_fits``
+    predicate ``kernels.ops.btt_ffn_op`` dispatches on and
+    ``core.memory_ledger`` gates its FFN rows on.
+
+    ``shard_dims``: how many ways the K rows are sharded across devices;
+    defaults to ``meshctx.row_shards()`` (1 with no mesh installed, and 1
+    inside shard_map bodies, whose shapes are already local).
+    """
     mods = (up, down) if gate is None else (up, down, gate)
     if not all(isinstance(m, TTLinearParams) and m.bias is None
                for m in mods):
         return False
-    from repro.core.meshctx import current_mesh
+    from repro.core.meshctx import current_mesh, model_axis_rowwise, row_shards
 
     mesh = current_mesh()
-    if mesh is not None and mesh.shape.get("model", 1) > 1:
+    if (mesh is not None and mesh.shape.get("model", 1) > 1
+            and not model_axis_rowwise()):
+        # Megatron column-TP: the two-call path's hidden-dim sharding
+        # constraint is load-bearing there, so it wins.
         return False
+    if shard_dims is None:
+        shard_dims = row_shards()
     from repro.kernels.btt_ffn import ffn_vmem_fits  # lazy: pallas import
 
+    k_local = -(-K // max(int(shard_dims), 1))
     itemsize = jnp.dtype(up.cores[0].dtype).itemsize
     return ffn_vmem_fits(
         down.spec.out_dim, up.spec.in_dim, up.spec.out_dim,
         up.spec.mid_rank, down.spec.mid_rank,
-        gate.spec.mid_rank if gate is not None else 0, itemsize, K=K)
+        gate.spec.mid_rank if gate is not None else 0, itemsize, K=k_local)
 
 
 def tt_ffn_apply(up: TTLinearParams, down: TTLinearParams,
                  gate: TTLinearParams | None, x: jax.Array, *, act: str,
-                 fused_bwd: bool = True) -> jax.Array:
+                 fused_bwd: bool = True,
+                 shard_dims: int | None = None) -> jax.Array:
     """Whole TT FFN block through the fused megakernel
     (``kernels.ops.btt_ffn_op``): ``x (..., N) -> (..., M)`` with the
     hidden state VMEM-resident and only ``x`` saved for the backward.
-    Callers gate on :func:`ffn_fused_eligible`; shapes past the VMEM
-    budget fall back to the two-call path inside the op."""
+    Callers gate on :func:`ffn_fused_eligible` and pass the same
+    ``shard_dims`` so the op's own VMEM gate sees the identical local row
+    count; shapes past the VMEM budget fall back to the two-call path
+    inside the op."""
     from repro.kernels.ops import btt_ffn_op  # lazy: pallas import
 
     lead = x.shape[:-1]
@@ -191,7 +206,7 @@ def tt_ffn_apply(up: TTLinearParams, down: TTLinearParams,
                    up.spec, down.spec,
                    gate.spec if gate is not None else None, act=act,
                    f_logical=min(up.out_dim, down.in_dim),
-                   fused_bwd=fused_bwd)
+                   fused_bwd=fused_bwd, shard_dims=shard_dims)
     return y[:, : down.out_dim].reshape(lead + (down.out_dim,))
 
 
@@ -201,16 +216,20 @@ def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     K = 1
     for d in x.shape[:-1]:
         K *= d
+    from repro.core.meshctx import row_shards
+    sd = row_shards()
     # fused_ffn refines the kernel flow only (like tt.fused_bwd): other
     # flows keep their selected contraction engine untouched.
     if cfg.fused_ffn and flow == "kernel" \
-            and ffn_fused_eligible(p["up"], p["down"], gate, K):
+            and ffn_fused_eligible(p["up"], p["down"], gate, K,
+                                   shard_dims=sd):
         # Fused megakernel: the (K, d_ff) hidden state never leaves VMEM,
-        # so there is nothing hidden-sized to shard (eligibility already
-        # excludes model-parallel meshes, where the constraint below is
-        # load-bearing for compute placement).
+        # so there is nothing hidden-sized to shard (eligibility excludes
+        # Megatron column-TP meshes, where the constraint below is
+        # load-bearing for compute placement; row-wise "model" axes stay
+        # fused — each device launches on its own row shard).
         return tt_ffn_apply(p["up"], p["down"], gate, x,
-                            act=_ffn_act(cfg), fused_bwd=fb)
+                            act=_ffn_act(cfg), fused_bwd=fb, shard_dims=sd)
     # Megatron cut point: the hidden dim shards on "model".  Dense weights
     # give GSPMD this lineage for free; TT factors are REPLICATED, so an
     # explicit constraint is required or the whole FFN replicates 16x

@@ -39,7 +39,8 @@ from repro.models.moe import moe_apply, moe_init
 from repro.models.ssm import mamba2_apply, mamba2_init, rglru_apply, rglru_init
 
 __all__ = [
-    "init_params", "forward", "loss_fn", "init_cache", "cache_struct",
+    "init_params", "forward", "loss_fn", "lm_head", "token_nll",
+    "init_cache", "cache_struct",
     "map_cache", "cache_descriptors", "CacheLeaf",
     "block_init", "block_apply", "num_params", "param_bytes",
 ]
@@ -326,6 +327,20 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     if features_only:
         return h, None
+    logits = lm_head(params, cfg, h)
+    new_cache = None
+    if mode != "train":
+        new_cache = {"layers": new_stack_cache, "tail": tuple(new_tail_caches)}
+    return logits, new_cache
+
+
+def lm_head(params: dict, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """Final-norm'd features ``h (B, S, d)`` -> logits ``(B, S, Vp)``.
+
+    Shared by ``forward`` and the pipeline's last stage
+    (runtime.pipeline), so the tied-TTM reconstruct path and the sharding
+    constraints cannot diverge between the two.
+    """
     if cfg.tie_embeddings:
         if isinstance(params["embed"], dict):
             table = params["embed"]["table"]
@@ -347,15 +362,11 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array, *,
     # are replicated, so GSPMD has no lineage to shard the (B, S, V) output
     # — unconstrained it replicates ~40 GB/device of logits on 150k-vocab
     # archs (EXPERIMENTS.md §Perf, technique cell iteration).
-    logits = meshctx_constrain(logits, ("pod", "data"), None, "model")
-    new_cache = None
-    if mode != "train":
-        new_cache = {"layers": new_stack_cache, "tail": tuple(new_tail_caches)}
-    return logits, new_cache
+    return meshctx_constrain(logits, ("pod", "data"), None, "model")
 
 
-def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = True):
-    """Next-token cross entropy.  batch: tokens (B,S), labels (B,S), mask.
+def token_nll(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-token ``-log p(label)`` in f32, TP-safe.
 
     The gold logit is extracted with a masked sum over the vocab axis (not
     ``take_along_axis``): under TP the vocab axis is sharded, and a gather
@@ -363,15 +374,19 @@ def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = True):
     logits — the masked sum keeps everything local + one scalar-per-token
     all-reduce.
     """
-    logits, _ = forward(params, cfg, batch["tokens"],
-                        patches=batch.get("patches"), mode="train", remat=remat)
-    labels = batch["labels"]
-    mask = batch.get("mask")
     logits = logits.astype(jnp.float32)
     logz = jax.scipy.special.logsumexp(logits, axis=-1)
     vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
     gold = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
-    nll = logz - gold
+    return logz - gold
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict, *, remat: bool = True):
+    """Next-token cross entropy.  batch: tokens (B,S), labels (B,S), mask."""
+    logits, _ = forward(params, cfg, batch["tokens"],
+                        patches=batch.get("patches"), mode="train", remat=remat)
+    nll = token_nll(logits, batch["labels"])
+    mask = batch.get("mask")
     if mask is not None:
         nll = nll * mask
         denom = jnp.maximum(mask.sum(), 1.0)

@@ -10,6 +10,15 @@ from .compress import (
 )
 from .decode_engine import PagedDecodeEngine, paged_supported
 from .elastic import replan_for_mesh, reshard_tree, validate_divisibility
+from .pipeline import (
+    PIPELINE_AXES,
+    StagePartition,
+    bubble_fraction,
+    cycles_per_stage,
+    make_pipeline_mesh,
+    pipeline_loss_and_grads,
+    stage_utilization,
+)
 from .kv_cache import (
     PagedKVCache,
     kv_pool_bytes,
@@ -32,6 +41,8 @@ __all__ = [
     "param_specs", "batch_specs", "cache_specs", "opt_state_specs",
     "named_sharding_tree", "kv_repeat_for_mesh", "spec_report",
     "StragglerMonitor", "CheckpointCadence",
+    "PIPELINE_AXES", "StagePartition", "bubble_fraction", "cycles_per_stage",
+    "make_pipeline_mesh", "pipeline_loss_and_grads", "stage_utilization",
     "reshard_tree", "replan_for_mesh", "validate_divisibility",
     "quantize_int8", "dequantize_int8", "compressed_allreduce_mean",
     "ef_compress_tree", "ef_init",

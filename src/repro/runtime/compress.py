@@ -43,26 +43,33 @@ def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
 def compressed_allreduce_mean(x: jax.Array, axis_name: str) -> jax.Array:
     """Ring all-reduce with int8 wire format.  Call inside shard_map.
 
-    Reduce phase: each of the n-1 steps quantizes the local partial to int8,
-    ppermutes it one hop, dequantizes and accumulates in f32.  The result on
-    every device after a full loop is the (approximate) sum; divide for mean.
+    Each device quantizes its own contribution ONCE; every one of the n-1
+    ring steps forwards the received ``(q int8, scale)`` chunk VERBATIM one
+    hop and accumulates its dequantization locally in f32.  A contribution
+    crossing k hops is therefore quantized exactly once, so the per-element
+    error of the mean is bounded by ``max_j scale_j / 2`` *independent of
+    ring size n* (asserted in tests/test_pipeline.py).  Re-quantizing the
+    dequantized receive at each hop — the previous scheme — compounds error
+    with n, and the EF residuals (``ef_compress_tree``) only ever see the
+    first quantization, so the compounding would go uncompensated.
     Bytes on wire per element per step: 1 (plus one f32 scale per tensor).
     """
     n = axis_size(axis_name)
     if n == 1:
         return x
     perm = [(i, (i + 1) % n) for i in range(n)]
+    q0, s0 = quantize_int8(x)
 
     def body(i, carry):
-        acc, msg = carry
-        q, s = quantize_int8(msg)
+        acc, q, s = carry
         q = jax.lax.ppermute(q, axis_name, perm)
         s = jax.lax.ppermute(s, axis_name, perm)
-        recv = dequantize_int8(q, s)
-        return acc + recv, recv
+        return acc + dequantize_int8(q, s), q, s
 
-    acc, _ = jax.lax.fori_loop(0, n - 1, body,
-                               (x.astype(jnp.float32), x.astype(jnp.float32)))
+    # The local contribution enters acc unquantized (it never crosses the
+    # wire); only remote chunks pay the one int8 round trip.
+    acc, _, _ = jax.lax.fori_loop(0, n - 1, body,
+                                  (x.astype(jnp.float32), q0, s0))
     return (acc / n).astype(x.dtype)
 
 

@@ -62,7 +62,10 @@ class StragglerMonitor:
 
     @property
     def flag_rate(self) -> float:
-        return self.total_flags / max(self.count, 1)
+        """Fraction of *post-warmup* samples flagged.  Warmup samples can
+        never flag, so counting them dilutes the rate — a long warmup would
+        make an unstable node look healthy to CheckpointCadence."""
+        return self.total_flags / max(self.count - self.warmup, 1)
 
 
 @dataclasses.dataclass
