@@ -1,0 +1,111 @@
+"""Low-precision storage tier: per-dtype ledger rows on the ATIS models.
+
+The paper trains in f32; this module prices the quantized-at-rest tier
+(``core.quant``: bf16 cast, int8 / fp8_e4m3 per-tensor-scaled) against the
+f32 baseline on the paper's own ATIS configs, per training stage.  Every
+byte count comes from the SAME ``training_step_ledger`` the envelope checks
+use — the rows here are the acceptance evidence that the precision dial
+actually shrinks the at-rest pools (weights, saved residuals, gradient
+tier, quantized master params) rather than merely relabeling dtypes.
+
+Emitted rows (CSV via benchmarks.run, JSON schema documented there):
+  precision/atis_<n>enc/<fmt>/<stage>/bytes_ratio
+                          f32 at-rest bytes / <fmt> at-rest bytes for that
+                          stage (params + residuals + attn_residuals +
+                          ffn_hidden [+ grads]; PU: params + grads)
+  precision/atis_<n>enc/<fmt>/<stage>/fewer_bytes
+                          1.0 iff the <fmt> tier is strictly smaller
+  precision/atis_<n>enc/<stage>/ordered
+                          1.0 iff int8 < bf16 < f32 AND fp8 < bf16 —
+                          the scaled formats must beat the cast format,
+                          which must beat the baseline
+  precision/atis_<n>enc/int8/half_or_better
+                          1.0 iff EVERY at-rest row (params, residuals,
+                          attn_residuals, ffn_hidden, grads) is <= 0.5x
+                          its f32 bytes in the int8 config (acceptance)
+  precision/atis_<n>enc/<fmt>/fits
+                          1.0 iff the full step fits 6 + 22.5 MB
+  precision/ledger_int8/<stage>_mb    ledger stage totals, int8 config
+  precision/ledger_int8/fits          vs the paper envelope
+
+Formats swept (grad tier pairs with the storage tier):
+  bfloat16   cast-only weights/acts, bf16 grads — no scales, no SR
+  int8       per-tile-scaled weights/acts + quantized f32 master with
+             in-kernel stochastic-rounding re-write; fp8_e5m2 grads
+  fp8_e4m3   emulated fp8 weights/acts (tiles upcast to f32 in VMEM
+             before the dot); fp8_e5m2 grads
+"""
+from __future__ import annotations
+
+from repro.configs.atis_transformer import config_n
+from repro.core.memory_ledger import (
+    budget_report,
+    ledger_rows,
+    training_step_ledger,
+)
+
+# (storage fmt, grad fmt): int8 grads are rejected (one scale can't span
+# the dynamic range), so the scaled variants take the fp8_e5m2 grad tier.
+FMTS = (("bfloat16", "bfloat16"),
+        ("int8", "fp8_e5m2"),
+        ("fp8_e4m3", "fp8_e5m2"))
+# At-rest rows per stage — everything the precision tier stores between
+# kernel launches (kernel_vmem / tt_intermediates stay at compute width).
+AT_REST = {"FWD": ("params", "residuals", "attn_residuals", "ffn_hidden"),
+           "BWD": ("params", "residuals", "attn_residuals", "ffn_hidden",
+                   "grads"),
+           "PU": ("params", "grads")}
+
+
+def _at_rest(led, stage: str) -> int:
+    return sum(led[stage].entry(name).nbytes for name in AT_REST[stage])
+
+
+def check_rows():
+    """Analytic rows for ``benchmarks.run --check`` (no wall-clock)."""
+    out = []
+    for n_enc in (2, 4, 6):
+        cfg = config_n(n_enc)
+        base = training_step_ledger(cfg, "adamw")
+        led = {}
+        for fmt, gfmt in FMTS:
+            qcfg = cfg.with_precision(param_dtype=fmt, act_dtype=fmt,
+                                      grad_dtype=gfmt)
+            led[fmt] = training_step_ledger(qcfg, "adamw")
+            out.append((f"precision/atis_{n_enc}enc/{fmt}/fits",
+                        1.0 if budget_report(led[fmt])["fits"] else 0.0,
+                        "full quantized step vs the 6+22.5 MB envelope"))
+        for stage in AT_REST:
+            f32b = _at_rest(base, stage)
+            by_fmt = {fmt: _at_rest(led[fmt], stage) for fmt, _ in FMTS}
+            for fmt, _ in FMTS:
+                out.append((
+                    f"precision/atis_{n_enc}enc/{fmt}/{stage.lower()}"
+                    "/bytes_ratio", f32b / by_fmt[fmt],
+                    "f32 at-rest bytes / quantized tier (ledger-derived)"))
+                out.append((
+                    f"precision/atis_{n_enc}enc/{fmt}/{stage.lower()}"
+                    "/fewer_bytes", 1.0 if by_fmt[fmt] < f32b else 0.0,
+                    "1 = quantized at-rest tier strictly smaller"))
+            ordered = (by_fmt["int8"] < by_fmt["bfloat16"] < f32b
+                       and by_fmt["fp8_e4m3"] < by_fmt["bfloat16"])
+            out.append((f"precision/atis_{n_enc}enc/{stage.lower()}/ordered",
+                        1.0 if ordered else 0.0,
+                        "int8/fp8 < bf16 < f32 at-rest bytes"))
+        half = all(
+            led["int8"][stage].entry(name).nbytes
+            <= 0.5 * base[stage].entry(name).nbytes
+            for stage, names in AT_REST.items() for name in names)
+        out.append((f"precision/atis_{n_enc}enc/int8/half_or_better",
+                    1.0 if half else 0.0,
+                    "every int8 at-rest row <= 0.5x its f32 bytes "
+                    "(acceptance)"))
+    return out
+
+
+def rows():
+    out = list(check_rows())
+    cfg = config_n(2).with_precision(param_dtype="int8", act_dtype="int8",
+                                     grad_dtype="fp8_e5m2")
+    out.extend(ledger_rows(cfg, "adamw", "precision/ledger_int8"))
+    return out

@@ -13,7 +13,13 @@ budget (6 MB BRAM + 22.5 MB URAM): sweeping TT rank upward on the 6-encoder
 ATIS model, what is the largest rank whose full training step still fits —
 once with dense AdamW moments, once with the sketched (count-min /
 count-sketch) moments the fused PU kernel can hold instead?  The gap is the
-headroom the sketch buys."""
+headroom the sketch buys.
+
+The precision sweep stacks the quantized-at-rest tier (``core.quant``) on
+the same question: at int8 weights/acts (fp8_e5m2 grads, quantized master
+params), the per-rank at-rest pools shrink ~4x, so the largest fitting
+rank must RISE vs f32 — that gap is the extra model capacity the paper's
+envelope buys from the precision dial alone."""
 from __future__ import annotations
 
 from repro.configs import get_config
@@ -29,8 +35,12 @@ RANKS = (16, 32, 64, 128)
 ATIS_RANKS = (12, 16, 24, 32, 48, 64)
 
 
-def _atis_fits(rank: int, sketched: bool) -> bool:
+def _atis_fits(rank: int, sketched: bool, precision: str = "float32") -> bool:
     cfg = config_n(6).with_tt(rank=rank)
+    if precision != "float32":
+        grad = "bfloat16" if precision == "bfloat16" else "fp8_e5m2"
+        cfg = cfg.with_precision(param_dtype=precision, act_dtype=precision,
+                                 grad_dtype=grad)
     led = training_step_ledger(cfg, "adamw", sketched=sketched)
     return budget_report(led)["fits"]
 
@@ -57,6 +67,33 @@ def atis_envelope_rows():
     out.append(("rank_sweep/atis_6enc/max_rank_sketched_adamw",
                 float(max_sketched),
                 "sketched moments buy this much rank headroom"))
+    # Precision variants: the quantized-at-rest tier shrinks the per-rank
+    # weight/residual/grad/master pools.  With DENSE AdamW the binding row
+    # is the f32 moment pair (8 bytes/param, bram) — quantizing storage
+    # can't move it, so the rank dial only opens when the sketch removes
+    # the dense moments: the acceptance row compares int8+sketched against
+    # f32+sketched.
+    max_by_fmt = {}
+    for fmt in ("bfloat16", "int8"):
+        max_d = max_s = 0
+        for rank in ATIS_RANKS:
+            if _atis_fits(rank, sketched=False, precision=fmt):
+                max_d = rank
+            if _atis_fits(rank, sketched=True, precision=fmt):
+                max_s = rank
+        max_by_fmt[fmt] = (max_d, max_s)
+        out.append((f"rank_sweep/atis_6enc/{fmt}/max_rank_dense_adamw",
+                    float(max_d),
+                    f"largest swept rank inside the envelope at {fmt} "
+                    "weights/acts (dense f32 moments still bind)"))
+        out.append((f"rank_sweep/atis_6enc/{fmt}/max_rank_sketched_adamw",
+                    float(max_s),
+                    f"same at {fmt} with sketched moments + quantized "
+                    "master params"))
+    out.append(("rank_sweep/atis_6enc/int8_rank_headroom",
+                1.0 if max_by_fmt["int8"][1] > max_sketched else 0.0,
+                "1 = int8 storage admits a larger TT rank than f32 on the "
+                "sketched-AdamW step (acceptance)"))
     return out
 
 

@@ -28,6 +28,10 @@ command ``python -m benchmarks.run`` produces a single auditable artifact.
                                                 path: HBM bytes, DECODE
                                                 ledger, tokens/s vs
                                                 concurrency)
+  bench_precision    (beyond paper)            (quantized-at-rest tier:
+                                                int8/fp8/bf16 ledger rows vs
+                                                f32 per training stage on
+                                                ATIS 2/4/6-enc)
 
 Usage::
 
@@ -94,11 +98,12 @@ MODULES = [
     "bench_attn",
     "bench_ffn",
     "bench_decode",
+    "bench_precision",
 ]
 
 # Modules with a fused-vs-unfused analytic byte model (check_rows()).
 CHECK_MODULES = ["bench_pu", "bench_bwd", "bench_attn", "bench_ffn",
-                 "bench_decode"]
+                 "bench_decode", "bench_precision"]
 BASELINE_PATH = os.path.join(os.path.dirname(__file__),
                              "baseline_check.json")
 BASELINE_SLACK = 0.999  # ratios may not fall >0.1% below the baseline

@@ -2,8 +2,15 @@
 
 One definition so the fused-vs-unfused timing columns emitted by different
 modules (bench_pu, bench_bwd, ...) stay methodologically comparable: warm
-the jit cache with one call, then report the median of ``reps`` blocked
-runs in microseconds.
+the jit cache with ``warmup`` fully-blocked calls, then report the median
+of ``reps`` runs, each blocked on EVERY output leaf, in microseconds.
+
+Blocking matters twice: the warmup call must be blocked too (otherwise its
+async dispatch bleeds into the first timed rep), and ``block_until_ready``
+is applied to the whole output pytree — a tuple/dict result with one
+not-yet-ready leaf would otherwise report dispatch latency, not compute.
+(``jax.block_until_ready`` maps over pytree leaves, so every output leaf
+is awaited.)
 """
 from __future__ import annotations
 
@@ -15,12 +22,12 @@ import numpy as np
 __all__ = ["median_us"]
 
 
-def median_us(fn, *args, reps: int = 20) -> float:
-    fn(*args)  # compile
+def median_us(fn, *args, reps: int = 20, warmup: int = 1) -> float:
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(*args))  # compile + settle, fully blocked
     ts = []
     for _ in range(reps):
         t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts) * 1e6)

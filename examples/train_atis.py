@@ -22,9 +22,10 @@ import jax.numpy as jnp
 from repro.checkpoint import CheckpointManager
 from repro.configs.atis_transformer import config_n
 from repro.data import AtisGrammar, atis_batch
+from repro.launch.steps import _grads_at_rest
 from repro.models import init_params, num_params, param_bytes
 from repro.models.classifier import atis_heads_init, atis_loss, atis_metrics
-from repro.optim import adamw, sgd, warmup_cosine
+from repro.optim import adamw, master_view, sgd, warmup_cosine
 from repro.runtime import StragglerMonitor
 
 
@@ -72,6 +73,17 @@ def main(argv=None):
                          "direction, (K, d_ff) hidden state VMEM-resident, "
                          "backward recomputes it from x (--no-fused-ffn = "
                          "two-call path; unset keeps the config)")
+    ap.add_argument("--param-dtype", default=None,
+                    choices=("float32", "bfloat16", "int8", "fp8_e4m3"),
+                    help="at-rest storage for TT half-factors and the "
+                         "fused-update master params (core.quant; fp8 is "
+                         "emulated — tiles upcast to f32 in VMEM)")
+    ap.add_argument("--act-dtype", default=None,
+                    choices=("float32", "bfloat16", "int8", "fp8_e4m3"),
+                    help="at-rest storage for the saved backward residuals")
+    ap.add_argument("--grad-dtype", default=None,
+                    choices=("float32", "bfloat16", "fp8_e5m2"),
+                    help="gradient at-rest tier between BWD and PU")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--eval-every", type=int, default=50)
     args = ap.parse_args(argv)
@@ -85,6 +97,11 @@ def main(argv=None):
         cfg = cfg.with_fused_attn(args.fused_attn)
     if args.fused_ffn is not None:
         cfg = cfg.with_fused_ffn(args.fused_ffn)
+    if args.param_dtype or args.act_dtype or args.grad_dtype:
+        cfg = cfg.with_precision(
+            **{k: v for k, v in (("param_dtype", args.param_dtype),
+                                 ("act_dtype", args.act_dtype),
+                                 ("grad_dtype", args.grad_dtype)) if v})
     if args.scale_down:
         cfg = cfg.scaled_down(d_model=256, n_heads=4, d_ff=256,
                               vocab_size=1000, num_layers=args.encoders,
@@ -102,10 +119,14 @@ def main(argv=None):
     if args.sketched_opt or args.optimizer == "adamw":
         opt = adamw(lr_fn, fused=args.fused, sketched=args.sketched_opt,
                     sketch_width=args.sketch_width,
-                    sketch_depth=args.sketch_depth)
+                    sketch_depth=args.sketch_depth,
+                    param_format=cfg.tt.precision.param_dtype)
     else:
         opt = sgd(lr_fn, fused=args.fused)
     state = opt.init(params)
+    # Quantized-master states own the only parameter copy; align step 1's
+    # forward with the storage grid (identity for unquantized states).
+    params = master_view(state, params)
     if "vs" in state:
         d, w = state["vs"].shape
         print(f"[atis] sketched AdamW: moments as 2x ({d}, {w}) sketches "
@@ -118,6 +139,7 @@ def main(argv=None):
     def step(params, state, batch):
         loss, grads = jax.value_and_grad(
             lambda p: atis_loss(p, cfg, batch))(params)
+        grads = _grads_at_rest(grads, cfg)
         params, state = opt.update(grads, params, state, state["step"])
         return params, state, loss
 

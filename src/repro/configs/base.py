@@ -13,9 +13,47 @@ import importlib
 from typing import Callable
 
 __all__ = [
-    "TTConfig", "MoEConfig", "SSMConfig", "ShapeConfig",
+    "TTConfig", "PrecisionConfig", "MoEConfig", "SSMConfig", "ShapeConfig",
     "ModelConfig", "register", "get_config", "list_archs", "SHAPES",
 ]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionConfig:
+    """Quantized-at-rest storage formats (see ``core.quant``).
+
+    Every compute chain stays f32 on the accumulator side regardless of
+    these knobs — they choose what lives in HBM *between* kernel launches:
+
+    * ``param_dtype`` — TT half-factors as the fused kernels see them, and
+      the fused-update master parameters ("float32" | "bfloat16" | "int8"
+      | "fp8_e4m3").  Scaled formats dequantize inside the kernels.
+    * ``act_dtype`` — activations/residuals saved for the backward (the
+      flash (O, q, k, v) residuals, the TT layer inputs).  ``None``
+      follows the model compute dtype (``ModelConfig.dtype``).
+    * ``grad_dtype`` — gradient at-rest storage between BWD and PU
+      ("float32" | "bfloat16" | "fp8_e5m2"; int8 gradients are not
+      supported — their dynamic range collapses under a single scale).
+    * ``scale_granularity`` — "per_tile": one f32 scale per packed
+      ``(BLOCK_ROWS, LANES)`` block in the fused update (the half-factors
+      are per-tensor either way: each IS one VMEM tile); "per_tensor":
+      one scale per packed buffer.
+    """
+
+    param_dtype: str = "float32"
+    act_dtype: str | None = None
+    grad_dtype: str = "float32"
+    scale_granularity: str = "per_tile"   # "per_tile" | "per_tensor"
+
+    def resolved_act(self, model_dtype: str) -> str:
+        return self.act_dtype or model_dtype
+
+    @property
+    def quantized(self) -> bool:
+        from repro.core.quant import needs_scale
+        return (needs_scale(self.param_dtype)
+                or (self.act_dtype is not None
+                    and needs_scale(self.act_dtype)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +69,7 @@ class TTConfig:
                                   # single fused Pallas kernel (btt_backward)
     scope: tuple[str, ...] = ("attn", "ffn", "embed")  # what gets compressed
     clamp_ranks: bool = True      # False = paper-exact uniform interior ranks
+    precision: PrecisionConfig = PrecisionConfig()  # at-rest storage formats
 
     def on(self, part: str) -> bool:
         return self.mode == "tt" and part in self.scope
@@ -155,6 +194,11 @@ class ModelConfig:
 
     def with_tt(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, tt=dataclasses.replace(self.tt, **kw))
+
+    def with_precision(self, **kw) -> "ModelConfig":
+        """Replace fields of ``tt.precision`` (the at-rest storage tier)."""
+        return self.with_tt(
+            precision=dataclasses.replace(self.tt.precision, **kw))
 
     def with_fused_attn(self, on: bool = True) -> "ModelConfig":
         return dataclasses.replace(self, fused_attn=on)

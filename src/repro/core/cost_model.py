@@ -33,9 +33,24 @@ __all__ = [
     "BRAM_WIDTHS",
     "bram_blocks",
     "bram_efficiency",
+    "sublane",
     "tpu_tile_padded_bytes",
     "tpu_packing_efficiency",
 ]
+
+LANE = 128
+
+
+def sublane(itemsize: int) -> int:
+    """TPU sublane granule (second-minor tile dim) for a dtype's itemsize:
+    f32 8, bf16 16, int8/fp8 32 — the (sublane, 128) native tile.
+
+    THE shared source of this formula: the kernel tile choosers
+    (``btt_linear``/``btt_ffn`` decode granules, ``fused_update``'s packed
+    buffer padding) and the tile-padding byte models below all call this
+    instead of re-deriving the dict locally.
+    """
+    return {4: 8, 2: 16, 1: 32}.get(int(itemsize), 8)
 
 
 # ---------------------------------------------------------------------------
@@ -183,13 +198,12 @@ def tpu_tile_padded_bytes(shape: Sequence[int], dtype_bytes: int = 4) -> int:
     two minor dims ((16,128) for 2-byte dtypes)."""
     if len(shape) == 0:
         return dtype_bytes
-    sublane = 8 * (4 // dtype_bytes)
-    lane = 128
+    sub = sublane(dtype_bytes)
     dims = list(shape)
     if len(dims) == 1:
         dims = [1] + dims
-    minor = math.ceil(dims[-1] / lane) * lane
-    second = math.ceil(dims[-2] / sublane) * sublane
+    minor = math.ceil(dims[-1] / LANE) * LANE
+    second = math.ceil(dims[-2] / sub) * sub
     lead = int(np.prod(dims[:-2])) if len(dims) > 2 else 1
     return lead * second * minor * dtype_bytes
 
@@ -206,8 +220,7 @@ def tpu_packing_efficiency(core_shapes: Sequence[tuple[int, ...]],
     (HBM->VMEM DMA is layout-flexible), so compute is unaffected."""
     ideal = n_layers * sum(int(np.prod(s)) for s in core_shapes) * dtype_bytes
     indiv = n_layers * sum(tpu_tile_padded_bytes(s, dtype_bytes) for s in core_shapes)
-    sublane = 8 * (4 // dtype_bytes)
-    tile = sublane * 128 * dtype_bytes
+    tile = sublane(dtype_bytes) * LANE * dtype_bytes
     packed = sum(
         math.ceil(n_layers * int(np.prod(s)) * dtype_bytes / tile) * tile
         for s in core_shapes

@@ -274,6 +274,7 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     GPipe handoff carries get their own uram row.  ``None`` is exactly the
     single-device ledger.
     """
+    from repro.core import quant as _q
     from repro.models.transformer import init_params
     from repro.optim import adamw as _adamw, sgd as _sgd
 
@@ -294,21 +295,53 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     K = b_mb * seq
     K_res = b_loc * seq
     params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+    prec = cfg.tt.precision
+    param_fmt = prec.param_dtype
+    act_fmt = prec.resolved_act(cfg.dtype)
+    grad_fmt = prec.grad_dtype
     if optimizer == "adamw":
         opt = _adamw(1e-3, sketched=sketched, sketch_width=sketch_width,
-                     sketch_depth=sketch_depth)
+                     sketch_depth=sketch_depth, param_format=param_fmt)
     else:
         opt = _sgd(1e-3, momentum)
     opt_state = jax.eval_shape(opt.init, params)
 
+    # Two itemsizes per tier: compute (kernel-VMEM rows, contraction
+    # transients — f32 accumulator chains regardless of storage) and
+    # AT-REST storage (what HBM holds between stages: core.quant formats).
     act_itemsize = jnp.dtype(cfg.dtype).itemsize
+    act_store = _q.itemsize(act_fmt)
     params_bytes = _tree_bytes(params)
     n_params = _tree_count(params)
-    grads_bytes = n_params * 4  # train steps accumulate grads in f32
+    # Gradient at-rest tier between BWD and PU (steps._grads_at_rest).
+    grads_bytes = n_params * _q.itemsize(grad_fmt)
     moments_bytes = _tree_bytes(opt_state) - 4  # minus the int32 step scalar
+    # Quantized-master state: (pq, ps) ARE the parameters — split them out
+    # of the moment accounting and charge them as the PU params row.
+    if isinstance(opt_state, dict) and "pq" in opt_state:
+        pu_params_bytes = (int(np.prod(opt_state["pq"].shape))
+                           * jnp.dtype(opt_state["pq"].dtype).itemsize
+                           + int(np.prod(opt_state["ps"].shape)) * 4)
+        moments_bytes -= pu_params_bytes
+        pu_params_note = (f"quantized master ({param_fmt} packed + "
+                          "per-block f32 scales; SR re-round in-kernel)")
+    else:
+        pu_params_bytes = params_bytes
+        pu_params_note = "updated in place"
 
     tts, ttms = _collect_modules(params)
     specs = [m.spec for m in tts]
+    # FWD/BWD weight tier: half-factors at the param storage format (one
+    # f32 scale per half-factor — each IS a single VMEM tile); identity
+    # when param_dtype is the compute dtype.
+    if param_fmt not in ("float32", cfg.dtype):
+        fwd_params_bytes = _q.quantized_bytes(
+            n_params, param_fmt, n_scales=2 * max(len(tts), 1))
+        fwd_params_note = (f"TT cores + norms at rest in {param_fmt} "
+                           "(kernels dequantize tiles in VMEM)")
+    else:
+        fwd_params_bytes = params_bytes
+        fwd_params_note = "TT/TTM cores + biases + norms (eval_shape-exact)"
 
     # Contraction intermediates (paper Eq. (21)): layers run sequentially,
     # so the live set is the *largest* layer's, not the sum.
@@ -372,9 +405,9 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
             # stacked layers.
             eff_mult = mult if mult == 1 else max(round(mult * stage_frac), 1)
             ffn_hidden_bytes += eff_mult * (
-                ffn_residual_bytes(K_res, F_, act_itemsize, gated=gated,
+                ffn_residual_bytes(K_res, F_, act_store, gated=gated,
                                    fused=False)
-                - K_res * F_ * act_itemsize)
+                - K_res * F_ * act_store)
 
     # Residuals the fused VJP saves for BWD: one (K, N) input per TT-linear
     # application (stacked modules apply once per stacked layer).  Down
@@ -390,7 +423,7 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         # slice; top-level modules (head/intent) apply once per device.
         eff_mult = mult if mult == 1 else max(round(mult * stage_frac), 1)
         n_tt_apps += eff_mult
-        resid_bytes += eff_mult * K_res * m.spec.in_dim * act_itemsize
+        resid_bytes += eff_mult * K_res * m.spec.in_dim * act_store
     # Attention residuals, per layer: the autodiff-saved (B, h, S, S)
     # probabilities on the blockwise path, or only (O, m, l) with
     # fused_attn — gated on the SAME attn_bwd_vmem_fits the op dispatches
@@ -404,7 +437,7 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     attn_fused_eff = cfg.fused_attn and attn_bwd_vmem_fits(
         seq, cfg.d_head, act_itemsize)
     attn_resid = n_layers * attn_residual_bytes(
-        b_loc, cfg.n_heads, seq, cfg.d_head, act_itemsize,
+        b_loc, cfg.n_heads, seq, cfg.d_head, act_store,
         fused=attn_fused_eff)
     attn_note = ("(O, m, l) per layer — flash bwd recomputes probability "
                  "tiles in VMEM; no S×S residual"
@@ -413,13 +446,13 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
     # Embedding output + positional sum, the first saved activation
     # (one per TTM/dense embedding module).  Under a pipeline partition
     # every stage embeds (uniform SPMD program), so the row stays whole.
-    embed_act = max(len(ttms), 1) * K_res * cfg.d_model * act_itemsize
+    embed_act = max(len(ttms), 1) * K_res * cfg.d_model * act_store
     resid_total = resid_bytes + embed_act
     # GPipe handoff carries: the tick scan saves one (b_mb, seq, d_model)
     # boundary activation per tick for its backward.
     if partition is not None and partition.stages > 1:
         carry_bytes = (partition.ticks * b_mb * seq * cfg.d_model
-                       * act_itemsize)
+                       * act_store)
         carry_note = (f"ppermute handoffs: {partition.ticks} tick(s) x "
                       f"({b_mb}, {seq}, {cfg.d_model}) saved for BWD")
     else:
@@ -463,8 +496,7 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         "or hidden residual" if ffn_fused_any and ffn_hidden_bytes == 0 else
         "activation pre-images saved between the two-call FFN launches")
     fwd = StageLedger("FWD", (
-        LedgerEntry("params", params_bytes, "bram",
-                    "TT/TTM cores + biases + norms (eval_shape-exact)"),
+        LedgerEntry("params", fwd_params_bytes, "bram", fwd_params_note),
         LedgerEntry("residuals", resid_total, "uram",
                     f"fused-VJP saved inputs ({n_tt_apps} TT apps) "
                     "+ embed"),
@@ -485,15 +517,18 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
                     "no megakernel launch (two-call path)"),
         LedgerEntry("pipeline_carries", carry_bytes, "uram", carry_note),
     ))
+    grads_note = ("f32 accumulators" if grad_fmt == "float32" else
+                  f"gradient at-rest tier in {grad_fmt} "
+                  "(steps cast at the BWD->PU boundary)")
     bwd = StageLedger("BWD", (
-        LedgerEntry("params", params_bytes, "bram",
+        LedgerEntry("params", fwd_params_bytes, "bram",
                     "re-read for half-factor rebuild"),
         LedgerEntry("residuals", resid_total, "uram",
                     "consumed as BWD walks the graph"),
         LedgerEntry("attn_residuals", attn_resid, "uram", attn_note),
         LedgerEntry("ffn_hidden", ffn_hidden_bytes, "uram",
                     ffn_hidden_note),
-        LedgerEntry("grads", grads_bytes, "uram", "f32 accumulators"),
+        LedgerEntry("grads", grads_bytes, "uram", grads_note),
         LedgerEntry("tt_intermediates", tt_inter_peak, "uram",
                     "t = x @ B^T recomputed per layer (never stored)"),
         LedgerEntry("kernel_vmem", bwd_kernel_vmem, "uram",
@@ -514,7 +549,7 @@ def training_step_ledger(cfg, optimizer: str = "sgd", *, momentum: float = 0.0,
         LedgerEntry("pipeline_carries", carry_bytes, "uram", carry_note),
     ))
     pu = StageLedger("PU", (
-        LedgerEntry("params", params_bytes, "bram", "updated in place"),
+        LedgerEntry("params", pu_params_bytes, "bram", pu_params_note),
         LedgerEntry("moments", moments_bytes, "bram", moments_note),
         LedgerEntry("grads", grads_bytes, "uram", "consumed by the update"),
         LedgerEntry("kernel_vmem", pu_kernel_vmem, "uram", pu_vmem_note),
@@ -547,9 +582,22 @@ def decode_step_ledger(cfg, *, batch: int = 1, max_len: int = 128,
     if not paged_supported(cfg):
         raise ValueError(f"decode ledger needs attention-family blocks, "
                          f"got {cfg.hybrid_pattern}")
+    from repro.core import quant as _q
+
     params = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
     act_itemsize = jnp.dtype(cfg.dtype).itemsize
     params_bytes = _tree_bytes(params)
+    param_fmt = cfg.tt.precision.param_dtype
+    if param_fmt not in ("float32", cfg.dtype):
+        # Serving tier: weights at rest in the param format (the decode ops
+        # round-trip through it — core.quant.cast_format).
+        n_w = _tree_count(params)
+        n_tt = len(_collect_modules(params)[0])
+        params_bytes = _q.quantized_bytes(n_w, param_fmt,
+                                          n_scales=2 * max(n_tt, 1))
+        params_note = f"weights at rest in {param_fmt} (decode round-trips)"
+    else:
+        params_note = "TT/TTM cores + biases + norms (eval_shape-exact)"
     B = batch
 
     # Paged KV pools, one per window group — the engine's own layout.
@@ -594,8 +642,7 @@ def decode_step_ledger(cfg, *, batch: int = 1, max_len: int = 128,
             ffn_hidden = max(ffn_hidden, B * F_ * act_itemsize)
 
     return StageLedger("DECODE", (
-        LedgerEntry("params", params_bytes, "bram",
-                    "TT/TTM cores + biases + norms (eval_shape-exact)"),
+        LedgerEntry("params", params_bytes, "bram", params_note),
         LedgerEntry("kv_pages", kv_bytes, "uram",
                     f"paged KV pools ({len(windows)} group(s), "
                     f"page={page_size}, {B} slot(s), max_len={max_len})"),

@@ -1,0 +1,240 @@
+"""Quantized-at-rest storage tier: int8 / fp8 formats, per-tensor scales,
+and deterministic counter-based stochastic rounding.
+
+The paper trains at FP32; its direct ancestor (arXiv 2104.03420, "A
+Low-Precision Tensor Method") shows tensorized training survives
+low-bitwidth storage because every contraction keeps a high-precision
+accumulator chain.  This module is the substrate for that tier here:
+
+* **Formats** — ``int8`` (symmetric, per-tensor max-abs scale, qmax 127),
+  ``fp8_e4m3`` (weights; qmax 448) and ``fp8_e5m2`` (gradients; qmax
+  57344) via the native JAX fp8 dtypes, plus the cast-only ``bfloat16``
+  and identity ``float32``.  fp8 matmuls are *emulated*: kernels upcast
+  the stored tiles to f32 in VMEM before the MXU dot — the contract the
+  fused kernels implement ("dequantize weight tiles into VMEM registers,
+  keep f32 accumulator chains").
+
+* **Quantize/dequantize** — ``quantize`` is round-to-nearest (used at the
+  custom-VJP boundaries, where determinism against the oracle matters);
+  stochastic rounding is reserved for the parameter update, where the
+  rounding bias would otherwise accumulate step over step.
+
+* **Stochastic rounding** — counter-based (a splitmix/xxhash-style integer
+  mix of ``(element index, step, block id)``), NOT a stateful PRNG: the
+  same (step, block) always produces the same rounding decisions, so a
+  training run resumed from a checkpoint replays bit-identical updates.
+  The same helper runs inside Pallas kernel bodies (interpret mode
+  included) and on the host, which is what the unbiasedness/determinism
+  property tests exercise.
+
+Scale granularity: per-tensor for the half-factors (each half-factor IS a
+single VMEM-resident tile in the fused kernels, so per-tensor == per-tile
+there) and per-packed-block for the fused-update master parameters (one
+f32 scale per ``(BLOCK_ROWS, LANES)`` tile of the packed PU layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QuantFormat", "FORMATS", "HAVE_FP8",
+    "resolve", "itemsize", "needs_scale", "storage_dtype", "qmax",
+    "quantize", "dequantize", "cast_format",
+    "counter_bits", "counter_uniform", "stochastic_round",
+    "quantized_bytes",
+]
+
+# fp8 dtypes ship with jax's ml_dtypes dependency; gate anyway so the
+# module degrades to int8-only on builds without them (no new installs).
+HAVE_FP8 = hasattr(jnp, "float8_e4m3fn") and hasattr(jnp, "float8_e5m2")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantFormat:
+    name: str
+    itemsize: int
+    qmax: float | None      # None = cast-only (no scale)
+    dtype_name: str         # attribute on jnp
+
+    @property
+    def dtype(self):
+        return getattr(jnp, self.dtype_name)
+
+    @property
+    def needs_scale(self) -> bool:
+        return self.qmax is not None
+
+
+FORMATS: dict[str, QuantFormat] = {
+    "float32": QuantFormat("float32", 4, None, "float32"),
+    "bfloat16": QuantFormat("bfloat16", 2, None, "bfloat16"),
+    "int8": QuantFormat("int8", 1, 127.0, "int8"),
+}
+if HAVE_FP8:
+    FORMATS["fp8_e4m3"] = QuantFormat("fp8_e4m3", 1, 448.0, "float8_e4m3fn")
+    FORMATS["fp8_e5m2"] = QuantFormat("fp8_e5m2", 1, 57344.0, "float8_e5m2")
+
+
+def resolve(fmt: str) -> QuantFormat:
+    if fmt not in FORMATS:
+        known = sorted(FORMATS)
+        hint = ("" if HAVE_FP8 else
+                " (fp8 formats unavailable: this jax lacks fp8 dtypes)")
+        raise ValueError(f"unknown precision format {fmt!r}; known "
+                         f"{known}{hint}")
+    return FORMATS[fmt]
+
+
+def itemsize(fmt: str) -> int:
+    return resolve(fmt).itemsize
+
+
+def needs_scale(fmt: str) -> bool:
+    return resolve(fmt).needs_scale
+
+
+def storage_dtype(fmt: str):
+    return resolve(fmt).dtype
+
+
+def qmax(fmt: str) -> float:
+    q = resolve(fmt).qmax
+    if q is None:
+        raise ValueError(f"{fmt} is cast-only; it has no quantization range")
+    return q
+
+
+# ---------------------------------------------------------------------------
+# Per-tensor quantize / dequantize (round-to-nearest; VJP-boundary path).
+# ---------------------------------------------------------------------------
+
+_TINY = 1e-30  # scale floor: all-zero tensors quantize to zeros at scale 1/qmax
+
+
+def quantize(x: jax.Array, fmt: str) -> tuple[jax.Array, jax.Array]:
+    """``x -> (q, scale)`` with symmetric per-tensor max-abs scaling.
+
+    ``scale`` is a () f32 array such that ``q * scale ~= x``; cast-only
+    formats return ``scale = 1``.  int8 rounds to nearest (ties away from
+    zero, ``jnp.round``); fp8 uses the dtype's native nearest conversion.
+    """
+    f = resolve(fmt)
+    if not f.needs_scale:
+        return x.astype(f.dtype), jnp.float32(1.0)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = (jnp.maximum(amax, _TINY) / f.qmax).astype(jnp.float32)
+    z = x.astype(jnp.float32) / scale
+    if f.name == "int8":
+        q = jnp.clip(jnp.round(z), -f.qmax, f.qmax).astype(jnp.int8)
+    else:
+        q = jnp.clip(z, -f.qmax, f.qmax).astype(f.dtype)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array,
+               dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def cast_format(x: jax.Array, fmt: str) -> jax.Array:
+    """Round-trip ``x`` through the at-rest storage format (cast-only
+    formats: one cast down and back).  Used for gradient at-rest storage,
+    where fp8_e5m2's wide exponent makes it self-describing (no scale)."""
+    f = resolve(fmt)
+    if f.name == "float32":
+        return x
+    if f.needs_scale:
+        q, s = quantize(x, fmt)
+        return dequantize(q, s, x.dtype)
+    return x.astype(f.dtype).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Counter-based stochastic rounding (deterministic in (idx, step, block)).
+# ---------------------------------------------------------------------------
+
+_M1 = np.uint32(2654435761)   # Knuth multiplicative hash
+_M2 = np.uint32(2246822519)   # xxhash PRIME32_2
+_M3 = np.uint32(3266489917)   # xxhash PRIME32_3
+
+
+def counter_bits(idx: jax.Array, step, block) -> jax.Array:
+    """uint32 hash of ``(element index, step, block id)`` — the stochastic
+    rounding noise source.  Pure integer arithmetic (wrapping uint32), so
+    it evaluates identically inside a Pallas kernel body, under interpret
+    mode, and on the host; and it is a pure function of its arguments, so
+    updates replay bit-identically across checkpoint resume."""
+    step = jnp.asarray(step).astype(jnp.uint32)
+    block = jnp.asarray(block).astype(jnp.uint32)
+    x = idx.astype(jnp.uint32) * _M1
+    x = x ^ (step * _M2) ^ (block * _M3)
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 13)
+    x = x * _M3
+    x = x ^ (x >> 16)
+    return x
+
+
+def counter_uniform(idx: jax.Array, step, block) -> jax.Array:
+    """f32 uniforms in [0, 1) from the counter hash (top 24 bits)."""
+    bits = counter_bits(idx, step, block)
+    return (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(2.0**-24)
+
+
+# f32 mantissa bits to drop when truncating to each fp8 format's grid.
+_FP8_DROP = {"fp8_e4m3": 20, "fp8_e5m2": 21}
+
+
+def stochastic_round(z: jax.Array, fmt: str, step, block) -> jax.Array:
+    """Stochastically round ``z`` (already divided by its scale, so
+    ``|z| <= qmax``) onto the storage grid of ``fmt``.
+
+    int8: ``floor(z + u)`` with u ~ U[0,1) — the classic unbiased SR.
+    fp8:  add the uniform's bits below the kept mantissa and truncate
+          (bit-pattern monotonicity makes carry propagation into the
+          exponent do the right thing for normal floats), then cast.
+    Both are deterministic in ``(element index, step, block)``.
+    """
+    f = resolve(fmt)
+    if not f.needs_scale:
+        raise ValueError(f"stochastic_round targets a scaled format, "
+                         f"not {fmt}")
+    if z.ndim == 2:
+        # The kernel-body case: row-major flat index from 2-D iotas (TPU
+        # has no 1-D iota).
+        r, c = z.shape
+        idx = (jax.lax.broadcasted_iota(jnp.int32, (r, c), 0) * c
+               + jax.lax.broadcasted_iota(jnp.int32, (r, c), 1))
+    else:
+        n = max(int(np.prod(z.shape)), 1) if z.ndim else 1
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1).reshape(z.shape)
+    bits = counter_bits(idx, step, block)
+    z = jnp.clip(z.astype(jnp.float32), -f.qmax, f.qmax)
+    if f.name == "int8":
+        u = (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(2.0**-24)
+        return jnp.clip(jnp.floor(z + u), -f.qmax, f.qmax).astype(jnp.int8)
+    drop = _FP8_DROP[f.name]
+    mask = np.uint32((1 << drop) - 1)
+    zb = jax.lax.bitcast_convert_type(z, jnp.uint32)
+    zb = (zb + (bits & mask)) & ~mask
+    zr = jax.lax.bitcast_convert_type(zb, jnp.float32)
+    return jnp.clip(zr, -f.qmax, f.qmax).astype(f.dtype)
+
+
+# ---------------------------------------------------------------------------
+# At-rest byte accounting (ledger/cost-model hook).
+# ---------------------------------------------------------------------------
+
+
+def quantized_bytes(n_elems: int, fmt: str, *, n_scales: int = 1) -> int:
+    """Bytes ``n_elems`` occupy at rest in ``fmt``, including the f32
+    scale sidecar for scaled formats (``n_scales`` = per-tensor count or
+    per-block count for the packed PU layout)."""
+    f = resolve(fmt)
+    extra = 4 * n_scales if f.needs_scale else 0
+    return n_elems * f.itemsize + extra

@@ -116,12 +116,15 @@ _btt_fused.defvjp(_btt_fused_fwd, _btt_fused_bwd)
 
 def tt_linear_apply(params: TTLinearParams, x: jax.Array, *,
                     flow: str = "btt_fused",
-                    fused_bwd: bool = True) -> jax.Array:
+                    fused_bwd: bool = True,
+                    precision=None) -> jax.Array:
     """Apply ``y = W x + b`` with W in TT format.  ``x (..., N) -> (..., M)``.
 
     ``fused_bwd`` only affects ``flow="kernel"``: True (default) runs the
     BWD stage as the single fused Pallas kernel (``kernels.btt_backward``),
     False forces the operand-swap + XLA-GEMM reference backward.
+    ``precision`` (a ``PrecisionConfig``) likewise only affects
+    ``flow="kernel"`` — the pure-JAX flows stay f32 references.
     """
     spec = params.spec
     lead = x.shape[:-1]
@@ -137,7 +140,7 @@ def tt_linear_apply(params: TTLinearParams, x: jax.Array, *,
     elif flow == "kernel":
         from repro.kernels.ops import btt_linear_op  # lazy: pallas import
         y = btt_linear_op(params.cores, xk, spec, use_kernel=True,
-                          fused_bwd=fused_bwd)
+                          fused_bwd=fused_bwd, precision=precision)
     else:
         raise ValueError(f"unknown flow {flow!r}; expected one of {FLOWS}")
     if params.out_dim != spec.out_dim:

@@ -197,9 +197,75 @@ def _bwd_kernel(x_ref, gy_ref, b_ref, a_ref, gx_ref, ga_ref, gb_ref,
         )
 
 
-@functools.partial(jax.jit, static_argnames=("tk", "tn", "interpret"))
+def _bwd_kernel_q(s_ref, x_ref, gy_ref, b_ref, a_ref, gx_ref, ga_ref,
+                  gb_ref, t_ref, gt_ref, *, n_blocks: int, tn: int):
+    """Quantized-operand BWD: x/b/a arrive in storage dtypes with SMEM
+    scales ``s = [s_x, s_b, s_a]`` (``gy`` is the compute-dtype cotangent)
+    and dequantize tile-by-tile in VMEM.  The gradients are those of the
+    DEQUANTIZED operands (straight-through: rounding treated as identity),
+    so every product below is against ``s * q`` and the f32 accumulator
+    chain of ``_bwd_kernel`` is preserved."""
+    k = pl.program_id(0)
+    n = pl.program_id(1)
+
+    @pl.when((k == 0) & (n == 0))
+    def _zero_accumulators():
+        ga_ref[...] = jnp.zeros_like(ga_ref)
+        gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    s_x = s_ref[0, 0]
+    s_b = s_ref[0, 1]
+    b_f = b_ref[...].astype(jnp.float32)
+    x_f = x_ref[...].astype(jnp.float32)
+
+    @pl.when(n == 0)
+    def _row_start():
+        t_ref[...] = jnp.zeros_like(t_ref)
+        # gt = gy @ (s_a * a), once per K row-block.
+        gt_ref[...] = jax.lax.dot_general(
+            gy_ref[...].astype(jnp.float32),
+            a_ref[...].astype(jnp.float32),
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * s_ref[0, 2]
+
+    # t += (s_x x) @ (s_b b)^T — t accumulates the DEQUANTIZED intermediate.
+    t_ref[...] += jax.lax.dot_general(
+        x_f, b_f,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * (s_x * s_b)
+
+    # gx tile: gt @ (s_b b), streamed out in the compute dtype.
+    gx_ref[...] = (jax.lax.dot_general(
+        gt_ref[...], b_f,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * s_b).astype(gx_ref.dtype)
+
+    # gb column block: gt^T @ (s_x x), f32-resident accumulator.
+    col = pl.multiple_of(n * tn, tn)
+    gb_ref[:, pl.ds(col, tn)] += jax.lax.dot_general(
+        gt_ref[...], x_f,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * s_x
+
+    @pl.when(n == n_blocks - 1)
+    def _fold_ga():
+        # t already carries both scales: ga += gy^T @ t unchanged.
+        ga_ref[...] += jax.lax.dot_general(
+            gy_ref[...].astype(jnp.float32), t_ref[...],
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tk", "tn", "interpret", "out_dtype"))
 def btt_backward_pallas(x: jax.Array, gy: jax.Array, b: jax.Array,
-                        a: jax.Array, *, tk: int | None = None,
+                        a: jax.Array, *, scales: jax.Array | None = None,
+                        out_dtype=None, tk: int | None = None,
                         tn: int | None = None, interpret: bool = False
                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused BWD stage: ``(gx (K, N), ga (M, R) f32, gb (R, N) f32)``.
@@ -211,12 +277,18 @@ def btt_backward_pallas(x: jax.Array, gy: jax.Array, b: jax.Array,
     contribute nothing to any product).  ``interpret=True`` runs the kernel
     body in Python on CPU — the validation path, as for every kernel in
     this package.
+
+    ``scales`` ((1, 3) f32 ``[s_x, s_b, s_a]``) switches to the
+    quantized-operand kernel (``_bwd_kernel_q``): x/b/a stream in storage
+    dtypes, dequantize in VMEM, and the returned gradients are w.r.t. the
+    dequantized operands; ``out_dtype`` names ``gx``'s compute dtype.
     """
     K, N = x.shape
     _, M = gy.shape
     R, _ = b.shape
+    out_dtype = out_dtype or x.dtype
 
-    itemsize = jnp.dtype(x.dtype).itemsize
+    itemsize = max(jnp.dtype(v.dtype).itemsize for v in (x, gy, b, a))
     tk, tn, mp, rp, np_, _ = choose_bwd_tiles(M, N, R, itemsize, tk=tk,
                                               tn=tn, K=K)
 
@@ -229,22 +301,33 @@ def btt_backward_pallas(x: jax.Array, gy: jax.Array, b: jax.Array,
     n_blocks = np_ // tn
     grid = (kp // tk, n_blocks)
 
+    data_specs = [
+        pl.BlockSpec((tk, tn), lambda k, n: (k, n)),    # x
+        pl.BlockSpec((tk, mp), lambda k, n: (k, 0)),    # gy
+        pl.BlockSpec((rp, tn), lambda k, n: (0, n)),    # b
+        pl.BlockSpec((mp, rp), lambda k, n: (0, 0)),    # a (resident)
+    ]
+    if scales is None:
+        kern = functools.partial(_bwd_kernel, n_blocks=n_blocks, tn=tn)
+        in_specs, operands = data_specs, (xp, gyp, bp, ap)
+    else:
+        kern = functools.partial(_bwd_kernel_q, n_blocks=n_blocks, tn=tn)
+        in_specs = [pl.BlockSpec((1, 3), lambda k, n: (0, 0),
+                                 memory_space=pltpu.SMEM)] + data_specs
+        operands = (scales.astype(jnp.float32).reshape(1, 3),
+                    xp, gyp, bp, ap)
+
     gx, ga, gb = pl.pallas_call(
-        functools.partial(_bwd_kernel, n_blocks=n_blocks, tn=tn),
+        kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tk, tn), lambda k, n: (k, n)),    # x
-            pl.BlockSpec((tk, mp), lambda k, n: (k, 0)),    # gy
-            pl.BlockSpec((rp, tn), lambda k, n: (0, n)),    # b
-            pl.BlockSpec((mp, rp), lambda k, n: (0, 0)),    # a (resident)
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((tk, tn), lambda k, n: (k, n)),    # gx
             pl.BlockSpec((mp, rp), lambda k, n: (0, 0)),    # ga (accumulator)
             pl.BlockSpec((rp, np_), lambda k, n: (0, 0)),   # gb (accumulator)
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((kp, np_), x.dtype),
+            jax.ShapeDtypeStruct((kp, np_), out_dtype),
             jax.ShapeDtypeStruct((mp, rp), jnp.float32),
             jax.ShapeDtypeStruct((rp, np_), jnp.float32),
         ],
@@ -258,7 +341,7 @@ def btt_backward_pallas(x: jax.Array, gy: jax.Array, b: jax.Array,
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(xp, gyp, bp, ap)
+    )(*operands)
     return gx[:K, :N], ga[:M, :R], gb[:R, :N]
 
 

@@ -56,7 +56,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
 
-from .btt_linear import DEFAULT_TK, VMEM_BUDGET, _round_up, choose_tiles
+from .btt_linear import (
+    DEFAULT_TK,
+    VMEM_BUDGET,
+    _round_up,
+    _sublane as _decode_sublane,
+    choose_tiles,
+)
 
 __all__ = [
     "btt_ffn_pallas",
@@ -200,21 +206,20 @@ def _dot(x, w, dims, out=jnp.float32):
                                preferred_element_type=out)
 
 
-def _half_linear(x, b_ref, a_ref, out_dtype):
+def _half_linear(x, b, a, out_dtype):
     """One BTT linear exactly as ``btt_linear_pallas`` computes it:
     ``t = x @ b^T`` (f32), ``y = (t cast) @ a^T`` (f32, cast to out)."""
-    t = _dot(x, b_ref[...], ((1,), (1,)))
-    y = _dot(t.astype(a_ref.dtype), a_ref[...], ((1,), (1,)))
+    t = _dot(x, b, ((1,), (1,)))
+    y = _dot(t.astype(a.dtype), a, ((1,), (1,)))
     return t, y.astype(out_dtype)
 
 
-def _hidden(x, b1_ref, a1_ref, bg_ref, ag_ref, act: str, f_logical: int,
-            dt):
+def _hidden(x, b1, a1, bg, ag, act: str, f_logical: int, dt):
     """Recompute the block's hidden tile (and everything needed for its
     VJP) from x: returns (t1, u, tg, g, h) — tg/g None when ungated."""
-    t1, u = _half_linear(x, b1_ref, a1_ref, dt)
-    if bg_ref is not None:
-        tg, g = _half_linear(x, bg_ref, ag_ref, dt)
+    t1, u = _half_linear(x, b1, a1, dt)
+    if bg is not None:
+        tg, g = _half_linear(x, bg, ag, dt)
         h = ACTS[act](g) * u
     else:
         tg = g = None
@@ -222,8 +227,22 @@ def _hidden(x, b1_ref, a1_ref, bg_ref, ag_ref, act: str, f_logical: int,
     return t1, u, tg, g, _mask_cols(h, f_logical)
 
 
-def _ffn_fwd_kernel(*refs, act: str, f_logical: int, gated: bool):
+def _deq_operands(s_ref, x_ref, factor_refs):
+    """Dequantize the FFN operand refs into f32 VMEM values: x at scale
+    slot 0, half-factors at their fixed slots [b1, a1, bg, ag, b2, a2] =
+    s[1..6] (gate slots unused when ungated).  The low-precision tiles are
+    upcast HERE, in VMEM — the dense f32 tensors never exist in HBM."""
+    x = x_ref[...].astype(jnp.float32) * s_ref[0, 0]
+    facs = [r[...].astype(jnp.float32) * s_ref[0, 1 + i] if r is not None
+            else None for i, r in enumerate(factor_refs)]
+    return x, facs
+
+
+def _ffn_fwd_kernel(*refs, act: str, f_logical: int, gated: bool,
+                    quant: bool):
     """Grid (nK,); see module docstring for block shapes."""
+    if quant:
+        s_ref, *refs = refs
     if gated:
         x_ref, b1_ref, a1_ref, bg_ref, ag_ref, b2_ref, a2_ref, \
             y_ref, h_ref = refs
@@ -231,17 +250,29 @@ def _ffn_fwd_kernel(*refs, act: str, f_logical: int, gated: bool):
         x_ref, b1_ref, a1_ref, b2_ref, a2_ref, y_ref, h_ref = refs
         bg_ref = ag_ref = None
 
-    dt = x_ref.dtype
-    _, _, _, _, h = _hidden(x_ref[...], b1_ref, a1_ref, bg_ref, ag_ref,
-                            act, f_logical, dt)
+    dt = y_ref.dtype
+    if quant:
+        x, (b1, a1, bg, ag, b2, a2) = _deq_operands(
+            s_ref, x_ref, (b1_ref, a1_ref, bg_ref, ag_ref, b2_ref, a2_ref))
+    else:
+        x, b1, a1, b2, a2 = (x_ref[...], b1_ref[...], a1_ref[...],
+                             b2_ref[...], a2_ref[...])
+        bg = bg_ref[...] if gated else None
+        ag = ag_ref[...] if gated else None
+    _, _, _, _, h = _hidden(x, b1, a1, bg, ag, act, f_logical, dt)
     h_ref[...] = h  # VMEM scratch: produced and consumed in this grid step
-    _, y = _half_linear(h_ref[...], b2_ref, a2_ref, y_ref.dtype)
+    _, y = _half_linear(h_ref[...], b2, a2, y_ref.dtype)
     y_ref[...] = y
 
 
-def _ffn_bwd_kernel(*refs, act: str, f_logical: int, gated: bool):
+def _ffn_bwd_kernel(*refs, act: str, f_logical: int, gated: bool,
+                    quant: bool):
     """Grid (nK,): recompute the hidden tile from x, then run the whole
-    block's VJP with ga/gb accumulated in VMEM-resident f32 blocks."""
+    block's VJP with ga/gb accumulated in VMEM-resident f32 blocks.  In
+    quant mode operands dequantize at entry and the gradients are those
+    of the dequantized operands (straight-through)."""
+    if quant:
+        s_ref, *refs = refs
     if gated:
         (x_ref, gy_ref, b1_ref, a1_ref, bg_ref, ag_ref, b2_ref, a2_ref,
          gx_ref, ga1_ref, gb1_ref, gag_ref, gbg_ref, ga2_ref, gb2_ref,
@@ -260,14 +291,20 @@ def _ffn_bwd_kernel(*refs, act: str, f_logical: int, gated: bool):
             if r is not None:
                 r[...] = jnp.zeros_like(r)
 
-    dt = x_ref.dtype
-    x = x_ref[...]
+    dt = gx_ref.dtype
+    if quant:
+        x, (b1, a1, bg, ag, b2, a2) = _deq_operands(
+            s_ref, x_ref, (b1_ref, a1_ref, bg_ref, ag_ref, b2_ref, a2_ref))
+    else:
+        x, b1, a1, b2, a2 = (x_ref[...], b1_ref[...], a1_ref[...],
+                             b2_ref[...], a2_ref[...])
+        bg = bg_ref[...] if gated else None
+        ag = ag_ref[...] if gated else None
     gy = gy_ref[...]
 
     # Recompute the forward up to the hidden tile (paper-style: residuals
     # are x only; the hidden state never existed in HBM to reload).
-    t1, u, tg, g, h = _hidden(x, b1_ref, a1_ref, bg_ref, ag_ref,
-                              act, f_logical, dt)
+    t1, u, tg, g, h = _hidden(x, b1, a1, bg, ag, act, f_logical, dt)
     h_ref[...] = h
     u_ref[...] = u
     if gated:
@@ -276,9 +313,9 @@ def _ffn_bwd_kernel(*refs, act: str, f_logical: int, gated: bool):
     # Down-projection backward (btt_backward's exact contraction set with
     # x := h): t2 recomputed, gh streamed to the act VJP, ga2/gb2
     # accumulated f32.
-    t2 = _dot(h_ref[...], b2_ref[...], ((1,), (1,)))
-    gt2 = _dot(gy, a2_ref[...], ((1,), (0,)))
-    gh = _dot(gt2.astype(b2_ref.dtype), b2_ref[...], ((1,), (0,))).astype(dt)
+    t2 = _dot(h_ref[...], b2, ((1,), (1,)))
+    gt2 = _dot(gy, a2, ((1,), (0,)))
+    gh = _dot(gt2.astype(b2.dtype), b2, ((1,), (0,))).astype(dt)
     ga2_ref[...] += _dot(gy.astype(jnp.float32), t2, ((0,), (0,)))
     gb2_ref[...] += _dot(gt2, h_ref[...].astype(jnp.float32), ((0,), (0,)))
 
@@ -297,14 +334,13 @@ def _ffn_bwd_kernel(*refs, act: str, f_logical: int, gated: bool):
 
     # Up (and gate) projection backward; gx summed across branches in the
     # storage dtype, as autodiff sums the two x-cotangents.
-    gt1 = _dot(gu, a1_ref[...], ((1,), (0,)))
-    gx = _dot(gt1.astype(b1_ref.dtype), b1_ref[...], ((1,), (0,))).astype(dt)
+    gt1 = _dot(gu, a1, ((1,), (0,)))
+    gx = _dot(gt1.astype(b1.dtype), b1, ((1,), (0,))).astype(dt)
     ga1_ref[...] += _dot(gu.astype(jnp.float32), t1, ((0,), (0,)))
     gb1_ref[...] += _dot(gt1, x.astype(jnp.float32), ((0,), (0,)))
     if gated:
-        gtg = _dot(gg_, ag_ref[...], ((1,), (0,)))
-        gx = gx + _dot(gtg.astype(bg_ref.dtype), bg_ref[...],
-                       ((1,), (0,))).astype(dt)
+        gtg = _dot(gg_, ag, ((1,), (0,)))
+        gx = gx + _dot(gtg.astype(bg.dtype), bg, ((1,), (0,))).astype(dt)
         gag_ref[...] += _dot(gg_.astype(jnp.float32), tg, ((0,), (0,)))
         gbg_ref[...] += _dot(gtg, x.astype(jnp.float32), ((0,), (0,)))
     gx_ref[...] = gx
@@ -329,12 +365,18 @@ def _dims(x, gy, b1, a1, b2, a2, bg):
     return K, N, F, M, R1, R2, Rg
 
 
+def _ffn_itemsize(x, factors) -> int:
+    return max(jnp.dtype(v.dtype).itemsize
+               for v in (x, *[f for f in factors if f is not None]))
+
+
 @functools.partial(jax.jit, static_argnames=("act", "f_logical", "tk",
-                                             "interpret"))
+                                             "interpret", "out_dtype"))
 def btt_ffn_pallas(x: jax.Array, b1: jax.Array, a1: jax.Array,
                    b2: jax.Array, a2: jax.Array,
                    bg: jax.Array | None = None, ag: jax.Array | None = None,
                    *, act: str = "gelu", f_logical: int | None = None,
+                   scales: jax.Array | None = None, out_dtype=None,
                    tk: int | None = None,
                    interpret: bool = False) -> jax.Array:
     """Fused FFN forward: ``x (K, N) -> y (K, M)`` through both (three when
@@ -346,12 +388,18 @@ def btt_ffn_pallas(x: jax.Array, b1: jax.Array, a1: jax.Array,
     two-call path's slice-then-repad does.  Padding to hardware tiles is
     exact for every contraction here (``act(0) = 0`` for gelu/silu, so
     padded hidden columns contribute nothing through the zero-padded B2).
+
+    ``scales`` (a (1, 8) f32 ``[s_x, s_b1, s_a1, s_bg, s_ag, s_b2, s_a2,
+    pad]``) switches to the quantized-operand kernel: operands stream in
+    storage dtypes and dequantize at kernel entry in VMEM; ``out_dtype``
+    then names the compute dtype of ``y`` and the hidden scratch.
     """
     gated = bg is not None
     K, N, F, M, R1, R2, Rg = _dims(x, None, b1, a1, b2, a2, bg)
     if f_logical is None:
         f_logical = F
-    itemsize = jnp.dtype(x.dtype).itemsize
+    out_dtype = out_dtype or x.dtype
+    itemsize = _ffn_itemsize(x, (b1, a1, b2, a2, bg, ag))
     tk, mp, np_, fp, r1p, r2p, rgp, _, _ = choose_ffn_tiles(
         M, N, F, R1, R2, Rg, itemsize, tk=tk, K=K)
 
@@ -374,15 +422,19 @@ def btt_ffn_pallas(x: jax.Array, b1: jax.Array, a1: jax.Array,
         pl.BlockSpec((r2p, fp), lambda k: (0, 0)),   # b2 (resident)
         pl.BlockSpec((mp, r2p), lambda k: (0, 0)),   # a2 (resident)
     ]
+    if scales is not None:
+        ops_ = [scales.astype(jnp.float32).reshape(1, 8)] + ops_
+        in_specs = [pl.BlockSpec((1, 8), lambda k: (0, 0),
+                                 memory_space=pltpu.SMEM)] + in_specs
 
     y = pl.pallas_call(
         functools.partial(_ffn_fwd_kernel, act=act, f_logical=f_logical,
-                          gated=gated),
+                          gated=gated, quant=scales is not None),
         grid=(kp // tk,),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((tk, mp), lambda k: (k, 0)),
-        out_shape=jax.ShapeDtypeStruct((kp, mp), x.dtype),
-        scratch_shapes=[pltpu.VMEM((tk, fp), x.dtype)],  # the hidden tile
+        out_shape=jax.ShapeDtypeStruct((kp, mp), out_dtype),
+        scratch_shapes=[pltpu.VMEM((tk, fp), out_dtype)],  # the hidden tile
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",),
         ),
@@ -392,23 +444,30 @@ def btt_ffn_pallas(x: jax.Array, b1: jax.Array, a1: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("act", "f_logical", "tk",
-                                             "interpret"))
+                                             "interpret", "out_dtype"))
 def btt_ffn_bwd_pallas(x: jax.Array, gy: jax.Array, b1: jax.Array,
                        a1: jax.Array, b2: jax.Array, a2: jax.Array,
                        bg: jax.Array | None = None,
                        ag: jax.Array | None = None, *, act: str = "gelu",
-                       f_logical: int | None = None, tk: int | None = None,
+                       f_logical: int | None = None,
+                       scales: jax.Array | None = None, out_dtype=None,
+                       tk: int | None = None,
                        interpret: bool = False) -> tuple:
     """Fused FFN backward from ``x`` and ``gy`` ONLY (the hidden tile and
     gate pre-activation are recomputed in VMEM): returns
     ``(gx, ga1, gb1, ga2, gb2)`` — plus ``(gag, gbg)`` appended when gated
     — with all half-factor gradients accumulated and returned in f32 (the
-    final cast to the core dtype happens once, in ``ops.py``)."""
+    final cast to the core dtype happens once, in ``ops.py``).
+
+    ``scales``/``out_dtype`` as in :func:`btt_ffn_pallas`: quantized
+    operands dequantize at kernel entry and the gradients returned are
+    those of the dequantized operands (straight-through)."""
     gated = bg is not None
     K, N, F, M, R1, R2, Rg = _dims(x, gy, b1, a1, b2, a2, bg)
     if f_logical is None:
         f_logical = F
-    itemsize = jnp.dtype(x.dtype).itemsize
+    out_dtype = out_dtype or x.dtype
+    itemsize = _ffn_itemsize(x, (gy, b1, a1, b2, a2, bg, ag))
     tk, mp, np_, fp, r1p, r2p, rgp, _, _ = choose_ffn_tiles(
         M, N, F, R1, R2, Rg, itemsize, tk=tk, K=K)
 
@@ -434,13 +493,18 @@ def btt_ffn_bwd_pallas(x: jax.Array, gy: jax.Array, b1: jax.Array,
         pl.BlockSpec((mp, r2p), lambda k: (0, 0)),
     ]
 
+    if scales is not None:
+        ops_ = [scales.astype(jnp.float32).reshape(1, 8)] + ops_
+        in_specs = [pl.BlockSpec((1, 8), lambda k: (0, 0),
+                                 memory_space=pltpu.SMEM)] + in_specs
+
     out_specs = [
         pl.BlockSpec((tk, np_), lambda k: (k, 0)),   # gx (streamed)
         pl.BlockSpec((fp, r1p), lambda k: (0, 0)),   # ga1 (accumulator)
         pl.BlockSpec((r1p, np_), lambda k: (0, 0)),  # gb1 (accumulator)
     ]
     out_shape = [
-        jax.ShapeDtypeStruct((kp, np_), x.dtype),
+        jax.ShapeDtypeStruct((kp, np_), out_dtype),
         jax.ShapeDtypeStruct((fp, r1p), jnp.float32),
         jax.ShapeDtypeStruct((r1p, np_), jnp.float32),
     ]
@@ -462,14 +526,14 @@ def btt_ffn_bwd_pallas(x: jax.Array, gy: jax.Array, b1: jax.Array,
         jax.ShapeDtypeStruct((r2p, fp), jnp.float32),
     ]
 
-    scratch = [pltpu.VMEM((tk, fp), x.dtype),   # h
-               pltpu.VMEM((tk, fp), x.dtype)]   # u
+    scratch = [pltpu.VMEM((tk, fp), out_dtype),   # h
+               pltpu.VMEM((tk, fp), out_dtype)]   # u
     if gated:
-        scratch.append(pltpu.VMEM((tk, fp), x.dtype))  # g
+        scratch.append(pltpu.VMEM((tk, fp), out_dtype))  # g
 
     outs = pl.pallas_call(
         functools.partial(_ffn_bwd_kernel, act=act, f_logical=f_logical,
-                          gated=gated),
+                          gated=gated, quant=scales is not None),
         grid=(kp // tk,),
         in_specs=in_specs,
         out_specs=out_specs,
@@ -588,10 +652,6 @@ def unfused_ffn_hbm_bytes(K: int, M: int, N: int, F: int, R1: int, R2: int,
 # their HBM fetch amortizes over the whole decode run (``steps`` in the
 # byte model).  The kernel body is btt_ffn_pallas's own, so fused-decode
 # FFN output is bit-identical to the training forward at equal shapes.
-
-
-def _decode_sublane(itemsize: int) -> int:
-    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
 
 
 def choose_decode_ffn_tiles(M: int, N: int, F: int, R1: int, R2: int,

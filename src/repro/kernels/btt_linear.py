@@ -36,6 +36,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import tpu_compiler_params
+from repro.core.cost_model import sublane as _sublane
 
 __all__ = ["btt_linear_pallas", "choose_tiles", "DEFAULT_TK", "DEFAULT_TN",
            "btt_linear_decode_pallas", "choose_decode_tiles",
@@ -106,12 +107,45 @@ def _fwd_kernel(x_ref, b_ref, a_ref, y_ref, t_ref, *, n_blocks: int):
         ).astype(y_ref.dtype)
 
 
+def _fwd_kernel_q(s_ref, x_ref, b_ref, a_ref, y_ref, t_ref, *,
+                  n_blocks: int):
+    """Quantized-operand forward: identical dataflow to ``_fwd_kernel``
+    but x/b/a arrive in their storage dtypes (int8 / fp8 / anything) with
+    per-tensor scales ``s = [s_x, s_b, s_a]`` in SMEM; tiles dequantize to
+    f32 *in VMEM* before each MXU dot — the low-precision tensors never
+    exist densely in f32 in HBM, and the accumulator chain stays f32
+    (fp8 dots are thereby emulated on backends without native fp8 MXU
+    support)."""
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _zero():
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    t_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * (s_ref[0, 0] * s_ref[0, 1])
+
+    @pl.when(n == n_blocks - 1)
+    def _emit():
+        a = a_ref[...].astype(jnp.float32) * s_ref[0, 2]
+        y_ref[...] = jax.lax.dot_general(
+            t_ref[...], a,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).astype(y_ref.dtype)
+
+
 def _round_up(v: int, m: int) -> int:
     return (v + m - 1) // m * m
 
 
-@functools.partial(jax.jit, static_argnames=("tk", "tn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("tk", "tn", "interpret", "out_dtype"))
 def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
+                      scales: jax.Array | None = None, out_dtype=None,
                       tk: int | None = None, tn: int | None = None,
                       interpret: bool = False) -> jax.Array:
     """``y (K, M) = (x (K, N) @ b(R, N)^T) @ a(M, R)^T`` via one fused kernel.
@@ -120,14 +154,20 @@ def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
     lanes); zero padding is exact for this bilinear map.  ``interpret=True``
     runs the kernel body in Python on CPU (used for all validation here —
     TPU v5e is the *target*).
+
+    ``scales`` (a (1, 3) f32 array ``[s_x, s_b, s_a]``) switches to the
+    quantized-operand kernel: x/b/a stream in their storage dtypes and
+    dequantize tile-by-tile in VMEM (``_fwd_kernel_q``); ``out_dtype``
+    then names the compute dtype of ``y`` (default ``x.dtype`` — wrong for
+    int8 inputs, so quantized callers pass it).
     """
     K, N = x.shape
     R, _ = b.shape
     M, _ = a.shape
-    out_dtype = x.dtype
+    out_dtype = out_dtype or x.dtype
 
     # --- choose tiles under a VMEM budget -------------------------------
-    itemsize = jnp.dtype(x.dtype).itemsize
+    itemsize = max(jnp.dtype(v.dtype).itemsize for v in (x, b, a))
     tk, tn, mp, rp, _ = choose_tiles(M, R, itemsize, tk=tk, tn=tn, K=K)
 
     kp = _round_up(K, tk)
@@ -139,14 +179,24 @@ def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
     n_blocks = np_ // tn
     grid = (kp // tk, n_blocks)
 
+    data_specs = [
+        pl.BlockSpec((tk, tn), lambda k, n: (k, n)),   # x
+        pl.BlockSpec((rp, tn), lambda k, n: (0, n)),   # b
+        pl.BlockSpec((mp, rp), lambda k, n: (0, 0)),   # a (resident)
+    ]
+    if scales is None:
+        kern = functools.partial(_fwd_kernel, n_blocks=n_blocks)
+        in_specs, operands = data_specs, (xp, bp, ap)
+    else:
+        kern = functools.partial(_fwd_kernel_q, n_blocks=n_blocks)
+        in_specs = [pl.BlockSpec((1, 3), lambda k, n: (0, 0),
+                                 memory_space=pltpu.SMEM)] + data_specs
+        operands = (scales.astype(jnp.float32).reshape(1, 3), xp, bp, ap)
+
     y = pl.pallas_call(
-        functools.partial(_fwd_kernel, n_blocks=n_blocks),
+        kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tk, tn), lambda k, n: (k, n)),   # x
-            pl.BlockSpec((rp, tn), lambda k, n: (0, n)),   # b
-            pl.BlockSpec((mp, rp), lambda k, n: (0, 0)),   # a (resident)
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tk, mp), lambda k, n: (k, 0)),
         out_shape=jax.ShapeDtypeStruct((kp, mp), out_dtype),
         scratch_shapes=[pltpu.VMEM((tk, rp), jnp.float32)],
@@ -154,7 +204,7 @@ def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(xp, bp, ap)
+    )(*operands)
     return y[:K, :M]
 
 
@@ -170,10 +220,6 @@ def btt_linear_pallas(x: jax.Array, b: jax.Array, a: jax.Array, *,
 # analytic byte model amortizes their fetch over ``steps`` decode steps,
 # which is what the serve loop's jitted step achieves by re-passing the same
 # device-resident arrays.
-
-
-def _sublane(itemsize: int) -> int:
-    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
 
 
 def choose_decode_tiles(M: int, R: int, itemsize: int, *, B: int,

@@ -46,10 +46,18 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import quant as _quant
+from repro.core.cost_model import sublane as _cm_sublane
+
 __all__ = [
     "fused_sgd_update",
     "fused_adamw_update",
+    "fused_adamw_update_quant",
+    "quant_master_pack",
+    "quant_master_unpack",
+    "quant_pu_hbm_bytes",
     "sketched_adamw_update",
+    "sketched_adamw_update_quant",
     "pack_leaves",
     "unpack_leaves",
     "pu_block_shape",
@@ -284,6 +292,137 @@ def fused_adamw_update(params, grads, m, v, lr_t, t, *, b1: float,
 
 
 # ---------------------------------------------------------------------------
+# Quantized-master AdamW: int8/fp8 params at rest, f32 step in VMEM.
+#
+# With a quantized storage tier (``core.quant``) the fused PU stage keeps
+# the *master* copy of the parameters in int8 / fp8_e4m3 — the only copy;
+# there is no shadow f32 master in HBM.  The packed (rows_p, LANES) buffer
+# carries one f32 scale per (br, LANES) grid block (the "per_tile"
+# granularity of ``PrecisionConfig``), so each kernel step is closed over a
+# single block: dequantize the block into VMEM f32, run the identical
+# AdamW math as ``_adamw_kernel``, compute the block's new max-abs scale
+# IN-KERNEL, and stochastically round the updated block back onto the
+# storage grid (``quant.stochastic_round``, counter-keyed by
+# (element, step, block id) — bit-reproducible across checkpoint resume).
+# Moments stay f32 (or sketched — orthogonal): the round-off each step is
+# confined to the parameter write, where SR keeps it zero-mean.
+# ---------------------------------------------------------------------------
+
+
+def _adamw_quant_kernel(scal_ref, pq_ref, ps_ref, m_ref, v_ref, g_ref,
+                        oq_ref, ops_ref, om_ref, ov_ref, *,
+                        b1: float, b2: float, eps: float,
+                        weight_decay: float, fmt: str):
+    """One packed block of the quantized-master AdamW PU stage."""
+    lr = scal_ref[0, 0]
+    t = scal_ref[0, 1]
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    g = g_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * jnp.square(g)
+    # In-VMEM dequant of the master block: int8/fp8 tile -> f32 registers.
+    p = pq_ref[...].astype(jnp.float32) * ps_ref[0, 0]
+    step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+    if weight_decay:
+        step = step + lr * weight_decay * p
+    p_new = p - step
+    f = _quant.resolve(fmt)
+    s_new = jnp.maximum(jnp.max(jnp.abs(p_new)), _quant._TINY) / f.qmax
+    om_ref[...] = m
+    ov_ref[...] = v
+    ops_ref[0, 0] = s_new
+    oq_ref[...] = _quant.stochastic_round(
+        p_new / s_new, fmt, t.astype(jnp.int32), pl.program_id(0))
+
+
+def quant_master_pack(leaves: Sequence[jax.Array], fmt: str
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Pack param ``leaves`` into the quantized master state ``(pq, ps)``:
+    ``pq`` a (rows_p, LANES) storage-dtype buffer, ``ps`` (n_blocks, 1) f32
+    per-block scales — the layout the quant PU kernel streams.  Initial
+    quantization is round-to-nearest (no step counter exists yet)."""
+    f = _quant.resolve(fmt)
+    n = sum(int(np.prod(x.shape)) for x in leaves)
+    br, rows_p, lanes = pu_block_shape(n)
+    pb = pack_leaves(leaves, jnp.float32, rows_p, lanes)
+    n_blocks = rows_p // br
+    blocks = pb.reshape(n_blocks, br * lanes)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    ps = (jnp.maximum(amax, _quant._TINY) / f.qmax).astype(jnp.float32)
+    z = jnp.clip(blocks / ps, -f.qmax, f.qmax)
+    q = jnp.round(z) if f.name == "int8" else z
+    pq = q.astype(f.dtype).reshape(rows_p, lanes)
+    return pq, ps
+
+
+def quant_master_unpack(pq: jax.Array, ps: jax.Array,
+                        shapes: Sequence[tuple[int, ...]],
+                        dtypes: Sequence[Any]) -> list[jax.Array]:
+    """Dequantized (compute-dtype) leaf views of the master ``(pq, ps)`` —
+    what the FWD/BWD stages consume.  Inverse of :func:`quant_master_pack`
+    up to the storage grid's round-off."""
+    rows_p, lanes = pq.shape
+    n_blocks = ps.shape[0]
+    br = rows_p // n_blocks
+    pb = (pq.astype(jnp.float32).reshape(n_blocks, br * lanes)
+          * ps).reshape(rows_p, lanes)
+    return unpack_leaves(pb, shapes, dtypes)
+
+
+def fused_adamw_update_quant(pq, ps, mb, vb, gb, lr_t, t, *, fmt: str,
+                             b1: float, b2: float, eps: float,
+                             weight_decay: float,
+                             interpret: bool | None = None):
+    """One quantized-master AdamW PU step over packed buffers:
+    ``(new_pq, new_ps, new_mb, new_vb)``.
+
+    ``pq``/``ps`` from :func:`quant_master_pack`; ``mb``/``vb``/``gb`` are
+    (rows_p, LANES) f32 packed moment/grad buffers (``pack_leaves``).  The
+    master is dequantized, updated, re-scaled and stochastically re-rounded
+    entirely inside the kernel — no dense f32 parameter buffer touches HBM.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    rows_p, lanes = pq.shape
+    n_blocks = ps.shape[0]
+    br = rows_p // n_blocks
+    grid = (n_blocks,)
+    blk = pl.BlockSpec((br, lanes), lambda i: (i, 0))
+    sblk = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    kern = functools.partial(_adamw_quant_kernel, b1=b1, b2=b2, eps=eps,
+                             weight_decay=weight_decay, fmt=fmt)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM),
+                  blk, sblk, blk, blk, blk],
+        out_specs=[blk, sblk, blk, blk],
+        out_shape=[jax.ShapeDtypeStruct(pq.shape, pq.dtype),
+                   jax.ShapeDtypeStruct(ps.shape, ps.dtype),
+                   jax.ShapeDtypeStruct(mb.shape, mb.dtype),
+                   jax.ShapeDtypeStruct(vb.shape, vb.dtype)],
+        input_output_aliases={1: 0, 2: 1, 3: 2, 4: 3},
+        interpret=interpret,
+    )(_scal(lr_t, t), pq, ps, mb, vb, gb)
+    return tuple(out)
+
+
+def quant_pu_hbm_bytes(n_params: int, fmt: str) -> int:
+    """HBM bytes of one quantized-master AdamW PU step: the packed master
+    streams at the storage itemsize (read + aliased write) plus its scale
+    sidecar; moments and grads stay f32 as in ``fused_pu_hbm_bytes``."""
+    its = _quant.itemsize(fmt)
+    br, rows_p, lanes = pu_block_shape(n_params)
+    n_pad = rows_p * lanes
+    n_blocks = rows_p // br
+    reads = n_pad * (its + 4 + 4 * 2) + 4 * n_blocks
+    writes = n_pad * (its + 4 * 2) + 4 * n_blocks
+    return reads + writes
+
+
+# ---------------------------------------------------------------------------
 # Sketch-compressed AdamW (Count-Sketch Optimizers' fused-kernel idea).
 #
 # Dense AdamW's two f32 moment buffers are 2x the parameter footprint — the
@@ -417,12 +556,12 @@ def sketch_pu_fits(n_params: int, width: int,
             and 4 * sketch_state_bytes(depth, width) <= 2 * n_params * 4)
 
 
-def _sketched_adamw_kernel(scal_ref, p_ref, vso_ref, mso_ref, vsd_ref,
-                           msd_ref, g_ref, o_ref, ovs_ref, oms_ref, *,
-                           b1: float, b2: float, eps: float,
-                           weight_decay: float, depth: int, width: int,
-                           n_valid: int, base: int):
-    """One (br, lanes) block of the sketched PU stage.
+def _sketched_math(scal_ref, vso_ref, mso_ref, vsd_ref, msd_ref, g_ref,
+                   ovs_ref, oms_ref, p, br: int, lanes: int, *,
+                   b1: float, b2: float, eps: float, weight_decay: float,
+                   depth: int, width: int, n_valid: int, base: int):
+    """Shared body of the sketched PU kernels: query the old sketches,
+    refresh the new ones, and return the updated flat f32 parameter block.
 
     ``base`` is the global flat offset of this launch's dtype group and
     ``n_valid`` its true element count; padded lanes hash to masked
@@ -441,7 +580,6 @@ def _sketched_adamw_kernel(scal_ref, p_ref, vso_ref, mso_ref, vsd_ref,
     t = scal_ref[0, 1]
     bc1 = 1.0 - b1 ** t
     bc2 = 1.0 - b2 ** t
-    br, lanes = p_ref.shape
     rows = jax.lax.broadcasted_iota(jnp.int32, (br, lanes), 0)
     cols = jax.lax.broadcasted_iota(jnp.int32, (br, lanes), 1)
     local = (rows * lanes + cols + i * br * lanes).reshape(-1)
@@ -472,11 +610,51 @@ def _sketched_adamw_kernel(scal_ref, p_ref, vso_ref, mso_ref, vsd_ref,
         # decay of the cells happens once per step in the host-side seed.
         oms_ref[r, :] = oms_ref[r, :] + zero_w.at[h[r]].add(
             jnp.where(valid, s[r] * (1.0 - b1) * g, 0.0))
-    p = p_ref[...].astype(jnp.float32).reshape(-1)
     step = lr * (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
     if weight_decay:
         step = step + lr * weight_decay * p
-    o_ref[...] = (p - step).reshape(br, lanes).astype(o_ref.dtype)
+    return p - step
+
+
+def _sketched_adamw_kernel(scal_ref, p_ref, vso_ref, mso_ref, vsd_ref,
+                           msd_ref, g_ref, o_ref, ovs_ref, oms_ref, *,
+                           b1: float, b2: float, eps: float,
+                           weight_decay: float, depth: int, width: int,
+                           n_valid: int, base: int):
+    """One (br, lanes) block of the sketched PU stage (f32 master)."""
+    br, lanes = p_ref.shape
+    p = p_ref[...].astype(jnp.float32).reshape(-1)
+    p_new = _sketched_math(
+        scal_ref, vso_ref, mso_ref, vsd_ref, msd_ref, g_ref, ovs_ref,
+        oms_ref, p, br, lanes, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, depth=depth, width=width,
+        n_valid=n_valid, base=base)
+    o_ref[...] = p_new.reshape(br, lanes).astype(o_ref.dtype)
+
+
+def _sketched_adamw_quant_kernel(scal_ref, pq_ref, ps_ref, vso_ref, mso_ref,
+                                 vsd_ref, msd_ref, g_ref, oq_ref, ops_ref,
+                                 ovs_ref, oms_ref, *, b1: float, b2: float,
+                                 eps: float, weight_decay: float, depth: int,
+                                 width: int, n_valid: int, base: int,
+                                 fmt: str):
+    """Sketched PU block with a quantized (int8/fp8) master: in-VMEM
+    dequant on entry, in-kernel rescale + stochastic re-round on exit —
+    composes the two HBM compressions (sketched moments, quantized
+    params) in one kernel pass."""
+    br, lanes = pq_ref.shape
+    p = (pq_ref[...].astype(jnp.float32) * ps_ref[0, 0]).reshape(-1)
+    p_new = _sketched_math(
+        scal_ref, vso_ref, mso_ref, vsd_ref, msd_ref, g_ref, ovs_ref,
+        oms_ref, p, br, lanes, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, depth=depth, width=width,
+        n_valid=n_valid, base=base)
+    f = _quant.resolve(fmt)
+    s_new = jnp.maximum(jnp.max(jnp.abs(p_new)), _quant._TINY) / f.qmax
+    ops_ref[0, 0] = s_new
+    oq_ref[...] = _quant.stochastic_round(
+        (p_new / s_new).reshape(br, lanes), fmt,
+        scal_ref[0, 1].astype(jnp.int32), pl.program_id(0))
 
 
 def _sketched_call(kern, scal, pb, gb, vs_old, ms_old, vs_seed, ms_seed,
@@ -553,6 +731,49 @@ def sketched_adamw_update(params, grads, vs, ms, lr_t, t, *, b1: float,
     return jax.tree.unflatten(treedef, new_p), vs_seed, ms_seed
 
 
+def sketched_adamw_update_quant(pq, ps, vs, ms, gb, n_valid: int, lr_t, t,
+                                *, fmt: str, b1: float, b2: float,
+                                eps: float, weight_decay: float,
+                                interpret: bool | None = None):
+    """Sketched-AdamW PU step over a quantized packed master:
+    ``(new_pq, new_ps, new_vs, new_ms)``.
+
+    The quantized master is a single packed buffer (``quant_master_pack``),
+    so unlike :func:`sketched_adamw_update` there is exactly one launch
+    (``base = 0``); ``n_valid`` is the true (unpadded) element count and
+    ``gb`` the (rows_p, LANES) f32 packed gradient buffer.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    depth, width = vs.shape
+    rows_p, lanes = pq.shape
+    n_blocks = ps.shape[0]
+    br = rows_p // n_blocks
+    kern = functools.partial(
+        _sketched_adamw_quant_kernel, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, depth=depth, width=width,
+        n_valid=n_valid, base=0, fmt=fmt)
+    blk = pl.BlockSpec((br, lanes), lambda i: (i, 0))
+    sblk = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    skb = pl.BlockSpec(vs.shape, lambda i: (0, 0))
+    out = pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, 2), lambda i: (0, 0),
+                               memory_space=pltpu.SMEM),
+                  blk, sblk, skb, skb, skb, skb, blk],
+        out_specs=[blk, sblk, skb, skb],
+        out_shape=[jax.ShapeDtypeStruct(pq.shape, pq.dtype),
+                   jax.ShapeDtypeStruct(ps.shape, ps.dtype),
+                   jax.ShapeDtypeStruct(vs.shape, vs.dtype),
+                   jax.ShapeDtypeStruct(ms.shape, ms.dtype)],
+        input_output_aliases={1: 0, 2: 1},
+        # seed sketches (zeros / b1-decayed) ride as the vsd/msd operands.
+        interpret=interpret,
+    )(_scal(lr_t, t), pq, ps, vs, ms, jnp.zeros_like(vs), b1 * ms, gb)
+    return tuple(out)
+
+
 # ---------------------------------------------------------------------------
 # Analytic HBM-traffic models (shared by benchmarks and the run.py --check
 # regression guard).
@@ -573,7 +794,7 @@ def _tile_padded_elems(shape: tuple, itemsize: int) -> int:
         return 1
     if len(shape) == 1:
         return _round_up(int(shape[0]), 128)
-    sub = max(8, 32 // max(itemsize, 1))  # f32 8, bf16 16, int8 32
+    sub = _cm_sublane(itemsize)  # f32 8, bf16 16, int8 32 (shared source)
     lead = 1
     for d in shape[:-2]:
         lead *= int(d)

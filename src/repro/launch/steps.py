@@ -40,6 +40,24 @@ def _global_grad_norm(grads) -> jax.Array:
         for g in jax.tree.leaves(grads)))
 
 
+def _grads_at_rest(grads, cfg: ModelConfig):
+    """BWD→PU boundary storage: round-trip every gradient leaf through
+    ``cfg.tt.precision.grad_dtype`` (``core.quant.cast_format``) — what the
+    gradient buffer holds in HBM between the backward and the update.
+    fp8_e5m2's wide exponent makes it self-describing (no scale); int8 is
+    rejected up front (its dynamic range collapses under one scale)."""
+    gfmt = cfg.tt.precision.grad_dtype
+    if gfmt == "float32":
+        return grads
+    if gfmt == "int8":
+        raise ValueError("grad_dtype='int8' is unsupported: gradient "
+                         "dynamic range collapses under a per-tensor "
+                         "scale; use 'bfloat16' or 'fp8_e5m2'")
+    from repro.core import quant
+
+    return jax.tree.map(lambda g: quant.cast_format(g, gfmt), grads)
+
+
 def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
                     clip_norm: float = 1.0, remat: bool = True,
                     batch_constraint=None, fused_bwd: bool | None = None,
@@ -130,6 +148,7 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
             wsum = jnp.maximum(ws.sum(), 1.0)
             grads = jax.tree.map(lambda g: g / wsum, grads)
             loss = (losses * ws).sum() / wsum
+        grads = _grads_at_rest(grads, cfg)
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
         else:
@@ -174,6 +193,7 @@ def make_ddp_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
             grads = jax.tree.map(
                 lambda g: jax.lax.pmean(g, "data"), grads)
         loss = jax.lax.pmean(loss, "data")
+        grads = _grads_at_rest(grads, cfg)
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
         else:
@@ -246,6 +266,7 @@ def make_pipeline_train_step(cfg: ModelConfig, opt: Optimizer, mesh, *,
     def step(params, opt_state, batch):
         loss, grads = pipeline_loss_and_grads(params, cfg, batch, part,
                                               remat=remat)
+        grads = _grads_at_rest(grads, cfg)
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)
         else:

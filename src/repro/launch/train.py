@@ -28,7 +28,7 @@ from repro.data import lm_batch
 from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_pipeline_train_step, make_train_step
 from repro.models.transformer import init_params, num_params, param_bytes
-from repro.optim import adamw, sgd, warmup_cosine
+from repro.optim import adamw, master_view, sgd, warmup_cosine
 from repro.runtime import (
     CheckpointCadence,
     StragglerMonitor,
@@ -55,6 +55,11 @@ def build(args):
     if args.fp32:
         import dataclasses
         cfg = dataclasses.replace(cfg, dtype="float32")
+    if args.param_dtype or args.act_dtype or args.grad_dtype:
+        cfg = cfg.with_precision(
+            **{k: v for k, v in (("param_dtype", args.param_dtype),
+                                 ("act_dtype", args.act_dtype),
+                                 ("grad_dtype", args.grad_dtype)) if v})
     return cfg
 
 
@@ -108,6 +113,24 @@ def main(argv=None) -> dict:
                          "default_sketch_width: ~n_params/(8*depth))")
     ap.add_argument("--sketch-depth", type=int, default=None,
                     help="sketch hash rows (default 3)")
+    ap.add_argument("--param-dtype", default=None,
+                    choices=("float32", "bfloat16", "int8", "fp8_e4m3"),
+                    help="at-rest storage for TT half-factors AND the "
+                         "fused-update master parameters (core.quant): "
+                         "scaled formats dequantize inside the kernels and "
+                         "re-round stochastically at the update write; "
+                         "fp8 is emulated (tiles upcast to f32 in VMEM "
+                         "before the dot)")
+    ap.add_argument("--act-dtype", default=None,
+                    choices=("float32", "bfloat16", "int8", "fp8_e4m3"),
+                    help="at-rest storage for the saved backward residuals "
+                         "(TT layer inputs; flash (q, k, v, o)); unset "
+                         "follows the model compute dtype")
+    ap.add_argument("--grad-dtype", default=None,
+                    choices=("float32", "bfloat16", "fp8_e5m2"),
+                    help="gradient at-rest storage between BWD and PU "
+                         "(fp8_e5m2 is self-describing — no scale; int8 "
+                         "is rejected)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
@@ -141,10 +164,14 @@ def main(argv=None) -> dict:
     opt = (sgd(lr, fused=args.fused) if args.optimizer == "sgd"
            else adamw(lr, fused=args.fused, sketched=args.sketched_opt,
                       sketch_width=args.sketch_width,
-                      sketch_depth=args.sketch_depth))
+                      sketch_depth=args.sketch_depth,
+                      param_format=cfg.tt.precision.param_dtype))
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     opt_state = opt.init(params)
+    # Quantized-master states own the only parameter copy; align step 1's
+    # forward with the storage grid (identity for unquantized states).
+    params = master_view(opt_state, params)
     print(f"[train] arch={cfg.name} tt={cfg.tt.mode} params={num_params(params):,} "
           f"({param_bytes(params)/1e6:.1f} MB) mesh={dict(mesh.shape)}")
 

@@ -114,13 +114,17 @@ def train_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None,
                     q_chunk: int = 512, kv_chunk: int = 512,
                     fused: bool = False,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    precision=None) -> jax.Array:
     """Training/prefill attention: ``q (B, S, H, D); k, v (B, S, KV, D)``.
 
     ``fused=True`` routes through the fused flash forward + single-kernel
     backward (``kernels.ops.flash_mha_op``), which itself falls back to
     ``blockwise_attention`` when the shape's backward working set exceeds
     the kernel VMEM budget — so the flag is always safe to set.
+    ``precision.act_dtype`` quantizes the fused path's saved
+    ``(q, k, v, o)`` residual tier (fused path only — the blockwise
+    fallback is the plain-autodiff f32 reference).
     """
     if fused:
         # Lazy import keeps models importable without the kernels package
@@ -129,7 +133,7 @@ def train_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
         return flash_mha_op(q, k, v, causal=causal, window=window,
                             q_chunk=q_chunk, kv_chunk=kv_chunk,
-                            interpret=interpret)
+                            interpret=interpret, precision=precision)
     return blockwise_attention(q, k, v, causal=causal, window=window,
                                q_chunk=q_chunk, kv_chunk=kv_chunk)
 

@@ -59,9 +59,10 @@ def make_linear(key: jax.Array, out_dim: int, in_dim: int, cfg: ModelConfig,
 
 
 def linear_apply(params, x: jax.Array, *, flow: str = "btt_fused",
-                 fused_bwd: bool = True) -> jax.Array:
+                 fused_bwd: bool = True, precision=None) -> jax.Array:
     if isinstance(params, TTLinearParams):
-        return tt_linear_apply(params, x, flow=flow, fused_bwd=fused_bwd)
+        return tt_linear_apply(params, x, flow=flow, fused_bwd=fused_bwd,
+                               precision=precision)
     y = jnp.einsum("...n,mn->...m", x, params.w,
                    preferred_element_type=jnp.float32).astype(x.dtype)
     if params.bias is not None:
@@ -187,7 +188,8 @@ def ffn_fused_eligible(up, down, gate, K: int, *,
 def tt_ffn_apply(up: TTLinearParams, down: TTLinearParams,
                  gate: TTLinearParams | None, x: jax.Array, *, act: str,
                  fused_bwd: bool = True,
-                 shard_dims: int | None = None) -> jax.Array:
+                 shard_dims: int | None = None,
+                 precision=None) -> jax.Array:
     """Whole TT FFN block through the fused megakernel
     (``kernels.ops.btt_ffn_op``): ``x (..., N) -> (..., M)`` with the
     hidden state VMEM-resident and only ``x`` saved for the backward.
@@ -206,12 +208,13 @@ def tt_ffn_apply(up: TTLinearParams, down: TTLinearParams,
                    up.spec, down.spec,
                    gate.spec if gate is not None else None, act=act,
                    f_logical=min(up.out_dim, down.in_dim),
-                   fused_bwd=fused_bwd, shard_dims=shard_dims)
+                   fused_bwd=fused_bwd, shard_dims=shard_dims,
+                   precision=precision)
     return y[:, : down.out_dim].reshape(lead + (down.out_dim,))
 
 
 def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
+    flow, fb, prec = cfg.tt.flow, cfg.tt.fused_bwd, cfg.tt.precision
     gate = p.get("gate") if cfg.mlp_gated else None
     K = 1
     for d in x.shape[:-1]:
@@ -229,21 +232,24 @@ def mlp_apply(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         # load-bearing for compute placement; row-wise "model" axes stay
         # fused — each device launches on its own row shard).
         return tt_ffn_apply(p["up"], p["down"], gate, x,
-                            act=_ffn_act(cfg), fused_bwd=fb, shard_dims=sd)
+                            act=_ffn_act(cfg), fused_bwd=fb, shard_dims=sd,
+                            precision=prec)
     # Megatron cut point: the hidden dim shards on "model".  Dense weights
     # give GSPMD this lineage for free; TT factors are REPLICATED, so an
     # explicit constraint is required or the whole FFN replicates 16x
     # (EXPERIMENTS.md §Perf, technique-cell iteration).
-    up = constrain(linear_apply(p["up"], x, flow=flow, fused_bwd=fb),
+    up = constrain(linear_apply(p["up"], x, flow=flow, fused_bwd=fb,
+                                precision=prec),
                    ("pod", "data"), None, "model")
     if cfg.mlp_gated:
-        gate_h = constrain(linear_apply(p["gate"], x, flow=flow, fused_bwd=fb),
+        gate_h = constrain(linear_apply(p["gate"], x, flow=flow, fused_bwd=fb,
+                                        precision=prec),
                            ("pod", "data"), None, "model")
         act = jax.nn.silu(gate_h) if cfg.act == "silu" else jax.nn.gelu(gate_h)
         h = act * up
     else:
         h = jax.nn.gelu(up) if cfg.act == "gelu" else jax.nn.silu(up)
-    return linear_apply(p["down"], h, flow=flow, fused_bwd=fb)
+    return linear_apply(p["down"], h, flow=flow, fused_bwd=fb, precision=prec)
 
 
 # ---------------------------------------------------------------------------

@@ -75,13 +75,16 @@ def _attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, window: int | None,
     decode step writes O(B·KV·dh) bytes, not O(B·S·KV·dh)."""
     B, S, _ = x.shape
     H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    flow, fb = cfg.tt.flow, cfg.tt.fused_bwd
+    flow, fb, prec = cfg.tt.flow, cfg.tt.fused_bwd, cfg.tt.precision
     # Head-dim TP cut point (see mlp_apply note re: replicated TT factors).
-    q = meshctx_constrain(linear_apply(p["q"], x, flow=flow, fused_bwd=fb),
+    q = meshctx_constrain(linear_apply(p["q"], x, flow=flow, fused_bwd=fb,
+                                       precision=prec),
                           ("pod", "data"), None, "model").reshape(B, S, H, dh)
-    k = meshctx_constrain(linear_apply(p["k"], x, flow=flow, fused_bwd=fb),
+    k = meshctx_constrain(linear_apply(p["k"], x, flow=flow, fused_bwd=fb,
+                                       precision=prec),
                           ("pod", "data"), None, "model").reshape(B, S, KV, dh)
-    v = meshctx_constrain(linear_apply(p["v"], x, flow=flow, fused_bwd=fb),
+    v = meshctx_constrain(linear_apply(p["v"], x, flow=flow, fused_bwd=fb,
+                                       precision=prec),
                           ("pod", "data"), None, "model").reshape(B, S, KV, dh)
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"], cfg.norm_eps)
@@ -110,11 +113,12 @@ def _attn_apply(p: dict, x: jax.Array, cfg: ModelConfig, *, window: int | None,
         kc = cfg.attn_kv_chunk or S
         out = train_attention(q, k, v, causal=cfg.causal, window=window,
                               q_chunk=qc, kv_chunk=kc,
-                              fused=cfg.fused_attn)
+                              fused=cfg.fused_attn, precision=prec)
         if mode == "prefill":
             new_cache = {"k": k, "v": v}
     out = out.reshape(B, S, H * dh)
-    return linear_apply(p["o"], out, flow=flow, fused_bwd=fb), new_cache
+    return linear_apply(p["o"], out, flow=flow, fused_bwd=fb,
+                        precision=prec), new_cache
 
 
 def block_init(key: jax.Array, kind: str, cfg: ModelConfig) -> dict:

@@ -1,5 +1,6 @@
-from .optimizers import Optimizer, adamw, clip_by_global_norm, sgd
+from .optimizers import (Optimizer, adamw, clip_by_global_norm,
+                         master_view, sgd)
 from .schedule import constant, warmup_cosine
 
-__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm",
-           "constant", "warmup_cosine"]
+__all__ = ["Optimizer", "sgd", "adamw", "master_view",
+           "clip_by_global_norm", "constant", "warmup_cosine"]

@@ -25,7 +25,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-__all__ = ["Optimizer", "sgd", "adamw", "clip_by_global_norm"]
+__all__ = ["Optimizer", "sgd", "adamw", "master_view",
+           "clip_by_global_norm"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,11 +82,30 @@ def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0,
     return Optimizer("sgd", init, update)
 
 
+def master_view(state, params):
+    """Dequantized view of a quantized-master optimizer state.
+
+    With ``adamw(param_format="int8" | "fp8_e4m3")`` the ONLY copy of the
+    parameters lives in the state's packed ``(pq, ps)`` buffers; the tree
+    the forward/backward stages consume is this dequantized view.  Call
+    after ``init`` so step 1's forward already sees the storage-grid
+    values (identity for unquantized states)."""
+    if not (isinstance(state, dict) and "pq" in state):
+        return params
+    from repro.kernels.fused_update import quant_master_unpack
+    leaves, treedef = jax.tree.flatten(params)
+    views = quant_master_unpack(state["pq"], state["ps"],
+                                [x.shape for x in leaves],
+                                [x.dtype for x in leaves])
+    return jax.tree.unflatten(treedef, views)
+
+
 def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
           b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0, *, fused: bool = False,
           sketched: bool = False, sketch_width: int | None = None,
           sketch_depth: int | None = None,
+          param_format: str = "float32",
           interpret: bool | None = None) -> Optimizer:
     """AdamW.  ``fused=True`` performs moment EMAs, bias correction, weight
     decay, and the parameter delta in one Pallas kernel pass per step
@@ -102,10 +122,49 @@ def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
     ``{"step", "vs", "ms"}``; when the sketch does not fit (or saves <4x)
     init falls back to dense fused AdamW state ``{"step", "m", "v"}`` and
     ``update`` dispatches on the layout, so checkpoints stay
-    self-describing."""
+    self-describing.
+
+    ``param_format`` in {"int8", "fp8_e4m3"} (``fused`` implied) keeps the
+    MASTER parameters quantized in the packed PU layout — state gains
+    ``{"pq", "ps"}`` and the f32 parameter tree never exists in HBM; each
+    step the fused kernel dequantizes a block into VMEM, applies the
+    (optionally sketched) AdamW math in f32, and stochastically re-rounds
+    (``kernels.fused_update``).  ``update`` then returns the dequantized
+    view tree for the next forward; use :func:`master_view` after ``init``
+    so step 1 sees the same storage grid.  Moments stay f32 (dense packed
+    ``mb``/``vb`` buffers) or sketched — the quantization round-off is
+    confined to the parameter write, where stochastic rounding keeps it
+    zero-mean."""
     lr_fn = lr if callable(lr) else (lambda _: lr)
+    from repro.core.quant import needs_scale
+    quant_master = needs_scale(param_format)
 
     def init(params):
+        if quant_master:
+            from repro.kernels.fused_update import (
+                SKETCH_DEPTH_DEFAULT, default_sketch_width, pack_leaves,
+                pu_block_shape, quant_master_pack, sketch_pu_fits)
+            from repro.core.quant import itemsize as q_itemsize
+            leaves = jax.tree.leaves(params)
+            n = sum(int(jnp.size(p)) for p in leaves)
+            _, rows_p, lanes = pu_block_shape(n)
+            pq, ps = quant_master_pack(leaves, param_format)
+            state = {"step": jnp.zeros((), jnp.int32), "pq": pq, "ps": ps}
+            if sketched:
+                depth = (SKETCH_DEPTH_DEFAULT if sketch_depth is None
+                         else sketch_depth)
+                width = (default_sketch_width(n, depth)
+                         if sketch_width is None else sketch_width)
+                if sketch_pu_fits(n, width, depth,
+                                  itemsize=q_itemsize(param_format)):
+                    state["vs"] = jnp.zeros((depth, width), jnp.float32)
+                    state["ms"] = jnp.zeros((depth, width), jnp.float32)
+                    return state
+            # Two distinct allocations: donation rejects one buffer bound
+            # to two jitted-step arguments.
+            state["mb"] = jnp.zeros((rows_p, lanes), jnp.float32)
+            state["vb"] = jnp.zeros((rows_p, lanes), jnp.float32)
+            return state
         if sketched:
             from repro.kernels.fused_update import (
                 SKETCH_DEPTH_DEFAULT, default_sketch_width, sketch_pu_fits)
@@ -133,6 +192,33 @@ def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
     def update(grads, params, state, step):
         lr_t = lr_fn(step)
         t = (state["step"] + 1).astype(jnp.float32)
+        if "pq" in state:
+            from repro.kernels.fused_update import (
+                fused_adamw_update_quant, pack_leaves, pu_block_shape,
+                quant_master_unpack, sketched_adamw_update_quant)
+            p_leaves, treedef = jax.tree.flatten(params)
+            g_leaves = treedef.flatten_up_to(grads)
+            n = sum(int(jnp.size(p)) for p in p_leaves)
+            _, rows_p, lanes = pu_block_shape(n)
+            gb = pack_leaves(g_leaves, jnp.float32, rows_p, lanes)
+            new_state = {"step": state["step"] + 1}
+            if "vs" in state:
+                pq, ps, vs, ms = sketched_adamw_update_quant(
+                    state["pq"], state["ps"], state["vs"], state["ms"],
+                    gb, n, lr_t, t, fmt=param_format, b1=b1, b2=b2,
+                    eps=eps, weight_decay=weight_decay,
+                    interpret=interpret)
+                new_state.update(pq=pq, ps=ps, vs=vs, ms=ms)
+            else:
+                pq, ps, mb, vb = fused_adamw_update_quant(
+                    state["pq"], state["ps"], state["mb"], state["vb"],
+                    gb, lr_t, t, fmt=param_format, b1=b1, b2=b2, eps=eps,
+                    weight_decay=weight_decay, interpret=interpret)
+                new_state.update(pq=pq, ps=ps, mb=mb, vb=vb)
+            views = quant_master_unpack(pq, ps,
+                                        [x.shape for x in p_leaves],
+                                        [x.dtype for x in p_leaves])
+            return jax.tree.unflatten(treedef, views), new_state
         if "vs" in state:
             from repro.kernels.fused_update import sketched_adamw_update
             new_params, vs, ms = sketched_adamw_update(

@@ -1,0 +1,420 @@
+"""Quantized-at-rest storage tier (core.quant + the precision-threaded
+kernel stack) — oracle harness.
+
+Layers of ground truth:
+
+1. ``quantize``/``dequantize`` round-trip: per-tensor max-abs RTN must land
+   within half a quantization step of the input, per element.
+2. Stochastic rounding: UNBIASED (the mean over many steps of the rounded
+   value converges to the input — the property that keeps the parameter
+   update from drifting) and DETERMINISTIC in ``(element, step, block)``
+   (the property that makes checkpoint resume replay bit-identical
+   updates).  Deterministic fixed-seed versions always run; hypothesis
+   sweeps ride along where it is installed.
+3. The quant kernel path vs a straight-through-estimator (STE) oracle:
+   ``btt_linear_op(precision=...)`` must match, in value AND gradient, the
+   pure-JAX composition through explicitly dequantized operands (the STE
+   identity ``a + stop_grad(deq(quant(a)) - a)``).
+4. The quantized-master fused update vs the dense f32 AdamW oracle: one
+   step lands within the storage grid's resolution of the f32 result, and
+   two runs from the same state are bit-identical.
+5. The memory ledger: every at-rest row at int8 is <= 0.5x its f32 bytes
+   (the PR's acceptance floor).
+6. ATIS convergence smoke: the int8 config's final loss stays within 5%
+   relative of the f32 run on the same seed/steps.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs.atis_transformer import config_n
+from repro.core import quant
+from repro.core.memory_ledger import training_step_ledger
+from repro.core.tt import tt_half_factors, tt_init
+from repro.core.tt_linear import make_tt_spec
+from repro.kernels.ops import btt_linear_op
+from repro.optim import adamw, master_view
+
+SCALED = [f for f in ("int8", "fp8_e4m3", "fp8_e5m2") if f in quant.FORMATS]
+
+
+# ---------------------------------------------------------------------------
+# 1. Round-trip.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", SCALED)
+def test_quantize_roundtrip_within_half_step(fmt):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 96)) * 3.0
+    q, s = quant.quantize(x, fmt)
+    back = quant.dequantize(q, s)
+    if fmt == "int8":
+        # Uniform grid: half a step is s/2 everywhere.
+        bound = 0.5 * float(s) + 1e-7
+        assert float(jnp.max(jnp.abs(back - x))) <= bound
+    else:
+        # fp8 grids are exponential: one ULP at each magnitude.  (XLA's
+        # f32->fp8 convert double-rounds, so half-ULP does NOT hold — the
+        # storage contract this tier relies on is the full-ULP bound.)
+        z = np.asarray(x, np.float64) / float(s)
+        mant = {"fp8_e4m3": 3, "fp8_e5m2": 2}[fmt]
+        ulp = 2.0 ** (np.floor(np.log2(np.maximum(np.abs(z), 2.0**-6)))
+                      - mant)
+        err = np.abs(np.asarray(back, np.float64) / float(s) - z)
+        assert np.all(err <= ulp * (1 + 1e-6) + 2.0**-9)
+
+
+def test_quantize_allzero_and_identity_formats():
+    z = jnp.zeros((8, 8))
+    q, s = quant.quantize(z, "int8")
+    assert float(jnp.max(jnp.abs(q.astype(jnp.float32)))) == 0.0
+    assert np.isfinite(float(s)) and float(s) > 0.0
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 8))
+    assert quant.cast_format(x, "float32") is x
+    bf = quant.cast_format(x, "bfloat16")
+    assert bf.dtype == x.dtype  # round-trips back to the input dtype
+    np.testing.assert_array_equal(
+        np.asarray(bf), np.asarray(x.astype(jnp.bfloat16).astype(x.dtype)))
+
+
+def test_int8_grad_tier_rejected():
+    from repro.launch.steps import _grads_at_rest
+
+    cfg = config_n(2).with_precision(grad_dtype="int8")
+    with pytest.raises(ValueError, match="int8"):
+        _grads_at_rest({"w": jnp.ones((4,))}, cfg)
+
+
+# ---------------------------------------------------------------------------
+# 2. Stochastic rounding: unbiased + deterministic.
+# ---------------------------------------------------------------------------
+
+
+def test_sr_int8_unbiased_over_steps():
+    # Fractional targets across the range; the empirical mean over many
+    # (step, block) draws must converge to the real value.
+    z = jnp.asarray(np.linspace(-120.0, 120.0, 241) + 0.37, jnp.float32)
+    n = 2048
+    acc = np.zeros(z.shape, np.float64)
+    for step in range(0, n, 256):
+        batch = jnp.stack([
+            quant.stochastic_round(z, "int8", step + i, 0).astype(
+                jnp.float32) for i in range(256)])
+        acc += np.asarray(jnp.sum(batch, axis=0), np.float64)
+    mean = acc / n
+    # SR variance is <= 1/4 per draw -> SE <= 0.011 at n=2048; allow 5 SEs.
+    assert np.max(np.abs(mean - np.asarray(z, np.float64))) < 0.06
+
+
+@pytest.mark.parametrize("fmt", [f for f in ("fp8_e4m3", "fp8_e5m2")
+                                 if f in quant.FORMATS])
+def test_sr_fp8_unbiased_over_steps(fmt):
+    z = jnp.asarray(np.linspace(1.0, 200.0, 64) * 1.0137, jnp.float32)
+    n = 2048
+    acc = np.zeros(z.shape, np.float64)
+    for step in range(0, n, 256):
+        batch = jnp.stack([
+            quant.stochastic_round(z, fmt, step + i, 3).astype(jnp.float32)
+            for i in range(256)])
+        acc += np.asarray(jnp.sum(batch, axis=0), np.float64)
+    mean = acc / n
+    mant = {"fp8_e4m3": 3, "fp8_e5m2": 2}[fmt]
+    ulp = 2.0 ** (np.floor(np.log2(np.asarray(z, np.float64))) - mant)
+    # Empirical mean within a quarter ULP of the true value (SE ~ ulp/90).
+    assert np.all(np.abs(mean - np.asarray(z, np.float64)) < 0.25 * ulp)
+
+
+@pytest.mark.parametrize("fmt", SCALED)
+def test_sr_deterministic_in_step_and_block(fmt):
+    z = jax.random.uniform(jax.random.PRNGKey(2), (32, 64),
+                           minval=-100.0, maxval=100.0)
+    a = quant.stochastic_round(z, fmt, 7, 3)
+    b = quant.stochastic_round(z, fmt, 7, 3)
+    np.testing.assert_array_equal(np.asarray(a.view(jnp.int8)),
+                                  np.asarray(b.view(jnp.int8)))
+    c = quant.stochastic_round(z, fmt, 8, 3)
+    d = quant.stochastic_round(z, fmt, 7, 4)
+    as_i = np.asarray(a.view(jnp.int8))
+    assert (as_i != np.asarray(c.view(jnp.int8))).any()
+    assert (as_i != np.asarray(d.view(jnp.int8))).any()
+
+
+@settings(max_examples=16, deadline=None)
+@given(step=st.integers(0, 2**20), block=st.integers(0, 255),
+       seed=st.integers(0, 2**31 - 1))
+def test_sr_determinism_property(step, block, seed):
+    """Property: SR is a pure function of (value, step, block) for every
+    sampled counter — and moving the counter changes some decision."""
+    z = jax.random.uniform(jax.random.PRNGKey(seed), (16, 128),
+                           minval=-126.0, maxval=126.0)
+    a = quant.stochastic_round(z, "int8", step, block)
+    b = quant.stochastic_round(z, "int8", step, block)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = quant.stochastic_round(z, "int8", step + 1, block)
+    assert (np.asarray(a) != np.asarray(c)).any()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sr_unbiased_property(seed):
+    """Property: per-element empirical mean over 1024 steps tracks the
+    real value to ~5 standard errors, for random targets."""
+    z = jax.random.uniform(jax.random.PRNGKey(seed), (128,),
+                           minval=-126.0, maxval=126.0)
+    total = jnp.zeros(z.shape, jnp.float32)
+    for step in range(1024):
+        total = total + quant.stochastic_round(z, "int8", step, 0).astype(
+            jnp.float32)
+    mean = np.asarray(total, np.float64) / 1024
+    assert np.max(np.abs(mean - np.asarray(z, np.float64))) < 0.09
+
+
+def test_counter_uniform_range_and_spread():
+    idx = jnp.arange(1 << 14, dtype=jnp.int32).reshape(1, -1)
+    u = np.asarray(quant.counter_uniform(idx, 5, 1)).ravel()
+    assert u.min() >= 0.0 and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.01
+    assert abs(np.var(u) - 1 / 12) < 0.005
+
+
+# ---------------------------------------------------------------------------
+# 3. Kernel path vs the STE oracle (value + gradient).
+# ---------------------------------------------------------------------------
+
+
+def _ste(v, fmt):
+    """Straight-through: forward sees deq(quant(v)), backward identity."""
+    if fmt == "float32":
+        return v
+    f = quant.resolve(fmt)
+    if not f.needs_scale:
+        rt = v.astype(f.dtype).astype(v.dtype)
+    else:
+        q, s = quant.quantize(v, fmt)
+        rt = quant.dequantize(q, s, v.dtype)
+    return v + jax.lax.stop_gradient(rt - v)
+
+
+@pytest.mark.parametrize("pfmt,afmt", [
+    ("int8", "int8"),
+    ("int8", "float32"),
+    ("float32", "int8"),
+    ("bfloat16", "bfloat16"),
+] + ([("fp8_e4m3", "float32"), ("fp8_e4m3", "int8")]
+     if "fp8_e4m3" in quant.FORMATS else []))
+def test_quant_kernel_matches_ste_oracle(pfmt, afmt):
+    from repro.configs.base import PrecisionConfig
+
+    spec = make_tt_spec(96, 128, 3, 8)
+    cores = tt_init(jax.random.PRNGKey(3), spec)
+    x = jax.random.normal(jax.random.PRNGKey(4), (24, spec.in_dim))
+    prec = PrecisionConfig(param_dtype=pfmt, act_dtype=afmt)
+
+    def kernel_loss(cores, x):
+        y = btt_linear_op(cores, x, spec, interpret=True, precision=prec)
+        return jnp.sum(y * y), y
+
+    def oracle_loss(cores, x):
+        a, b = tt_half_factors(cores, spec)
+        y = _ste(x, afmt) @ (_ste(a, pfmt) @ _ste(b, pfmt)).T
+        return jnp.sum(y * y), y
+
+    (lk, yk), gk = jax.value_and_grad(kernel_loss, argnums=(0, 1),
+                                      has_aux=True)(cores, x)
+    (lo, yo), go = jax.value_and_grad(oracle_loss, argnums=(0, 1),
+                                      has_aux=True)(cores, x)
+    scale = float(jnp.max(jnp.abs(yo))) + 1e-30
+    assert float(jnp.max(jnp.abs(yk - yo))) / scale < 1e-5
+    for u, v in zip(jax.tree.leaves(gk), jax.tree.leaves(go)):
+        ref = float(jnp.max(jnp.abs(v))) + 1e-30
+        assert float(jnp.max(jnp.abs(u.astype(jnp.float32)
+                                     - v.astype(jnp.float32)))) / ref < 2e-4
+
+
+@settings(max_examples=8, deadline=None)
+@given(d=st.integers(2, 3), rank=st.integers(2, 12), k=st.integers(1, 32),
+       m=st.integers(8, 130), n=st.integers(8, 130),
+       seed=st.integers(0, 2**31 - 1))
+def test_quant_gradient_oracle_property(d, rank, k, m, n, seed):
+    """Property: over sampled (d, rank, K, M, N), the int8 kernel path's
+    value and STE gradients track the pure-JAX dequantized composition."""
+    from repro.configs.base import PrecisionConfig
+
+    spec = make_tt_spec(m, n, d, rank)
+    cores = tt_init(jax.random.PRNGKey(seed), spec)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, spec.in_dim))
+    prec = PrecisionConfig(param_dtype="int8", act_dtype="int8")
+
+    def kernel_loss(cores, x):
+        return jnp.sum(jnp.square(
+            btt_linear_op(cores, x, spec, interpret=True, precision=prec)))
+
+    def oracle_loss(cores, x):
+        a, b = tt_half_factors(cores, spec)
+        y = _ste(x, "int8") @ (_ste(a, "int8") @ _ste(b, "int8")).T
+        return jnp.sum(jnp.square(y))
+
+    lk, gk = jax.value_and_grad(kernel_loss, argnums=(0, 1))(cores, x)
+    lo, go = jax.value_and_grad(oracle_loss, argnums=(0, 1))(cores, x)
+    assert abs(lk - lo) / (abs(lo) + 1e-30) < 1e-5
+    for u, v in zip(jax.tree.leaves(gk), jax.tree.leaves(go)):
+        ref = float(jnp.max(jnp.abs(v))) + 1e-30
+        assert float(jnp.max(jnp.abs(u.astype(jnp.float32)
+                                     - v.astype(jnp.float32)))) / ref < 2e-4
+
+
+def test_f32_precision_config_is_bit_identical_to_none():
+    from repro.configs.base import PrecisionConfig
+
+    spec = make_tt_spec(96, 128, 3, 8)
+    cores = tt_init(jax.random.PRNGKey(5), spec)
+    x = jax.random.normal(jax.random.PRNGKey(6), (16, spec.in_dim))
+    y0 = btt_linear_op(cores, x, spec, interpret=True)
+    y1 = btt_linear_op(cores, x, spec, interpret=True,
+                       precision=PrecisionConfig())
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+# ---------------------------------------------------------------------------
+# 4. Quantized-master fused update vs the dense f32 AdamW oracle.
+# ---------------------------------------------------------------------------
+
+
+def _tiny_tree(seed=7):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (40, 33)) * 0.05,
+            "b": jax.random.normal(k2, (65,)) * 0.02}
+
+
+@pytest.mark.parametrize("fmt", [f for f in ("int8", "fp8_e4m3")
+                                 if f in quant.FORMATS])
+def test_quant_master_update_tracks_f32_adamw(fmt):
+    params = _tiny_tree()
+    grads = jax.tree.map(
+        lambda p: 0.01 * jnp.sign(p) + 0.003 * jnp.ones_like(p), params)
+    opt_q = adamw(1e-2, param_format=fmt)
+    opt_f = adamw(1e-2, fused=False)
+    sq = opt_q.init(params)
+    # The f32 oracle starts from the SAME dequantized master the quant
+    # path sees, so the only divergence left is the SR re-round at the
+    # updated block's new scale.
+    pq = master_view(sq, params)
+    sf = opt_f.init(pq)
+    pq1, sq1 = opt_q.update(grads, pq, sq, sq["step"])
+    pf1, _ = opt_f.update(grads, pq, sf, sf["step"])
+    # The quantized master can differ from the f32 trajectory by the
+    # storage grid's resolution around the ACTUAL per-block scale the
+    # kernel wrote (the tiny tree packs into a single block): int8 one
+    # quantum of RTN + one of SR; fp8 the per-magnitude ULP, doubled.
+    assert sq1["ps"].shape[0] == 1
+    s = float(sq1["ps"][0, 0])
+    mant = {"int8": None, "fp8_e4m3": 3}[fmt]
+    for got, want in zip(jax.tree.leaves(master_view(sq1, pq1)),
+                         jax.tree.leaves(pf1)):
+        err = np.abs(np.asarray(got, np.float64)
+                     - np.asarray(want, np.float64))
+        if mant is None:
+            bound = 2.0 * s
+        else:
+            z = np.abs(np.asarray(want, np.float64)) / s
+            bound = 2.0 * s * 2.0 ** (
+                np.floor(np.log2(np.maximum(z, 2.0**-6))) - mant)
+        assert np.all(err <= bound + 1e-7), (fmt, err.max())
+
+
+def test_quant_master_update_bitwise_reproducible():
+    params = _tiny_tree(8)
+    grads = jax.tree.map(lambda p: 0.02 * jnp.ones_like(p), params)
+    opt = adamw(1e-2, param_format="int8")
+
+    def one_run():
+        s = opt.init(params)
+        p = master_view(s, params)
+        for _ in range(3):
+            p, s = opt.update(grads, p, s, s["step"])
+        return s
+
+    s1, s2 = one_run(), one_run()
+    np.testing.assert_array_equal(np.asarray(s1["pq"]), np.asarray(s2["pq"]))
+    np.testing.assert_array_equal(np.asarray(s1["ps"]), np.asarray(s2["ps"]))
+
+
+# ---------------------------------------------------------------------------
+# 5. Ledger acceptance: int8 at-rest rows <= 0.5x f32, per row, per stage.
+# ---------------------------------------------------------------------------
+
+AT_REST = {"FWD": ("params", "residuals", "attn_residuals", "ffn_hidden"),
+           "BWD": ("params", "residuals", "attn_residuals", "ffn_hidden",
+                   "grads"),
+           "PU": ("params", "grads")}
+
+
+@pytest.mark.parametrize("n_enc", (2, 4, 6))
+def test_ledger_int8_rows_half_or_better(n_enc):
+    cfg = config_n(n_enc)
+    base = training_step_ledger(cfg, "adamw")
+    qcfg = cfg.with_precision(param_dtype="int8", act_dtype="int8",
+                              grad_dtype="fp8_e5m2")
+    led = training_step_ledger(qcfg, "adamw")
+    for stage, names in AT_REST.items():
+        for name in names:
+            f32b = base[stage].entry(name).nbytes
+            qb = led[stage].entry(name).nbytes
+            assert qb <= 0.5 * f32b, (stage, name, qb, f32b)
+
+
+def test_ledger_f32_precision_identical_to_default():
+    cfg = config_n(2)
+    base = training_step_ledger(cfg, "adamw")
+    same = training_step_ledger(cfg.with_precision(param_dtype="float32"),
+                                "adamw")
+    for stage in base:
+        for e0, e1 in zip(base[stage].entries, same[stage].entries):
+            assert (e0.name, e0.nbytes, e0.pool) == (e1.name, e1.nbytes,
+                                                     e1.pool)
+
+
+# ---------------------------------------------------------------------------
+# 6. ATIS convergence smoke: int8 within 5% relative final loss of f32.
+# ---------------------------------------------------------------------------
+
+
+def test_atis_int8_convergence_within_5pct():
+    from repro.data import AtisGrammar, atis_batch
+    from repro.models import init_params
+    from repro.models.classifier import atis_heads_init, atis_loss
+
+    def run(precision):
+        cfg = config_n(2).with_tt(flow="kernel").scaled_down(
+            d_model=256, n_heads=4, d_ff=256, vocab_size=1000,
+            num_layers=2, max_seq_len=64)
+        if precision is not None:
+            cfg = cfg.with_precision(**precision)
+        g = AtisGrammar(seed=0)
+        params = {"backbone": init_params(jax.random.PRNGKey(0), cfg),
+                  "heads": atis_heads_init(jax.random.PRNGKey(1), cfg,
+                                           26, 120)}
+        opt = adamw(3e-3, param_format=cfg.tt.precision.param_dtype)
+        state = opt.init(params)
+        params = master_view(state, params)
+
+        @jax.jit
+        def step(params, state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: atis_loss(p, cfg, batch))(params)
+            params, state = opt.update(grads, params, state, state["step"])
+            return params, state, loss
+
+        loss = None
+        for i in range(12):
+            batch = {k: jnp.asarray(v)
+                     for k, v in atis_batch(g, "train", i, 4).items()}
+            params, state, loss = step(params, state, batch)
+        return float(loss)
+
+    f32 = run(None)
+    q = run(dict(param_dtype="int8", act_dtype="int8",
+                 grad_dtype="fp8_e5m2"))
+    assert abs(q - f32) / abs(f32) < 0.05, (q, f32)
