@@ -1,0 +1,197 @@
+"""Fault-tolerance acceptance rows: guard overhead, recovery, fallback.
+
+The robustness tier (``runtime.guard`` + ``runtime.chaos`` +
+``checkpoint.restore_latest_valid``) has three acceptance claims, and each
+gets a row here so the trajectory artifact carries the evidence:
+
+  1. the numerics sentry is effectively free — the fused norm/finite/skip
+     machinery adds < 3% to the unguarded training-step wall-clock
+     (``robustness/overhead/*``; wall-clock, so ``rows()`` only);
+  2. a guarded run rides out a deterministic NaN burst and lands within
+     5% of the fault-free final loss, while the SAME step with the guard
+     mask off diverges (``robustness/recovery/*``);
+  3. a corrupted newest checkpoint never loses the run — restore falls
+     back to the previous intact step bit-identically
+     (``robustness/checkpoint/*``).
+
+Rows 2-3 are deterministic (seeded chaos, no timing), so they are also the
+``check_rows()`` set gating CI via ``benchmarks.run --check``.
+
+Emitted rows (CSV via benchmarks.run, JSON schema documented there):
+  robustness/recovery/guarded_finite     1 = guarded loss finite post-burst
+  robustness/recovery/unguarded_diverged 1 = guard_on=False run went NaN
+  robustness/recovery/rel_loss_err       |faulted - clean| / clean final loss
+  robustness/recovery/recovered          1 = rel_loss_err <= 0.05 (acceptance)
+  robustness/recovery/skipped_steps      in-jit masked steps (== burst len)
+  robustness/checkpoint/fallback_ok      1 = corrupt latest -> earlier step
+  robustness/checkpoint/bitwise          1 = fallback leaves bit-identical
+  robustness/overhead/unguarded_us       median unguarded train step
+  robustness/overhead/guarded_us         median guarded train step
+  robustness/overhead/frac               guarded/unguarded - 1
+  robustness/overhead/under_3pct         1 = frac < 0.03 (acceptance)
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.timing import median_us
+
+STEPS = 150         # recovery run length (tiny model, seconds on CPU)
+BURST = range(12, 15)  # NaN-burst steps (after EWMA warmup, before the end)
+
+
+def _quad_problem():
+    """Tiny noisy least-squares problem: y = A x + eps, fit W.
+
+    The 0.1-std label noise puts an irreducible floor (~0.01 MSE) under the
+    loss, so both the fault-free and the guarded-faulted run converge TO
+    THE FLOOR well before STEPS and the 5% relative comparison is stable —
+    a noiseless quadratic decays toward 0 forever and makes the relative
+    error between two runs a coin flip."""
+    rng = np.random.default_rng(0)
+    A = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    X = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    Y = X @ A.T + jnp.asarray(rng.normal(size=(64, 16)) * 0.1, jnp.float32)
+    params = {"w": jnp.asarray(rng.normal(size=(16, 16)) * 0.1, jnp.float32)}
+    return params, (X, Y)
+
+
+def _recovery_rows():
+    from repro.optim import adamw
+    from repro.runtime.chaos import ChaosPlan, GradFault
+    from repro.runtime.guard import (
+        GuardPolicy, TrainGuard, guard_controls, make_guarded_step)
+
+    params0, batch = _quad_problem()
+    opt = adamw(1e-1, fused=True)
+    step = jax.jit(make_guarded_step(
+        lambda p, b: jnp.mean(jnp.square(b[0] @ p["w"].T - b[1])), opt))
+    plan = ChaosPlan(grad_faults=(
+        GradFault(step=BURST.start, length=len(BURST), mode="nan"),))
+
+    def run(*, faults: bool, guard_on: bool):
+        # recover_after=10: the post-burst lr backoff heals fast enough
+        # that both runs sit on the noise floor at STEPS.
+        guard = TrainGuard(GuardPolicy(warmup=4, recover_after=10))
+        params = jax.tree.map(jnp.array, params0)
+        state = guard.attach(opt.init(params))
+        loss = float("nan")
+        for i in range(STEPS):
+            if guard_on:
+                ctrl = guard.controls(
+                    fault_add=plan.fault_add(i) if faults else 0.0)
+            else:
+                ctrl = guard_controls(
+                    fault_add=plan.fault_add(i) if faults else 0.0,
+                    guard_on=False)
+            params, state, m = step(params, state, batch, ctrl)
+            if guard_on:
+                params, state, _ = guard.observe(i, m, params, state)
+            loss = float(m["loss"])
+        return loss, guard.report()
+
+    clean, _ = run(faults=False, guard_on=True)
+    faulted, rep = run(faults=True, guard_on=True)
+    unguarded, _ = run(faults=True, guard_on=False)
+    rel = abs(faulted - clean) / max(abs(clean), 1e-12)
+    return [
+        ("robustness/recovery/guarded_finite",
+         1.0 if np.isfinite(faulted) else 0.0,
+         f"final loss after {len(BURST)}-step NaN burst is finite"),
+        ("robustness/recovery/unguarded_diverged",
+         0.0 if np.isfinite(unguarded) else 1.0,
+         "same step + burst with guard_on=False goes NaN (control)"),
+        ("robustness/recovery/rel_loss_err", rel,
+         f"guarded faulted {faulted:.4g} vs fault-free {clean:.4g}"),
+        ("robustness/recovery/recovered", 1.0 if rel <= 0.05 else 0.0,
+         "1 = within 5% of the fault-free final loss (acceptance)"),
+        ("robustness/recovery/skipped_steps", float(rep["skipped"]),
+         f"in-jit masked steps; burst injected {len(BURST)}"),
+    ]
+
+
+def _checkpoint_rows():
+    from repro.checkpoint import restore_latest_valid, save
+    from repro.runtime.chaos import corrupt_checkpoint
+
+    tree10 = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+              "step": jnp.asarray(10)}
+    tree20 = {"w": tree10["w"] * 2.0, "step": jnp.asarray(20)}
+    tmpl = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree10)
+    root = tempfile.mkdtemp(prefix="bench_robustness_ckpt_")
+    try:
+        save(root, 10, tree10)
+        save(root, 20, tree20)
+        corrupt_checkpoint(root, 20, mode="flip", seed=0)
+        got = restore_latest_valid(root, tmpl)
+        ok = got is not None and got[0][1] == 10 and got[1] == [20]
+        bitwise = ok and all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(tree10),
+                            jax.tree.leaves(got[0][0])))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    return [
+        ("robustness/checkpoint/fallback_ok", 1.0 if ok else 0.0,
+         "corrupt latest (CRC) -> restore falls back to prior step"),
+        ("robustness/checkpoint/bitwise", 1.0 if bitwise else 0.0,
+         "fallback leaves bit-identical to what was saved"),
+    ]
+
+
+def _overhead_rows():
+    from repro.configs.atis_transformer import config_n
+    from repro.launch.steps import make_train_step
+    from repro.models import init_params
+    from repro.optim import adamw
+    from repro.runtime.guard import guard_controls
+
+    cfg = config_n(2).scaled_down(d_model=128, n_heads=4, d_ff=128,
+                                  vocab_size=1000, num_layers=2)
+    opt = adamw(1e-3, fused=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init(params)
+    rng = np.random.default_rng(0)
+    # Big enough that fwd/bwd dominates: the guard's fixed cost (the
+    # masked select over params + opt state) must amortize, which is the
+    # deployment regime the 3% acceptance is about.
+    B, S = 32, 128
+    batch = {
+        "tokens": jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "labels": jnp.asarray(rng.integers(1, cfg.vocab_size, (B, S)),
+                              jnp.int32),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    plain = jax.jit(make_train_step(cfg, opt))
+    guarded = jax.jit(make_train_step(cfg, opt, guard=True))
+    ctrl = guard_controls()
+    t_plain = median_us(plain, params, state, batch, reps=10)
+    state_g = dict(state, lr_scale=jnp.float32(1.0))
+    t_guard = median_us(guarded, params, state_g, batch, ctrl, reps=10)
+    frac = t_guard / t_plain - 1.0
+    return [
+        ("robustness/overhead/unguarded_us", t_plain,
+         "median fused ATIS train step, no guard"),
+        ("robustness/overhead/guarded_us", t_guard,
+         "same step via apply_guarded_update (norm/finite/skip fused)"),
+        ("robustness/overhead/frac", frac,
+         "guarded/unguarded - 1; acceptance < 0.03"),
+        ("robustness/overhead/under_3pct", 1.0 if frac < 0.03 else 0.0,
+         "1 = guard overhead under 3% (acceptance; wall-clock, CPU)"),
+    ]
+
+
+def check_rows():
+    """Deterministic rows for ``benchmarks.run --check`` (no wall-clock)."""
+    return _recovery_rows() + _checkpoint_rows()
+
+
+def rows():
+    return check_rows() + _overhead_rows()

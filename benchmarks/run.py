@@ -32,6 +32,11 @@ command ``python -m benchmarks.run`` produces a single auditable artifact.
                                                 int8/fp8/bf16 ledger rows vs
                                                 f32 per training stage on
                                                 ATIS 2/4/6-enc)
+  bench_robustness   (beyond paper)            (fault-tolerance acceptance:
+                                                guard overhead vs unguarded
+                                                step, NaN-burst recovery
+                                                within 5% of fault-free,
+                                                corrupt-checkpoint fallback)
 
 Usage::
 
@@ -99,11 +104,14 @@ MODULES = [
     "bench_ffn",
     "bench_decode",
     "bench_precision",
+    "bench_robustness",
 ]
 
-# Modules with a fused-vs-unfused analytic byte model (check_rows()).
+# Modules with a fused-vs-unfused analytic byte model (check_rows()) —
+# bench_robustness contributes its deterministic (seeded-chaos, no
+# wall-clock) recovery + checkpoint-fallback rows to the same gate.
 CHECK_MODULES = ["bench_pu", "bench_bwd", "bench_attn", "bench_ffn",
-                 "bench_decode", "bench_precision"]
+                 "bench_decode", "bench_precision", "bench_robustness"]
 BASELINE_PATH = os.path.join(os.path.dirname(__file__),
                              "baseline_check.json")
 BASELINE_SLACK = 0.999  # ratios may not fall >0.1% below the baseline

@@ -1,10 +1,16 @@
-"""Fault-tolerant checkpointing: atomic, async, keep-k, elastic restore."""
+"""Fault-tolerant checkpointing: atomic, async, keep-k, CRC-verified,
+elastic restore."""
 from .checkpoint import (
+    CheckpointCorruptError,
     CheckpointManager,
     latest_step,
     list_steps,
     restore,
+    restore_latest_valid,
     save,
+    verify_step,
 )
 
-__all__ = ["CheckpointManager", "save", "restore", "latest_step", "list_steps"]
+__all__ = ["CheckpointManager", "CheckpointCorruptError", "save", "restore",
+           "restore_latest_valid", "verify_step", "latest_step",
+           "list_steps"]

@@ -14,8 +14,16 @@ Guarantees:
     A crash mid-save leaves the previous checkpoint untouched.
   * **Async**: ``save(..., blocking=False)`` snapshots device arrays to host
     (the only synchronous part) and writes in a background thread; training
-    continues.  ``wait()`` joins before the next save or at exit.
+    continues.  ``wait()`` joins before the next save or at exit and
+    RE-RAISES any exception the writer thread died with — a failed write
+    must never let training continue believing the checkpoint exists.
   * **Keep-k**: older step dirs are pruned after a successful save.
+  * **Integrity**: every leaf's serialized bytes carry a CRC32 in
+    ``meta.json``; ``restore`` verifies before deserializing (a flipped
+    byte or truncated file raises :class:`CheckpointCorruptError`, never
+    returns silently wrong tensors), and :func:`restore_latest_valid`
+    walks the manifest newest->oldest past corrupt/missing steps — the
+    recovery path for bit rot or power loss after the atomic rename.
   * **Elastic restore**: leaves come back as host numpy; the caller
     device_puts them under specs derived for the *current* mesh
     (runtime.elastic.replan_for_mesh), so restarting on a different topology
@@ -27,17 +35,25 @@ out of the serialization format entirely.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import tempfile
 import threading
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "list_steps", "CheckpointManager"]
+__all__ = ["save", "restore", "restore_latest_valid", "verify_step",
+           "latest_step", "list_steps", "CheckpointManager",
+           "CheckpointCorruptError"]
+
+
+class CheckpointCorruptError(ValueError):
+    """A leaf file failed CRC verification (or is missing/unreadable)."""
 
 _MANIFEST = "manifest.json"
 
@@ -78,15 +94,20 @@ def _write_step(root: str, step: int, leaves: list[np.ndarray],
     final = _step_dir(root, step)
     tmp = tempfile.mkdtemp(dir=root, prefix=".tmp_save_")
     try:
-        meta = {
-            "step": step,
-            "leaves": [
-                {"path": p, "shape": list(a.shape), "dtype": str(a.dtype)}
-                for p, a in zip(paths, leaves)
-            ],
-        }
-        for i, a in enumerate(leaves):
-            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), a)
+        recs = []
+        for i, (p, a) in enumerate(zip(paths, leaves)):
+            # Serialize to memory once: the CRC covers the exact bytes on
+            # disk (npy header included), so restore verifies the file
+            # without a second parse.
+            buf = io.BytesIO()
+            np.save(buf, a)
+            data = buf.getvalue()
+            with open(os.path.join(tmp, f"leaf_{i:05d}.npy"), "wb") as f:
+                f.write(data)
+            recs.append({"path": p, "shape": list(a.shape),
+                         "dtype": str(a.dtype),
+                         "crc32": zlib.crc32(data)})
+        meta = {"step": step, "leaves": recs}
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
             f.flush()
@@ -109,7 +130,9 @@ def save(root: str, step: int, tree: Any, *, keep: int | None = None,
          blocking: bool = True) -> threading.Thread | None:
     """Checkpoint ``tree`` at ``step``.  Non-blocking returns the writer
     thread (already started); join it (or use CheckpointManager) before
-    depending on the file."""
+    depending on the file.  The thread carries any writer exception in
+    ``thread.ckpt_error`` (a one-element list) — joiners must check it
+    (``CheckpointManager.wait`` re-raises)."""
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     paths = [_path_str(p) for p, _ in flat]
     # Snapshot to host — after this, device buffers may be donated/mutated.
@@ -117,8 +140,19 @@ def save(root: str, step: int, tree: Any, *, keep: int | None = None,
     if blocking:
         _write_step(root, step, leaves, paths, keep)
         return None
-    t = threading.Thread(target=_write_step,
-                         args=(root, step, leaves, paths, keep), daemon=True)
+
+    box: list[BaseException] = []
+
+    def run():
+        try:
+            # Resolve the module global at call time (chaos patches it).
+            _write_step(root, step, leaves, paths, keep)
+        except BaseException as e:  # noqa: BLE001 — captured, re-raised later
+            box.append(e)
+
+    t = threading.Thread(target=run, daemon=True)
+    t.ckpt_error = box  # type: ignore[attr-defined]
+    t.ckpt_step = step  # type: ignore[attr-defined]
     t.start()
     return t
 
@@ -143,11 +177,68 @@ def restore(root: str, template: Any, step: int | None = None) -> tuple[Any, int
         p = _path_str(path)
         if p != rec["path"]:
             raise ValueError(f"leaf {i}: template path {p} != saved {rec['path']}")
-        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        fp = os.path.join(d, f"leaf_{i:05d}.npy")
+        with open(fp, "rb") as f:
+            data = f.read()
+        crc = rec.get("crc32")  # absent in pre-integrity checkpoints
+        if crc is not None and zlib.crc32(data) != crc:
+            raise CheckpointCorruptError(
+                f"{p}: CRC mismatch in step {step} ({fp}) — leaf bytes "
+                f"corrupted on disk")
+        arr = np.load(io.BytesIO(data))
         if list(arr.shape) != list(tmpl.shape):
             raise ValueError(f"{p}: shape {arr.shape} != template {tmpl.shape}")
         leaves.append(arr.astype(tmpl.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def verify_step(root: str, step: int) -> bool:
+    """True iff step ``step``'s files are present and every leaf's bytes
+    match its recorded CRC (pre-integrity checkpoints: presence only)."""
+    d = _step_dir(root, step)
+    try:
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        for i, rec in enumerate(meta["leaves"]):
+            with open(os.path.join(d, f"leaf_{i:05d}.npy"), "rb") as f:
+                data = f.read()
+            crc = rec.get("crc32")
+            if crc is not None and zlib.crc32(data) != crc:
+                return False
+    except (OSError, ValueError, KeyError, EOFError):
+        return False
+    return True
+
+
+def restore_latest_valid(root: str, template: Any, *,
+                         repair: bool = True) -> tuple[tuple[Any, int], Any] | None:
+    """Restore the NEWEST step that loads cleanly, walking the manifest
+    backwards past corrupt/missing/truncated steps.
+
+    Returns ``((tree, step), skipped)`` with ``skipped`` the list of bad
+    step numbers that were passed over, or ``None`` when no step is
+    restorable.  With ``repair=True`` (default) the bad step dirs are
+    removed and the manifest rewritten WITHOUT them — but only when a
+    valid step was found: if nothing restores (e.g. a wrong template),
+    the files on disk are left exactly as they were.
+    """
+    steps = list_steps(root)
+    skipped: list[int] = []
+    for step in reversed(steps):
+        try:
+            tree, got = restore(root, template, step)
+        except (OSError, ValueError, KeyError, EOFError):
+            # ValueError covers CheckpointCorruptError and
+            # json.JSONDecodeError; OSError covers missing files/dirs;
+            # EOFError covers npy truncated inside the header.
+            skipped.append(step)
+            continue
+        if repair and skipped:
+            for s in skipped:
+                shutil.rmtree(_step_dir(root, s), ignore_errors=True)
+            _write_manifest(root, [s for s in steps if s not in skipped])
+        return (tree, got), skipped
+    return None
 
 
 class CheckpointManager:
@@ -159,9 +250,20 @@ class CheckpointManager:
         self._pending: threading.Thread | None = None
 
     def wait(self) -> None:
+        """Join the in-flight writer; RE-RAISE its exception if it died.
+
+        Before this check, a daemon-thread write failure (disk full,
+        permissions, injected crash) was silently lost and training kept
+        running believing the checkpoint existed."""
         if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+            t, self._pending = self._pending, None
+            t.join()
+            box = getattr(t, "ckpt_error", None)
+            if box:
+                step = getattr(t, "ckpt_step", "?")
+                raise RuntimeError(
+                    f"async checkpoint write for step {step} failed"
+                ) from box[0]
 
     def save_async(self, step: int, tree: Any) -> None:
         self.wait()  # one writer in flight at a time
@@ -176,3 +278,13 @@ class CheckpointManager:
         if latest_step(self.root) is None:
             return None
         return restore(self.root, template)
+
+    def restore_latest_valid(self, template: Any,
+                             *, repair: bool = True) -> tuple[Any, int] | None:
+        """Newest step that passes CRC + structure checks (walking past
+        corrupt/missing steps, repairing the manifest); None if none."""
+        got = restore_latest_valid(self.root, template, repair=repair)
+        if got is None:
+            return None
+        (tree, step), _skipped = got
+        return tree, step

@@ -43,7 +43,7 @@ import numpy as np
 __all__ = [
     "QuantFormat", "FORMATS", "HAVE_FP8",
     "resolve", "itemsize", "needs_scale", "storage_dtype", "qmax",
-    "quantize", "dequantize", "cast_format",
+    "quantize", "dequantize", "cast_format", "lost_fraction",
     "counter_bits", "counter_uniform", "stochastic_round",
     "quantized_bytes",
 ]
@@ -151,6 +151,25 @@ def cast_format(x: jax.Array, fmt: str) -> jax.Array:
         q, s = quantize(x, fmt)
         return dequantize(q, s, x.dtype)
     return x.astype(f.dtype).astype(x.dtype)
+
+
+def lost_fraction(x: jax.Array, roundtripped: jax.Array) -> jax.Array:
+    """Fraction of nonzero elements of ``x`` that the at-rest round trip
+    mapped to exactly zero — the quant-saturation sentinel.
+
+    Per-tensor max-abs scaling means no element ever literally clips at
+    qmax (the scale is defined by the max); the real failure mode of a
+    scaled format is the dual: one outlier inflates ``amax`` until the
+    bulk of the tensor underflows the storage grid and rounds to 0.  A
+    gradient tensor whose mass vanishes this way contributes nothing to
+    the update — ``runtime.guard`` watches this fraction and escalates
+    the grad tier (fp8_e5m2 -> bf16) before training silently stalls.
+    Returns a () f32 in [0, 1].
+    """
+    nz = x != 0
+    lost = nz & (roundtripped == 0)
+    return (jnp.sum(lost).astype(jnp.float32)
+            / jnp.maximum(jnp.sum(nz), 1).astype(jnp.float32))
 
 
 # ---------------------------------------------------------------------------

@@ -38,7 +38,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.launch.steps import make_decode_step, make_prefill, prepare_decode_cache
 from repro.models.transformer import init_params, num_params
 from repro.runtime import kv_repeat_for_mesh
-from repro.runtime.decode_engine import PagedDecodeEngine, paged_supported
+from repro.runtime.decode_engine import (PagedDecodeEngine,
+                                         finite_logit_rows, paged_supported)
 from repro.runtime.scheduler import Request, Scheduler
 
 
@@ -87,10 +88,21 @@ def serve_paged(cfg, params, prompts, *, gen: int, max_concurrency: int,
                 page_size: int = DEFAULT_PAGE_SIZE, fused_decode: bool = True,
                 sample=None, eos_id: int | None = None,
                 max_len: int | None = None, interpret: bool | None = None,
-                quiet: bool = False) -> dict:
+                max_queue: int | None = None,
+                deadline_steps: int | None = None,
+                chaos=None, quiet: bool = False) -> dict:
     """Run ``prompts`` (list of token lists) through the scheduler + paged
     engine until every request retires.  Reusable from tests/benchmarks;
-    ``main`` wraps it with flag parsing."""
+    ``main`` wraps it with flag parsing.
+
+    Hardening knobs: ``max_queue`` bounds the waiting queue (overflow is
+    shed at submit), ``deadline_steps`` is the per-request TTL in
+    scheduler steps (expired requests are timeout-evicted and their slot
+    released), and any slot whose logits come back non-finite — a
+    numerics fault or a poisoned request — is evicted instead of crashing
+    the batch (``poisoned`` in the report).  ``chaos`` is an optional
+    fault injector with a ``poison_logits(logits, decode_step)`` method
+    (``runtime.chaos.LogitPoison``)."""
     if sample is None:
         def sample(lg, rid, n):  # greedy default
             return int(jnp.argmax(jnp.asarray(lg).astype(jnp.float32)))
@@ -99,14 +111,19 @@ def serve_paged(cfg, params, prompts, *, gen: int, max_concurrency: int,
     eng = PagedDecodeEngine(cfg, params, page_size=page_size,
                             max_concurrency=max_concurrency, max_len=max_len,
                             fused_decode=fused_decode, interpret=interpret)
-    sched = Scheduler(max_concurrency)
+    sched = Scheduler(max_concurrency, max_queue=max_queue,
+                      default_deadline=deadline_steps)
     sched.submit_all([Request(rid=i, prompt=list(map(int, p)), max_new=gen,
                               eos_id=eos_id) for i, p in enumerate(prompts)])
 
     t0 = time.time()
     t_prefill = 0.0
     decode_steps = 0
+    poisoned = 0
     while sched.has_work():
+        for req, slot in sched.expire():
+            if slot is not None:  # was running: free its KV pages
+                eng.release(slot)
         for req in sched.admit(
                 can_admit=lambda r: eng.can_admit(len(r.prompt))):
             tp = time.time()
@@ -114,6 +131,11 @@ def serve_paged(cfg, params, prompts, *, gen: int, max_concurrency: int,
             jax.block_until_ready(lg)
             t_prefill += time.time() - tp
             slot = req.slot
+            if not finite_logit_rows(np.asarray(lg)[None])[0]:
+                sched.evict(slot)
+                eng.release(slot)
+                poisoned += 1
+                continue
             if sched.observe(slot, sample(lg, req.rid, 0)) is not None:
                 eng.release(slot)
         running = sched.running()
@@ -125,9 +147,20 @@ def serve_paged(cfg, params, prompts, *, gen: int, max_concurrency: int,
                 poss[r.slot] = len(r.prompt) + len(r.out) - 1
             logits = eng.decode_step(toks, poss)
             logits = np.asarray(logits)
+            if chaos is not None:
+                logits = chaos.poison_logits(logits, decode_steps)
             decode_steps += 1
+            finite = finite_logit_rows(logits)
             for r in list(running):
                 slot = r.slot
+                if not finite[slot]:
+                    # Poisoned slot: evict this request, keep the batch
+                    # alive — the other lanes' math is row-independent,
+                    # so their tokens are unaffected.
+                    sched.evict(slot)
+                    eng.release(slot)
+                    poisoned += 1
+                    continue
                 tok = sample(logits[slot], r.rid, len(r.out))
                 if sched.observe(slot, tok) is not None:
                     eng.release(slot)
@@ -137,11 +170,13 @@ def serve_paged(cfg, params, prompts, *, gen: int, max_concurrency: int,
     t_decode = max(t_total - t_prefill, 1e-9)
     rep = sched.report()
     rep["decode_steps"] = decode_steps
+    rep["poisoned"] = poisoned
     by_rid = sorted(sched.retired, key=lambda r: r.rid)
     toks_per_s = rep["tokens_out"] / t_decode
     if not quiet:
         print(f"[serve] paged: {rep['finished']} finished, "
-              f"{rep['evicted']} evicted in {rep['steps']} steps "
+              f"{rep['evicted']} evicted, {rep['timed_out']} timed out, "
+              f"{rep['shed']} shed in {rep['steps']} steps "
               f"({decode_steps} decode); prefill {t_prefill*1e3:.0f} ms, "
               f"decode {t_decode*1e3:.0f} ms ({toks_per_s:.1f} tok/s); "
               f"max wait {rep['max_wait_steps']} steps")
@@ -174,7 +209,8 @@ def _main_paged(cfg, args) -> dict:
                       page_size=args.page_size,
                       fused_decode=args.fused_decode,
                       sample=_sampler(args, cfg.vocab_size),
-                      max_len=max_len)
+                      max_len=max_len, max_queue=args.max_queue,
+                      deadline_steps=args.deadline_steps)
     if args.ledger:
         from repro.core.memory_ledger import decode_step_ledger
 
@@ -278,6 +314,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--page-size", type=int, default=DEFAULT_PAGE_SIZE)
     ap.add_argument("--max-concurrency", type=int, default=None,
                     help="decode slots (default: --batch)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the scheduler's waiting queue: a submit "
+                         "that would overflow it is shed immediately "
+                         "(counted in the report) instead of queueing "
+                         "unboundedly under overload")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="per-request TTL in scheduler steps: requests "
+                         "not finished within the deadline of arrival "
+                         "are timeout-evicted (waiting or running) and "
+                         "their KV pages freed")
     ap.add_argument("--ledger", action="store_true",
                     help="print the DECODE-stage memory ledger")
     args = ap.parse_args(argv)

@@ -62,7 +62,8 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
                     clip_norm: float = 1.0, remat: bool = True,
                     batch_constraint=None, fused_bwd: bool | None = None,
                     fused_attn: bool | None = None,
-                    fused_ffn: bool | None = None):
+                    fused_ffn: bool | None = None,
+                    guard: bool = False):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     ``microbatches > 1`` accumulates gradients over leading batch splits in a
@@ -106,6 +107,17 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
     activation in one Pallas kernel per direction, hidden state
     VMEM-resident, backward recomputing it from the layer input; False
     the two-call (three when gated) path.
+
+    ``guard=True`` changes the signature to ``(params, opt_state, batch,
+    ctrl) -> (params, opt_state, metrics)`` and routes the tail of the
+    step through ``runtime.guard.apply_guarded_update``: one fused
+    norm/all-finite reduction, the grad-tier escalation select, and the
+    skip-step mask that keeps params AND the full optimizer state (dense,
+    sketched, quant-master) untouched on a non-finite step.  ``ctrl``
+    comes from ``TrainGuard.controls()`` (or ``guard_controls()``);
+    metrics gain ``nonfinite``/``sat_frac``/``applied``.  The pipeline
+    and DDP builders do not take a guard (their shard_map bodies own the
+    collectives); ``launch.train`` rejects the combination.
     """
     if fused_bwd is not None:
         cfg = cfg.with_tt(fused_bwd=fused_bwd)
@@ -117,7 +129,7 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
     def grads_of(params, batch):
         return jax.value_and_grad(loss_fn)(params, cfg, batch, remat=remat)
 
-    def train_step(params, opt_state, batch):
+    def loss_and_grads(params, batch):
         if microbatches == 1:
             loss, grads = grads_of(params, batch)
             grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
@@ -148,6 +160,24 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer, *, microbatches: int = 1,
             wsum = jnp.maximum(ws.sum(), 1.0)
             grads = jax.tree.map(lambda g: g / wsum, grads)
             loss = (losses * ws).sum() / wsum
+        return loss, grads
+
+    if guard:
+        from repro.runtime.guard import apply_guarded_update
+
+        def guarded_step(params, opt_state, batch, ctrl):
+            loss, grads = loss_and_grads(params, batch)
+            # The guarded tail owns the grad-tier cast (it needs both the
+            # configured tier and the bf16 escalation in the graph) and
+            # the clip (it reuses the finite-probe reduction as the norm).
+            return apply_guarded_update(
+                opt, loss, grads, params, opt_state, ctrl,
+                grad_fmt=cfg.tt.precision.grad_dtype, clip_norm=clip_norm)
+
+        return guarded_step
+
+    def train_step(params, opt_state, batch):
+        loss, grads = loss_and_grads(params, batch)
         grads = _grads_at_rest(grads, cfg)
         if clip_norm:
             grads, gnorm = clip_by_global_norm(grads, clip_norm)

@@ -5,9 +5,12 @@ examples) and a full config on a TPU pod slice — only the mesh and config
 change.  Demonstrates the full fault-tolerance story:
 
   * deterministic seekable data (batch = f(seed, step)) — restart-exact
-  * async atomic checkpoints with keep-k + adaptive cadence
+  * async atomic checkpoints with keep-k + adaptive cadence + per-leaf CRC
   * straggler monitor on per-step wall time
-  * resume: picks up at latest checkpoint step, data stream realigns
+  * resume: picks up at the newest VALID checkpoint step (corrupt steps
+    are skipped and pruned), data stream realigns
+  * ``--guard``: numerics sentry + skip/backoff/rollback escalation
+    (runtime.guard), chaos-tested in tests/test_robustness.py
 
 Usage (CPU example — reduced qwen3 with the paper's TT compression):
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --tt \
@@ -132,6 +135,18 @@ def main(argv=None) -> dict:
                          "(fp8_e5m2 is self-describing — no scale; int8 "
                          "is rejected)")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the training guard (runtime.guard): one "
+                         "fused all-finite + grad-norm probe inside the "
+                         "jitted step, EWMA loss/grad-norm spike "
+                         "detection, and the skip-step -> lr-backoff -> "
+                         "rollback escalation ladder; quant-saturation "
+                         "sentinel auto-escalates the grad tier "
+                         "fp8_e5m2->bf16 (single-device loop only)")
+    ap.add_argument("--rollback-after", type=int, default=4,
+                    help="with --guard: consecutive bad steps before "
+                         "rolling back to the last-good snapshot / newest "
+                         "valid checkpoint")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0,
@@ -153,6 +168,9 @@ def main(argv=None) -> dict:
 
     cfg = build(args)
     pipelined = args.pipeline_stages > 1 or args.tp > 1
+    if args.guard and pipelined:
+        ap.error("--guard supports the single-device loop only (the "
+                 "pipeline/TP shard_map bodies own their collectives)")
     if pipelined:
         mesh = make_host_mesh(args.data_axis, args.tp,
                               stage=args.pipeline_stages)
@@ -172,6 +190,13 @@ def main(argv=None) -> dict:
     # Quantized-master states own the only parameter copy; align step 1's
     # forward with the storage grid (identity for unquantized states).
     params = master_view(opt_state, params)
+    guard = None
+    if args.guard:
+        from repro.runtime.guard import GuardPolicy, TrainGuard
+        guard = TrainGuard(GuardPolicy(rollback_after=args.rollback_after))
+        # The lr_scale leaf rides in the optimizer state (checkpointed,
+        # sharded replicated) so backoff/recovery never retraces the step.
+        opt_state = guard.attach(opt_state)
     print(f"[train] arch={cfg.name} tt={cfg.tt.mode} params={num_params(params):,} "
           f"({param_bytes(params)/1e6:.1f} MB) mesh={dict(mesh.shape)}")
 
@@ -186,7 +211,8 @@ def main(argv=None) -> dict:
     else:
         train_step = make_train_step(cfg, opt,
                                      microbatches=args.microbatches,
-                                     fused_bwd=args.fused_bwd)
+                                     fused_bwd=args.fused_bwd,
+                                     guard=args.guard)
         pspec = param_specs(cfg, params, mesh)
         sspec = opt_state_specs(cfg, opt_state, pspec, mesh)
         sample = lm_batch(args.seed, 0, args.batch, args.seq, vocab)
@@ -197,17 +223,33 @@ def main(argv=None) -> dict:
         params = jax.tree.map(jax.device_put, params, psh)
         opt_state = jax.tree.map(jax.device_put, opt_state, ssh)
 
-        step_fn = jax.jit(train_step, in_shardings=(psh, ssh, bsh),
-                          out_shardings=(psh, ssh, None),
-                          donate_argnums=(0, 1))
+        if args.guard:
+            # ctrl scalars replicate (no in_sharding constraint needed).
+            step_fn = jax.jit(train_step,
+                              in_shardings=(psh, ssh, bsh, None),
+                              out_shardings=(psh, ssh, None),
+                              donate_argnums=(0, 1))
+        else:
+            step_fn = jax.jit(train_step, in_shardings=(psh, ssh, bsh),
+                              out_shardings=(psh, ssh, None),
+                              donate_argnums=(0, 1))
 
     start = 0
     mgr = None
     if args.ckpt_dir:
         mgr = CheckpointManager(args.ckpt_dir, keep=3)
-        tmpl = jax.eval_shape(lambda: (init_params(jax.random.PRNGKey(args.seed), cfg),
-                                       opt.init(init_params(jax.random.PRNGKey(args.seed), cfg))))
-        got = mgr.restore_latest(tmpl)
+
+        def template():
+            p = init_params(jax.random.PRNGKey(args.seed), cfg)
+            s = opt.init(p)
+            return (p, guard.attach(s) if guard is not None else s)
+
+        tmpl = jax.eval_shape(template)
+        if guard is not None:
+            guard.manager, guard.template = mgr, tmpl
+        # Walks past corrupt/truncated steps (CRC-verified) instead of
+        # crashing on a bad latest checkpoint; repairs the manifest.
+        got = mgr.restore_latest_valid(tmpl)
         if got is not None:
             (params_h, opt_h), start = got
             if psh is None:
@@ -228,14 +270,23 @@ def main(argv=None) -> dict:
         if bsh is not None:
             batch = jax.tree.map(jax.device_put, batch, bsh)
         t0 = time.time()
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if guard is not None:
+            params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                                 guard.controls())
+        else:
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
         loss = float(metrics["loss"])
         dt = time.time() - t0
         flagged = monitor.observe(dt)
+        action = "ok"
+        if guard is not None:
+            params, opt_state, action = guard.observe(step, metrics, params,
+                                                      opt_state)
         losses.append(loss)
         if step % args.log_every == 0 or step == args.steps - 1:
+            tag = "" if action == "ok" else f"  GUARD:{action.upper()}"
             print(f"[train] step {step:5d} loss {loss:.4f} "
-                  f"{dt*1e3:7.1f} ms{'  STRAGGLER' if flagged else ''}")
+                  f"{dt*1e3:7.1f} ms{'  STRAGGLER' if flagged else ''}{tag}")
         if mgr is not None:
             interval = args.ckpt_every or cadence.interval(monitor)
             if next_ckpt is None:
@@ -245,9 +296,12 @@ def main(argv=None) -> dict:
                 next_ckpt = step + 1 + interval
     if mgr is not None:
         mgr.wait()
-    return {"final_loss": losses[-1] if losses else None,
-            "first_loss": losses[0] if losses else None,
-            "straggler_flags": monitor.total_flags}
+    out = {"final_loss": losses[-1] if losses else None,
+           "first_loss": losses[0] if losses else None,
+           "straggler_flags": monitor.total_flags}
+    if guard is not None:
+        out["guard"] = guard.report()
+    return out
 
 
 if __name__ == "__main__":

@@ -41,6 +41,30 @@ def _tree_cast_like(tree, ref):
     return jax.tree.map(lambda x, r: x.astype(r.dtype), tree, ref)
 
 
+def _scaled_lr(lr_fn, step, state):
+    """Effective lr for this step, honoring the guard's ``lr_scale`` leaf.
+
+    ``runtime.guard.TrainGuard.attach`` adds a () f32 ``lr_scale`` to the
+    optimizer state; the anomaly-escalation policy backs it off and
+    recovers it WITHOUT retracing the jitted step (the schedule closure
+    ``lr_fn`` is baked into the compiled update — a state leaf is the only
+    knob that can move per-step).  States without the leaf are untouched:
+    the multiply never appears in the lowered graph."""
+    lr_t = lr_fn(step)
+    if isinstance(state, dict) and "lr_scale" in state:
+        lr_t = lr_t * state["lr_scale"]
+    return lr_t
+
+
+def _carry_guard(state, new_state):
+    """Propagate guard-owned leaves (``lr_scale``) into the fresh state
+    dict every update path constructs — optimizer math never writes them,
+    but dropping them would change the state pytree structure mid-run."""
+    if isinstance(state, dict) and "lr_scale" in state:
+        new_state["lr_scale"] = state["lr_scale"]
+    return new_state
+
+
 def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0,
         *, fused: bool = False, interpret: bool | None = None) -> Optimizer:
     """SGD(+momentum).  ``fused=True`` runs the PU stage as one Pallas kernel
@@ -57,27 +81,31 @@ def sgd(lr: float | Callable[[jax.Array], jax.Array], momentum: float = 0.0,
         }
 
     def update(grads, params, state, step):
-        lr_t = lr_fn(step)
+        lr_t = _scaled_lr(lr_fn, step, state)
         if fused:
             from repro.kernels.fused_update import fused_sgd_update
             if momentum == 0.0:
                 new_params = fused_sgd_update(
                     params, grads, lr_t, interpret=interpret)
-                return new_params, {"step": state["step"] + 1}
+                return new_params, _carry_guard(
+                    state, {"step": state["step"] + 1})
             new_params, mu = fused_sgd_update(
                 params, grads, lr_t, momentum=momentum, mu=state["mu"],
                 interpret=interpret)
-            return new_params, {"step": state["step"] + 1, "mu": mu}
+            return new_params, _carry_guard(
+                state, {"step": state["step"] + 1, "mu": mu})
         if momentum == 0.0:
             new_params = jax.tree.map(
                 lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
                 params, grads)
-            return new_params, {"step": state["step"] + 1}
+            return new_params, _carry_guard(
+                state, {"step": state["step"] + 1})
         mu = jax.tree.map(
             lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
         new_params = jax.tree.map(
             lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype), params, mu)
-        return new_params, {"step": state["step"] + 1, "mu": mu}
+        return new_params, _carry_guard(
+            state, {"step": state["step"] + 1, "mu": mu})
 
     return Optimizer("sgd", init, update)
 
@@ -190,7 +218,7 @@ def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
         }
 
     def update(grads, params, state, step):
-        lr_t = lr_fn(step)
+        lr_t = _scaled_lr(lr_fn, step, state)
         t = (state["step"] + 1).astype(jnp.float32)
         if "pq" in state:
             from repro.kernels.fused_update import (
@@ -218,22 +246,24 @@ def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
             views = quant_master_unpack(pq, ps,
                                         [x.shape for x in p_leaves],
                                         [x.dtype for x in p_leaves])
-            return jax.tree.unflatten(treedef, views), new_state
+            return (jax.tree.unflatten(treedef, views),
+                    _carry_guard(state, new_state))
         if "vs" in state:
             from repro.kernels.fused_update import sketched_adamw_update
             new_params, vs, ms = sketched_adamw_update(
                 params, grads, state["vs"], state["ms"], lr_t, t,
                 b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
                 interpret=interpret)
-            return new_params, {"step": state["step"] + 1, "vs": vs,
-                                "ms": ms}
+            return new_params, _carry_guard(
+                state, {"step": state["step"] + 1, "vs": vs, "ms": ms})
         if fused or sketched:
             from repro.kernels.fused_update import fused_adamw_update
             new_params, m, v = fused_adamw_update(
                 params, grads, state["m"], state["v"], lr_t, t,
                 b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
                 interpret=interpret)
-            return new_params, {"step": state["step"] + 1, "m": m, "v": v}
+            return new_params, _carry_guard(
+                state, {"step": state["step"] + 1, "m": m, "v": v})
         bc1 = 1.0 - b1 ** t
         bc2 = 1.0 - b2 ** t
         m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
@@ -248,7 +278,8 @@ def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
             return (p.astype(jnp.float32) - step_).astype(p.dtype)
 
         new_params = jax.tree.map(upd, params, m, v)
-        return new_params, {"step": state["step"] + 1, "m": m, "v": v}
+        return new_params, _carry_guard(
+            state, {"step": state["step"] + 1, "m": m, "v": v})
 
     return Optimizer("adamw", init, update)
 

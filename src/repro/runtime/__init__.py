@@ -1,6 +1,16 @@
 """Distributed runtime: sharding rules, fault tolerance, elastic scaling —
 plus the decode-serving runtime (paged KV cache, continuous-batching
-scheduler, paged decode engine)."""
+scheduler, paged decode engine) and the training guard / chaos-injection
+pair (numerics sentry with skip/backoff/rollback escalation; deterministic
+fault harness that proves it)."""
+from .chaos import (
+    ChaosPlan,
+    GradFault,
+    LogitPoison,
+    StragglerFault,
+    async_writer_crash,
+    corrupt_checkpoint,
+)
 from .compress import (
     compressed_allreduce_mean,
     dequantize_int8,
@@ -8,8 +18,19 @@ from .compress import (
     ef_init,
     quantize_int8,
 )
-from .decode_engine import PagedDecodeEngine, paged_supported
+from .decode_engine import (
+    PagedDecodeEngine,
+    finite_logit_rows,
+    paged_supported,
+)
 from .elastic import replan_for_mesh, reshard_tree, validate_divisibility
+from .guard import (
+    GuardPolicy,
+    TrainGuard,
+    apply_guarded_update,
+    guard_controls,
+    make_guarded_step,
+)
 from .pipeline import (
     PIPELINE_AXES,
     StagePartition,
@@ -48,5 +69,9 @@ __all__ = [
     "ef_compress_tree", "ef_init",
     "PagedKVCache", "pages_for", "max_pages_per_request", "kv_pool_bytes",
     "Request", "Scheduler",
-    "PagedDecodeEngine", "paged_supported",
+    "PagedDecodeEngine", "paged_supported", "finite_logit_rows",
+    "GuardPolicy", "TrainGuard", "guard_controls", "apply_guarded_update",
+    "make_guarded_step",
+    "ChaosPlan", "GradFault", "StragglerFault", "LogitPoison",
+    "corrupt_checkpoint", "async_writer_crash",
 ]

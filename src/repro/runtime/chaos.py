@@ -1,0 +1,229 @@
+"""Deterministic fault-injection harness (chaos testing for the repo's
+fault-tolerance story).
+
+Every fault is a pure function of ``(seed, step)`` — running the same plan
+twice produces byte-identical corruption, so each recovery path in
+``runtime.guard`` / ``checkpoint`` / ``launch.serve`` has a reproducible
+test instead of a flaky one.  Five fault families:
+
+  * **Gradient faults** (:class:`GradFault` + :class:`ChaosPlan`) — NaN,
+    Inf, or a finite 1e28-scale spike added to one gradient element at
+    step ``k`` for ``length`` steps, delivered through the guarded step's
+    ``ctrl["fault_add"]`` scalar (``runtime.guard.guard_controls``), so
+    injection costs nothing when off and nothing is recompiled when on.
+  * **Checkpoint corruption** (:func:`corrupt_checkpoint`) — flip a byte,
+    truncate at a random offset, delete a leaf file, or mangle
+    ``meta.json`` in a written step dir; the offset/leaf choice is drawn
+    from ``np.random.default_rng(seed)``.
+  * **Async-writer kill** (:func:`async_writer_crash`) — patch the
+    checkpoint writer so the background thread dies mid-save, exercising
+    the manager's exception re-raise and the atomicity guarantee.
+  * **Decode-logit poisoning** (:class:`LogitPoison`) — NaN a slot's
+    logits row at a chosen decode step; the serve loop must evict that
+    request, not crash the batch.
+  * **Straggler delay** (:class:`StragglerFault`) — per-step synthetic
+    latency for the EWMA monitors.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import math
+import os
+from typing import Iterable
+
+import numpy as np
+
+__all__ = ["GradFault", "StragglerFault", "ChaosPlan", "LogitPoison",
+           "corrupt_checkpoint", "async_writer_crash", "WriterCrash"]
+
+
+# ---------------------------------------------------------------------------
+# Gradient faults (delivered via guard_controls(fault_add=...)).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GradFault:
+    """Additive gradient fault active on steps [step, step+length)."""
+
+    step: int
+    length: int = 1
+    mode: str = "nan"          # "nan" | "inf" | "spike"
+    magnitude: float = 1e28    # spike amplitude (finite-overflow shape)
+
+    def __post_init__(self):
+        if self.mode not in ("nan", "inf", "spike"):
+            raise ValueError(f"unknown GradFault mode {self.mode!r}")
+
+    @property
+    def value(self) -> float:
+        if self.mode == "nan":
+            return math.nan
+        if self.mode == "inf":
+            return math.inf
+        return self.magnitude
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerFault:
+    """Synthetic per-step latency (seconds) on steps [step, step+length)."""
+
+    step: int
+    length: int = 1
+    seconds: float = 1.0
+
+
+class ChaosPlan:
+    """A fault schedule for one training run: ``fault_add(step)`` feeds
+    ``TrainGuard.controls(fault_add=...)``; ``delay_s(step)`` adds to the
+    observed step latency.  Purely host-side and stateless per query."""
+
+    def __init__(self, grad_faults: Iterable[GradFault] = (),
+                 straggler_faults: Iterable[StragglerFault] = ()):
+        self.grad_faults = tuple(grad_faults)
+        self.straggler_faults = tuple(straggler_faults)
+
+    def fault_add(self, step: int) -> float:
+        for f in self.grad_faults:
+            if f.step <= step < f.step + f.length:
+                return f.value
+        return 0.0
+
+    def delay_s(self, step: int) -> float:
+        return sum(f.seconds for f in self.straggler_faults
+                   if f.step <= step < f.step + f.length)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corruption (power loss / bit rot on the written files).
+# ---------------------------------------------------------------------------
+
+
+def _leaf_files(step_dir: str) -> list[str]:
+    return sorted(f for f in os.listdir(step_dir)
+                  if f.startswith("leaf_") and f.endswith(".npy"))
+
+
+def corrupt_checkpoint(root: str, step: int | None = None, *,
+                       leaf: int | None = None, mode: str = "flip",
+                       seed: int = 0) -> dict:
+    """Deterministically corrupt one written checkpoint step.
+
+    ``mode``: ``"flip"`` xors one byte at a seeded offset, ``"truncate"``
+    cuts the file at a seeded offset (power loss mid-write), ``"delete"``
+    removes the leaf file, ``"meta"`` truncates ``meta.json`` mid-token.
+    ``step`` defaults to the manifest's latest; ``leaf`` to a seeded
+    choice.  Returns what was done (step/path/mode/offset) so tests can
+    assert determinism: same (root layout, seed) -> same report.
+    """
+    from repro.checkpoint.checkpoint import _step_dir, latest_step
+
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = _step_dir(root, step)
+    rng = np.random.default_rng(seed)
+    if mode == "meta":
+        path = os.path.join(d, "meta.json")
+        with open(path) as f:
+            text = f.read()
+        cut = int(rng.integers(1, max(len(text), 2)))
+        with open(path, "w") as f:
+            f.write(text[:cut])
+        return {"step": step, "path": path, "mode": mode, "offset": cut}
+    files = _leaf_files(d)
+    if not files:
+        raise FileNotFoundError(f"no leaf files in {d}")
+    if leaf is None:
+        leaf = int(rng.integers(0, len(files)))
+    path = os.path.join(d, files[leaf])
+    if mode == "delete":
+        os.remove(path)
+        return {"step": step, "path": path, "mode": mode, "offset": None}
+    size = os.path.getsize(path)
+    offset = int(rng.integers(0, max(size - 1, 1)))
+    if mode == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(offset)
+    elif mode == "flip":
+        with open(path, "r+b") as f:
+            f.seek(offset)
+            b = f.read(1)
+            f.seek(offset)
+            f.write(bytes([b[0] ^ 0xFF]))
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return {"step": step, "path": path, "mode": mode, "offset": offset}
+
+
+class WriterCrash(RuntimeError):
+    """The injected async-checkpoint-writer failure."""
+
+
+@contextlib.contextmanager
+def async_writer_crash(after_leaves: int | None = 0):
+    """Kill the checkpoint writer as if the process died mid-save.
+
+    Patches ``checkpoint.checkpoint._write_step`` (``save`` resolves the
+    module global at call time, so in-flight threads started inside the
+    context hit the patch) to write ``after_leaves`` real leaf files into
+    the temp dir and then raise :class:`WriterCrash`.  The step directory
+    must never appear (atomicity) and ``CheckpointManager.wait()`` must
+    re-raise the failure.  ``after_leaves=None`` crashes before writing
+    anything.
+    """
+    from repro.checkpoint import checkpoint as ckpt_mod
+
+    real = ckpt_mod._write_step
+
+    def dying_write_step(root, step, leaves, paths, keep):
+        import tempfile
+        os.makedirs(root, exist_ok=True)
+        tmp = tempfile.mkdtemp(dir=root, prefix=".tmp_save_")
+        try:
+            n = 0 if after_leaves is None else after_leaves
+            for i, a in enumerate(leaves[:n]):
+                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), a)
+            raise WriterCrash(
+                f"injected writer crash at step {step} "
+                f"(wrote {min(n, len(leaves))}/{len(leaves)} leaves)")
+        finally:
+            # mirror the real writer's cleanup-on-failure
+            import shutil
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    ckpt_mod._write_step = dying_write_step
+    try:
+        yield
+    finally:
+        ckpt_mod._write_step = real
+
+
+# ---------------------------------------------------------------------------
+# Decode-logit poisoning (serving).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LogitPoison:
+    """NaN the logits of ``slots`` at decode step ``at_step`` (0-based
+    count of batched decode steps).  ``launch.serve.serve_paged`` accepts
+    any object with this ``poison_logits`` signature as its ``chaos``
+    hook."""
+
+    at_step: int
+    slots: tuple[int, ...] = (0,)
+    value: float = math.nan
+
+    def poison_logits(self, logits: np.ndarray,
+                      decode_step: int) -> np.ndarray:
+        if decode_step != self.at_step:
+            return logits
+        logits = np.array(logits, copy=True)
+        for s in self.slots:
+            if 0 <= s < logits.shape[0]:
+                logits[s, 0] = self.value
+        return logits

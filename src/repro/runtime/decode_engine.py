@@ -32,6 +32,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.tt_linear import TTLinearParams
@@ -39,9 +40,22 @@ from repro.models.layers import embedding_apply, linear_apply, rms_norm, rope
 from repro.models.transformer import forward
 from repro.runtime.kv_cache import PagedKVCache
 
-__all__ = ["PagedDecodeEngine", "paged_supported"]
+__all__ = ["PagedDecodeEngine", "paged_supported", "finite_logit_rows"]
 
 ATTN_KINDS = ("attn", "attn_moe", "attn_local")
+
+
+def finite_logit_rows(logits) -> np.ndarray:
+    """(B, Vp) logits -> (B,) bool mask of rows that are entirely finite.
+
+    The NaN-logit guard for the serve loop: a poisoned request (numerics
+    fault, corrupted KV page) must be EVICTED from its slot, not allowed
+    to crash the whole batch in the sampler or propagate NaN tokens.  One
+    host reduction over the already-fetched logits — the decode step's
+    output is on host anyway for sampling, so this costs no extra sync.
+    """
+    arr = np.asarray(logits)
+    return np.isfinite(arr).all(axis=tuple(range(1, arr.ndim)))
 
 
 def paged_supported(cfg: ModelConfig) -> bool:

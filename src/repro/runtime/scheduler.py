@@ -4,24 +4,35 @@ Pure policy, no model: the serve loop (``launch/serve.py``) owns the
 engine; this module decides WHO runs WHERE and WHEN.  The shape of the
 loop is the standard continuous-batching one:
 
-  1. ``admit()``       — FIFO-admit waiting requests into free decode
+  1. ``expire()``      — retire requests past their deadline (TTL):
+                         waiting ones drop out of the queue, running ones
+                         are timeout-evicted (the loop releases their
+                         engine slot).  Overload degrades to bounded
+                         latency, not unbounded queueing.
+  2. ``admit()``       — FIFO-admit waiting requests into free decode
                          slots, gated by the engine's admission check
                          (enough free KV pages for the prompt).  Each
                          admission is prefilled SOLO before joining the
                          decode batch — prefill/decode disaggregation: a
                          long prompt never stalls the running streams'
                          steady decode cadence inside a mixed batch.
-  2. engine decode     — ONE batched step over every running slot.
-  3. ``observe()``     — per slot: record the sampled token; retire the
+  3. engine decode     — ONE batched step over every running slot.
+  4. ``observe()``     — per slot: record the sampled token; retire the
                          request on EOS or its token budget (``finished``)
                          or evict it when the engine ran out of pages
                          (``evicted``) — each admitted request leaves
                          exactly once (conservation, property-tested).
 
+Intake is load-shed at the door: with ``max_queue`` set, a ``submit``
+that would overflow the waiting queue retires the request immediately as
+``shed`` (``submit`` returns False) — the overload signal callers turn
+into backpressure, instead of a queue that grows until every request
+times out.
+
 Fairness under oversubscription is FIFO by arrival: a request is never
 overtaken by a later one at admission time, and a retired slot is refilled
 from the queue head on the next ``admit()`` — no slot starves while work
-waits (asserted over random arrival/EOS traces in
+waits (asserted over random arrival/EOS/timeout/shed traces in
 ``tests/test_scheduler.py``).
 """
 from __future__ import annotations
@@ -30,10 +41,15 @@ import dataclasses
 from collections import deque
 from typing import Iterable
 
-__all__ = ["Request", "Scheduler"]
+__all__ = ["Request", "Scheduler",
+           "WAITING", "RUNNING", "FINISHED", "EVICTED", "TIMEOUT", "SHED"]
 
 WAITING, RUNNING, FINISHED, EVICTED = ("waiting", "running", "finished",
                                        "evicted")
+TIMEOUT, SHED = "timeout", "shed"
+
+#: States a retired request can carry (each request reaches exactly one).
+TERMINAL_STATES = (FINISHED, EVICTED, TIMEOUT, SHED)
 
 
 @dataclasses.dataclass
@@ -42,6 +58,7 @@ class Request:
     prompt: list[int]
     max_new: int
     eos_id: int | None = None
+    deadline_steps: int | None = None   # per-request TTL; None = scheduler's
     state: str = WAITING
     slot: int | None = None
     out: list[int] = dataclasses.field(default_factory=list)
@@ -51,12 +68,24 @@ class Request:
 
 
 class Scheduler:
-    """Slot assignment + request lifecycle for one serve loop."""
+    """Slot assignment + request lifecycle for one serve loop.
 
-    def __init__(self, max_concurrency: int):
+    ``max_queue`` bounds the waiting queue (None = unbounded);
+    ``default_deadline`` is the TTL in scheduler steps for requests that
+    do not set ``deadline_steps`` themselves (None = no deadline).
+    """
+
+    def __init__(self, max_concurrency: int, *, max_queue: int | None = None,
+                 default_deadline: int | None = None):
         if max_concurrency < 1:
             raise ValueError("max_concurrency must be >= 1")
+        if max_queue is not None and max_queue < 0:
+            raise ValueError("max_queue must be >= 0")
+        if default_deadline is not None and default_deadline < 1:
+            raise ValueError("default_deadline must be >= 1")
         self.max_concurrency = max_concurrency
+        self.max_queue = max_queue
+        self.default_deadline = default_deadline
         self.slots: list[Request | None] = [None] * max_concurrency
         self.waiting: deque[Request] = deque()
         self.retired: list[Request] = []
@@ -64,14 +93,23 @@ class Scheduler:
 
     # -- intake ----------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        req.state = WAITING
+    def submit(self, req: Request) -> bool:
+        """Enqueue ``req``; returns False when the bounded queue is full
+        and the request was shed instead (it still appears in ``retired``
+        with state ``shed`` — conservation holds for shed work too)."""
         req.arrived_step = self.step
+        if self.max_queue is not None and len(self.waiting) >= self.max_queue:
+            req.state = SHED
+            req.done_step = self.step
+            self.retired.append(req)
+            return False
+        req.state = WAITING
         self.waiting.append(req)
+        return True
 
-    def submit_all(self, reqs: Iterable[Request]) -> None:
-        for r in reqs:
-            self.submit(r)
+    def submit_all(self, reqs: Iterable[Request]) -> int:
+        """Submit each; returns how many were accepted (not shed)."""
+        return sum(self.submit(r) for r in reqs)
 
     # -- loop protocol ---------------------------------------------------
 
@@ -80,6 +118,38 @@ class Scheduler:
 
     def running(self) -> list[Request]:
         return [r for r in self.slots if r is not None]
+
+    def _deadline(self, req: Request) -> int | None:
+        return (req.deadline_steps if req.deadline_steps is not None
+                else self.default_deadline)
+
+    def _expired(self, req: Request) -> bool:
+        d = self._deadline(req)
+        return d is not None and self.step - req.arrived_step >= d
+
+    def expire(self) -> list[tuple[Request, int | None]]:
+        """Retire every request past its deadline; call at the top of each
+        loop iteration.  Returns ``(request, freed_slot)`` pairs — the
+        slot is an int for running requests (the caller MUST release the
+        engine's resources for it) and None for ones that timed out while
+        still waiting."""
+        out: list[tuple[Request, int | None]] = []
+        for slot, req in enumerate(self.slots):
+            if req is not None and self._expired(req):
+                self._retire(slot, TIMEOUT)
+                out.append((req, slot))
+        if self.waiting and any(self._expired(r) for r in self.waiting):
+            keep: deque[Request] = deque()
+            for req in self.waiting:
+                if self._expired(req):
+                    req.state = TIMEOUT
+                    req.done_step = self.step
+                    self.retired.append(req)
+                    out.append((req, None))
+                else:
+                    keep.append(req)
+            self.waiting = keep
+        return out
 
     def admit(self, can_admit=None) -> list[Request]:
         """Move queue-head requests into free slots, in arrival order.
@@ -119,11 +189,14 @@ class Scheduler:
         return None
 
     def evict(self, slot: int) -> Request:
-        """Forcibly retire (engine out of pages, shutdown, ...)."""
+        """Forcibly retire (engine out of pages, poisoned logits,
+        shutdown, ...).  Raises ValueError on an empty slot."""
         return self._retire(slot, EVICTED)
 
     def _retire(self, slot: int, state: str) -> Request:
         req = self.slots[slot]
+        if req is None:
+            raise ValueError(f"retire ({state}) on empty slot {slot}")
         self.slots[slot] = None
         req.state = state
         req.slot = None
@@ -137,14 +210,16 @@ class Scheduler:
     # -- reporting -------------------------------------------------------
 
     def report(self) -> dict:
-        fin = [r for r in self.retired if r.state == FINISHED]
-        ev = [r for r in self.retired if r.state == EVICTED]
+        by_state = {s: sum(1 for r in self.retired if r.state == s)
+                    for s in TERMINAL_STATES}
         waits = [r.admitted_step - r.arrived_step for r in self.retired
                  if r.admitted_step is not None]
         return {
             "steps": self.step,
-            "finished": len(fin),
-            "evicted": len(ev),
+            "finished": by_state[FINISHED],
+            "evicted": by_state[EVICTED],
+            "timed_out": by_state[TIMEOUT],
+            "shed": by_state[SHED],
             "tokens_out": sum(len(r.out) for r in self.retired),
             "max_wait_steps": max(waits) if waits else 0,
             "still_waiting": len(self.waiting),

@@ -1,15 +1,27 @@
-"""Checkpointing (atomicity, keep-k, async, elastic restore) + runtime
-(sharding rules, straggler monitor, EF compression)."""
+"""Checkpointing (atomicity, keep-k, async, integrity/CRC, corrupt-step
+fallback) + runtime (sharding rules, straggler monitor, EF compression)."""
 import json
 import os
+import shutil
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
-from repro.checkpoint import CheckpointManager, latest_step, list_steps, restore, save
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    latest_step,
+    list_steps,
+    restore,
+    restore_latest_valid,
+    save,
+    verify_step,
+)
 from repro.configs import SHAPES, get_config
 from repro.core import tt_linear_init
 from repro.launch.steps import make_inputs
@@ -123,6 +135,157 @@ def test_checkpoint_fused_sketched_opt_state_roundtrip(tmp_path):
     for a, b in zip(jax.tree.leaves((params, state)),
                     jax.tree.leaves((rp, rs))):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Integrity: per-leaf CRC, corrupt-step fallback, async-writer failures.
+# ---------------------------------------------------------------------------
+
+
+def test_crc_recorded_and_verified(tmp_path):
+    t = _tree()
+    save(str(tmp_path), 4, t)
+    meta = json.load(open(tmp_path / "step_00000004" / "meta.json"))
+    assert all("crc32" in rec for rec in meta["leaves"])
+    assert verify_step(str(tmp_path), 4)
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate", "delete", "meta"])
+def test_corrupt_step_restore_raises(tmp_path, mode):
+    """Any corruption of the newest step must surface as an exception on
+    direct restore — never as silently wrong weights."""
+    from repro.runtime.chaos import corrupt_checkpoint
+
+    t = _tree()
+    save(str(tmp_path), 4, t)
+    corrupt_checkpoint(str(tmp_path), 4, mode=mode, seed=1)
+    assert not verify_step(str(tmp_path), 4)
+    with pytest.raises((CheckpointCorruptError, ValueError, OSError,
+                        KeyError, EOFError, FileNotFoundError)):
+        restore(str(tmp_path), _template(t))
+
+
+def test_flip_corruption_is_crc_not_shape(tmp_path):
+    """A bit flip inside leaf DATA keeps shape/dtype valid — only the CRC
+    catches it, and it reports as CheckpointCorruptError specifically."""
+    t = _tree()
+    save(str(tmp_path), 4, t)
+    # corrupt a byte well past the .npy header, inside the payload
+    step_dir = tmp_path / "step_00000004"
+    leaf = sorted(f for f in os.listdir(step_dir)
+                  if f.startswith("leaf_"))[0]
+    path = step_dir / leaf
+    data = bytearray(path.read_bytes())
+    data[-1] ^= 0xFF
+    path.write_bytes(bytes(data))
+    with pytest.raises(CheckpointCorruptError):
+        restore(str(tmp_path), _template(t))
+
+
+def test_restore_latest_valid_falls_back_and_repairs(tmp_path):
+    from repro.runtime.chaos import corrupt_checkpoint
+
+    trees = {s: _tree(seed=s) for s in (1, 2, 3)}
+    for s, t in trees.items():
+        save(str(tmp_path), s, t)
+    corrupt_checkpoint(str(tmp_path), 3, mode="truncate", seed=0)
+    got = restore_latest_valid(str(tmp_path), _template(trees[1]))
+    assert got is not None
+    (restored, step), skipped = got
+    assert step == 2 and skipped == [3]
+    for a, b in zip(jax.tree.leaves(trees[2]), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # repaired: the bad step is pruned from manifest AND disk, so plain
+    # restore now works without the fallback
+    assert list_steps(str(tmp_path)) == [1, 2]
+    assert not (tmp_path / "step_00000003").exists()
+    _, step = restore(str(tmp_path), _template(trees[1]))
+    assert step == 2
+
+
+def test_restore_latest_valid_all_corrupt_returns_none(tmp_path):
+    from repro.runtime.chaos import corrupt_checkpoint
+
+    t = _tree()
+    save(str(tmp_path), 1, t)
+    corrupt_checkpoint(str(tmp_path), 1, mode="delete", seed=0)
+    assert restore_latest_valid(str(tmp_path), _template(t)) is None
+    # nothing valid found -> nothing repaired/deleted (wrong-template
+    # safety: a bad template must not nuke good checkpoints)
+    assert list_steps(str(tmp_path)) == [1]
+
+
+def test_async_writer_failure_reraised_by_wait(tmp_path):
+    """Satellite fix: a background-save exception must re-raise from
+    wait(), not vanish into the thread — and the crashed save must leave
+    no step directory (atomicity)."""
+    from repro.runtime.chaos import WriterCrash, async_writer_crash
+
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree()
+    mgr.save_async(1, t)
+    mgr.wait()
+    with async_writer_crash(after_leaves=2):
+        mgr.save_async(2, t)
+        with pytest.raises(RuntimeError, match="step 2"):
+            mgr.wait()
+    assert list_steps(str(tmp_path)) == [1]
+    assert not any(d.startswith(".tmp_save") for d in os.listdir(tmp_path))
+    # the cause chain names the real failure
+    try:
+        with async_writer_crash():
+            mgr.save_async(3, t)
+            mgr.wait()
+    except RuntimeError as e:
+        assert isinstance(e.__cause__, WriterCrash)
+    else:
+        raise AssertionError("wait() swallowed the writer crash")
+    # the manager recovers: a later save works
+    mgr.save_async(4, t)
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_manager_restore_latest_valid_skips_corrupt(tmp_path):
+    from repro.runtime.chaos import corrupt_checkpoint
+
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    for s in (1, 2):
+        mgr.save_async(s, _tree(seed=s))
+    mgr.wait()
+    corrupt_checkpoint(str(tmp_path), 2, mode="flip", seed=5)
+    got = mgr.restore_latest_valid(_template(_tree()))
+    assert got is not None and got[1] == 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       mode=st.sampled_from(["flip", "truncate", "delete", "meta"]),
+       data=st.data())
+def test_property_corruption_never_loses_the_run(seed, mode, data):
+    """PROPERTY: whatever byte of whichever leaf of the newest checkpoint
+    is flipped/truncated/deleted, ``restore_latest_valid`` returns the
+    earlier intact step BIT-identically and never raises.  (Fresh tmpdir
+    per example — pytest's tmp_path is per-test, not per-example.)"""
+    from repro.runtime.chaos import corrupt_checkpoint
+
+    root = tempfile.mkdtemp(prefix="ckpt_prop_")
+    try:
+        good = _tree(seed=7)
+        save(root, 5, good)
+        save(root, 9, _tree(seed=8))
+        n_leaves = len(jax.tree.leaves(good))
+        leaf = (data.draw(st.integers(0, n_leaves - 1))
+                if mode in ("flip", "truncate", "delete") else None)
+        corrupt_checkpoint(root, 9, leaf=leaf, mode=mode, seed=seed)
+        got = restore_latest_valid(root, _template(good))
+        assert got is not None
+        (restored, step), skipped = got
+        assert step == 5 and skipped == [9]
+        for a, b in zip(jax.tree.leaves(good), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
 
 
 # ---------------------------------------------------------------------------

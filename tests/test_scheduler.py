@@ -1,12 +1,17 @@
-"""Continuous-batching scheduler: fairness, conservation, token identity.
+"""Continuous-batching scheduler: fairness, conservation, token identity,
+overload hardening (deadlines + bounded-queue shedding).
 
 Pure-policy invariants (no model):
 
-* conservation — every submitted request retires exactly once, as
-  ``finished`` or ``evicted``, never both, never twice;
+* conservation — every submitted request retires exactly once, in exactly
+  one terminal state (``finished`` / ``evicted`` / ``timeout`` /
+  ``shed``), never both, never twice — shed and timed-out requests are
+  retired too, not silently dropped;
 * FIFO no-starvation — a request is never admitted before an
   earlier-arrived one, and the admission gate stops at the queue head
   (refusing the head never lets a later request jump it);
+* deadlines degrade overload to bounded latency: a request past its TTL
+  is retired by ``expire()`` whether waiting or running;
 * ``report()`` is consistent with the trace.
 
 Plus the serving-correctness oracle: greedy decode of the SAME request is
@@ -20,17 +25,23 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.scheduler import (
+    TERMINAL_STATES,
+    Request,
+    Scheduler,
+)
 
 
 def drive(sched, *, eos_steps=None, gate=None, evict_at=None, max_steps=200):
     """Run the standard serve loop with a fake engine: request r emits
     token ``100 + rid`` each step; ``eos_steps[rid]`` forces EOS via the
-    request's own eos_id after that many tokens."""
+    request's own eos_id after that many tokens.  Mirrors
+    ``launch.serve.serve_paged``: expire at the loop top, then admit."""
     eos_steps = eos_steps or {}
     evict_at = evict_at or {}
     admissions = []
     while sched.has_work() and sched.step < max_steps:
+        sched.expire()
         for req in sched.admit(gate):
             admissions.append(req.rid)
         for req in list(sched.running()):
@@ -50,7 +61,7 @@ def check_conservation(sched, n_submitted):
     assert len(rids) == len(set(rids)), "request retired twice"
     assert len(sched.retired) + len(sched.waiting) == n_submitted
     for r in sched.retired:
-        assert r.state in ("finished", "evicted")
+        assert r.state in TERMINAL_STATES
         assert r.slot is None and r.done_step is not None
 
 
@@ -145,6 +156,117 @@ def test_random_trace_invariants(seed, conc, data):
     rep = sched.report()
     assert rep["finished"] + rep["evicted"] == n
     assert rep["tokens_out"] == sum(len(r.out) for r in sched.retired)
+
+
+def test_evict_empty_slot_raises():
+    """Satellite fix: evicting an empty slot used to die with an opaque
+    AttributeError on ``None.state``; it must be a clear ValueError."""
+    sched = Scheduler(2)
+    with pytest.raises(ValueError, match="empty slot"):
+        sched.evict(0)
+    sched.submit(Request(rid=0, prompt=[1], max_new=3))
+    sched.admit()
+    sched.evict(0)
+    with pytest.raises(ValueError, match="empty slot"):
+        sched.evict(0)  # double-evict is the same programming error
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        Scheduler(0)
+    with pytest.raises(ValueError):
+        Scheduler(1, max_queue=-1)
+    with pytest.raises(ValueError):
+        Scheduler(1, default_deadline=0)
+
+
+def test_deadline_times_out_running_and_waiting():
+    """TTL measured from arrival: with 1 slot, the running request is cut
+    off mid-decode at its deadline and the waiting one never gets in."""
+    sched = Scheduler(1, default_deadline=3)
+    sched.submit_all([Request(rid=0, prompt=[1], max_new=10),
+                      Request(rid=1, prompt=[1], max_new=10)])
+    expired = []
+    while sched.has_work() and sched.step < 20:
+        expired.extend(sched.expire())
+        sched.admit()
+        for req in list(sched.running()):
+            sched.observe(req.slot, 100 + req.rid)
+        sched.end_step()
+    check_conservation(sched, 2)
+    rep = sched.report()
+    assert rep["timed_out"] == 2 and rep["finished"] == 0
+    by_rid = {r.rid: r for r in sched.retired}
+    assert len(by_rid[0].out) == 3          # 3 decode steps, then cut off
+    assert by_rid[1].out == []              # starved past its TTL
+    # the running one handed back its slot for engine-resource release;
+    # the waiting one had no slot to release
+    slots = {req.rid: slot for req, slot in expired}
+    assert slots[0] == 0 and slots[1] is None
+
+
+def test_per_request_deadline_overrides_default():
+    sched = Scheduler(2, default_deadline=100)
+    sched.submit_all([Request(rid=0, prompt=[1], max_new=10,
+                              deadline_steps=2),
+                      Request(rid=1, prompt=[1], max_new=3)])
+    drive(sched)
+    by_rid = {r.rid: r for r in sched.retired}
+    assert by_rid[0].state == "timeout" and len(by_rid[0].out) == 2
+    assert by_rid[1].state == "finished"
+
+
+def test_bounded_queue_sheds_at_submit():
+    sched = Scheduler(1, max_queue=2)
+    reqs = [Request(rid=i, prompt=[1], max_new=1) for i in range(5)]
+    accepted = sched.submit_all(reqs)
+    assert accepted == 2
+    assert [r.state for r in reqs] == ["waiting", "waiting", "shed",
+                                      "shed", "shed"]
+    drive(sched)
+    check_conservation(sched, 5)
+    rep = sched.report()
+    assert rep["shed"] == 3 and rep["finished"] == 2
+    # shed requests are retired (conservation), with no tokens and no slot
+    for r in sched.retired:
+        if r.state == "shed":
+            assert r.out == [] and r.done_step == 0
+    # once the queue drains, the door reopens
+    assert sched.submit(Request(rid=9, prompt=[1], max_new=1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), conc=st.integers(1, 3), data=st.data())
+def test_random_fault_trace_conservation_and_fifo(seed, conc, data):
+    """PROPERTY: under random arrivals, EOS, evictions, deadlines, AND a
+    bounded queue, every request reaches exactly one terminal state, the
+    report adds up, and admission never overtakes arrival order."""
+    n = data.draw(st.integers(1, 12))
+    max_queue = data.draw(st.one_of(st.none(), st.integers(0, 6)))
+    deadline = data.draw(st.one_of(st.none(), st.integers(1, 8)))
+    sched = Scheduler(conc, max_queue=max_queue, default_deadline=deadline)
+    reqs = [Request(
+        rid=i, prompt=[1] * data.draw(st.integers(1, 8)),
+        max_new=data.draw(st.integers(1, 6)), eos_id=9,
+        deadline_steps=(data.draw(st.integers(1, 8))
+                        if data.draw(st.booleans()) else None))
+        for i in range(n)]
+    sched.submit_all(reqs)
+    eos_steps = {i: data.draw(st.integers(1, 6)) for i in range(n)
+                 if data.draw(st.booleans())}
+    evict_at = {i: data.draw(st.integers(0, 3)) for i in range(n)
+                if data.draw(st.booleans())}
+    admissions = drive(sched, eos_steps=eos_steps, evict_at=evict_at)
+    assert admissions == sorted(admissions), "admission overtook arrival"
+    check_conservation(sched, n)
+    assert not sched.has_work()
+    rep = sched.report()
+    assert (rep["finished"] + rep["evicted"] + rep["timed_out"]
+            + rep["shed"]) == n
+    assert rep["tokens_out"] == sum(len(r.out) for r in sched.retired)
+    # FIFO no-starvation under deadlines: every request either ran or
+    # timed out / was shed — none left in limbo
+    assert all(r.state in TERMINAL_STATES for r in sched.retired)
 
 
 # ---------------------------------------------------------------------------
